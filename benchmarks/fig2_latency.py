@@ -1,0 +1,40 @@
+"""Fig. 2 — access latency per tier/instruction class.
+
+Reports (a) real measured latencies on this host (MEMO measure mode) and
+(b) the calibrated tier model's Fig. 2 table, validating the paper's
+headline ratios: CXL flushed-load = 2.2x DDR5-L8, ptr-chase = 3.7x.
+"""
+from __future__ import annotations
+
+from repro.core import memo
+from repro.core.tiers import paper_topology, tpu_v5e_topology
+
+
+def run() -> list[str]:
+    rows = []
+    topo = paper_topology()
+    sim = memo.simulate_latency(topo)
+    by = {r["tier"]: r for r in sim}
+    for r in sim:
+        rows.append(f"fig2/sim/{r['tier']}/ld,{r['ld_ns']/1e3:.4f},ns={r['ld_ns']}")
+        rows.append(f"fig2/sim/{r['tier']}/ptr_chase,"
+                    f"{r['ptr_chase_ns']/1e3:.4f},ns={r['ptr_chase_ns']}")
+    ld_ratio = by["cxl-agilex"]["ld_ns"] / by["ddr5-l8"]["ld_ns"]
+    chase_ratio = by["cxl-agilex"]["ptr_chase_ns"] / by["ddr5-l8"]["ptr_chase_ns"]
+    assert abs(ld_ratio - 2.2) < 0.1, "F1 load ratio drifted"
+    assert abs(chase_ratio - 3.7) < 0.1, "F1 chase ratio drifted"
+    rows.append(f"fig2/claim/ld_ratio,{ld_ratio:.3f},paper=2.2")
+    rows.append(f"fig2/claim/chase_ratio,{chase_ratio:.3f},paper=3.7")
+    # measured pointer-chase on this host (real)
+    rec = memo.measure_pointer_chase(1 << 20, 1 << 14)
+    ns_hop = rec.seconds / (1 << 14) * 1e9
+    rows.append(f"fig2/measured/local_chase,{rec.seconds*1e6:.1f},ns_per_hop={ns_hop:.1f}")
+    # target-hardware prediction (TPU HBM vs host tier)
+    for r in memo.simulate_latency(tpu_v5e_topology()):
+        rows.append(f"fig2/tpu/{r['tier']}/ptr_chase,"
+                    f"{r['ptr_chase_ns']/1e3:.4f},ns={r['ptr_chase_ns']}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

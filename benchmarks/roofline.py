@@ -1,0 +1,139 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+  compute term    = HLO_FLOPs_per_dev / 197 TF/s
+  memory term     = HLO_bytes_per_dev / 819 GB/s
+  collective term = ICI_wire/50 GB/s + DCN_wire/(12.5/8 GB/s per chip)
+  tier term       = host<->HBM staged bytes / 32 GB/s (PCIe) — the paper's
+                    subject, reported alongside the required three
+plus MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (inference), the
+useful-compute ratio, the dominant term, and the roofline fraction
+(model-flops time / dominant-term time).
+
+HLO numbers come from the loop-corrected analyzer (launch/hlo_analysis);
+offload-micro cells aggregate n_micro micro-programs + the paged update.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+DCN_BW_PER_CHIP = 12.5e9 / 8
+PCIE_BW = 32e9
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun", mesh="pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def terms(rec: dict) -> dict | None:
+    if "error" in rec or "skipped" in rec or "hlo" not in rec:
+        return None
+    chips = rec["chips"]
+    mult = rec.get("n_micro", 0) if rec.get("offload_micro_step") else 1
+    mult = max(mult, 1)
+    flops = rec["hlo"]["flops_per_device"] * mult
+    hbm = rec["hlo"]["hbm_bytes_per_device"] * mult
+    ici = rec["hlo"]["ici_bytes_per_device"] * mult
+    dcn = rec["hlo"]["dcn_bytes_per_device"] * mult
+    tier_bytes = rec.get("offload_traffic_bytes_per_step_per_chip", 0.0)
+    if rec.get("offload_micro_step"):
+        # bf16 grads stream host-ward every micro step
+        tier_bytes += rec["params"] * 2 * mult / chips
+    t = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm / HBM_BW,
+        "collective_s": ici / ICI_BW + dcn / DCN_BW_PER_CHIP,
+        "tier_s": tier_bytes / PCIE_BW,
+    }
+    model_flops_dev = rec["model_flops_total"] / chips
+    t["model_compute_s"] = model_flops_dev / PEAK_FLOPS
+    t["useful_ratio"] = model_flops_dev / flops if flops else 0.0
+    dom = max(("compute_s", "memory_s", "collective_s", "tier_s"),
+              key=lambda k: t[k])
+    t["dominant"] = dom.replace("_s", "")
+    bound = max(t["compute_s"], t["memory_s"], t["collective_s"], t["tier_s"])
+    t["roofline_fraction"] = t["model_compute_s"] / bound if bound else 0.0
+    return t
+
+
+_LEVERS = {
+    "compute": ("cut remat recompute / pad-free attention heads "
+                "(raise useful-flops ratio toward 1)"),
+    "memory": ("fuse/flash the attention + larger operand reuse per HBM "
+               "pass (raise arithmetic intensity)"),
+    "collective": ("reshard to cut all-gathers (overlap grad sync with "
+                   "backward; int8-compress the DCN hop)"),
+    "tier": ("raise BulkMover batch size / overlap paging with compute; "
+             "drop master-weight precision to bf16"),
+}
+
+
+def table(recs) -> str:
+    rows = []
+    header = ("| cell | dom | compute s | memory s | coll s | tier s | "
+              "useful | roofline frac |")
+    sep = "|" + "---|" * 8
+    for rec in recs:
+        name = f"{rec['arch']} x {rec['shape']}"
+        if "skipped" in rec:
+            rows.append(f"| {name} | SKIP ({rec['skipped'][:40]}...) "
+                        f"| | | | | | |")
+            continue
+        t = terms(rec)
+        if t is None:
+            rows.append(f"| {name} | ERROR | | | | | | |")
+            continue
+        rows.append(
+            f"| {name} | **{t['dominant']}** | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['tier_s']:.4f} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.2%} |")
+    return "\n".join([header, sep] + rows)
+
+
+def csv_rows(recs) -> list[str]:
+    out = []
+    for rec in recs:
+        if "skipped" in rec or "error" in rec:
+            continue
+        t = terms(rec)
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"],
+                     t["tier_s"])
+        out.append(
+            f"roofline/{rec['arch']}/{rec['shape']},{step_s*1e6:.1f},"
+            f"dom={t['dominant']};frac={t['roofline_fraction']:.3f};"
+            f"useful={t['useful_ratio']:.2f}")
+    return out
+
+
+def main():
+    recs = load_records()
+    print(table(recs))
+    print()
+    for row in csv_rows(recs):
+        print(row)
+    # machine-readable dump for EXPERIMENTS.md tooling
+    out = []
+    for rec in recs:
+        e = {"arch": rec.get("arch"), "shape": rec.get("shape")}
+        if "skipped" in rec:
+            e["skipped"] = rec["skipped"]
+        else:
+            e.update(terms(rec) or {"error": rec.get("error", "?")})
+        out.append(e)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.json", "w") as f:
+        json.dump(out, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

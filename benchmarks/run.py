@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = 0 for purely
+derived/simulated rows).  ``--skip-roofline`` when no dry-run artifacts
+exist yet.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_latency, fig3_seq_bw, fig4_dsa, fig5_random,
+                            fig6_redis, fig8_dlrm, fig10_dsb)
+    figs = {
+        "fig2": fig2_latency.run,
+        "fig3": fig3_seq_bw.run,
+        "fig4": fig4_dsa.run,
+        "fig5": fig5_random.run,
+        "fig6": fig6_redis.run,
+        "fig8": fig8_dlrm.run,
+        "fig10": fig10_dsb.run,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in figs.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row)
+            print(f"{name}/claims,0,ALL-VALIDATED ({time.time()-t0:.1f}s)")
+        except AssertionError as e:
+            failures += 1
+            print(f"{name}/claims,0,CLAIM-FAILED: {e}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/claims,0,ERROR")
+    if not args.skip_roofline and not args.only:
+        try:
+            from benchmarks import roofline
+            recs = roofline.load_records()
+            if recs:
+                for row in roofline.csv_rows(recs):
+                    print(row)
+            else:
+                print("roofline,0,NO-DRYRUN-ARTIFACTS (run repro.launch.dryrun)")
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""DLRM embedding reduction (paper §5.2 / MERCI) over a tiered table:
+sweeps the DRAM:CXL interleave ratio and reports modeled throughput +
+real kernel wall time (reproduces the Fig. 8/9 shape).
+
+Run:  PYTHONPATH=src python examples/dlrm_embedding.py
+"""
+from benchmarks import fig8_dlrm
+
+for row in fig8_dlrm.run():
+    print(row)

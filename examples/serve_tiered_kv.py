@@ -1,0 +1,14 @@
+"""Serve a small LM with the KV cache page-interleaved across memory
+tiers (the paper's Redis experiment, §5.1, as a serving engine demo).
+
+Run:  PYTHONPATH=src python examples/serve_tiered_kv.py
+"""
+from repro.launch import serve as serve_mod
+
+for frac in (0.0, 0.5, 1.0):
+    print(f"\n== slow-tier fraction {frac:.0%} ==")
+    serve_mod.main([
+        "--arch", "internvl2-2b", "--tiny", "--requests", "8",
+        "--max-batch", "4", "--max-len", "64", "--new-tokens", "8",
+        "--slow-fraction", str(frac), "--page-t", "8",
+    ])

@@ -1,0 +1,36 @@
+"""TierMesh core — the paper's contribution as a composable library.
+
+Demystifying CXL Memory (Sun et al., MICRO'23), adapted to TPU pods:
+tier characterization (tiers/perfmodel/memo), placement policies
+(policy/planner/classifier), page interleaving (interleave), bulk
+movement (mover), and capacity accounting (ledger).
+"""
+from repro.core.classifier import AccessProfile, Boundedness, classify
+from repro.core.interleave import InterleavedTensor
+from repro.core.ledger import CapacityError, TierLedger
+from repro.core.mover import BulkMover, Descriptor, double_buffer
+from repro.core.planner import BufferReq, Decision, Plan, plan
+from repro.core.policy import BufferClass, MemPolicy, PolicyKind
+from repro.core.tiers import (
+    CXL_AGILEX,
+    DDR5_L8,
+    DDR5_R1,
+    HBM_V5E,
+    HOST_V5E,
+    OpClass,
+    TierSpec,
+    TierTopology,
+    paper_topology,
+    tpu_v5e_topology,
+)
+
+__all__ = [
+    "AccessProfile", "Boundedness", "classify",
+    "InterleavedTensor", "CapacityError", "TierLedger",
+    "BulkMover", "Descriptor", "double_buffer",
+    "BufferReq", "Decision", "Plan", "plan",
+    "BufferClass", "MemPolicy", "PolicyKind",
+    "OpClass", "TierSpec", "TierTopology",
+    "CXL_AGILEX", "DDR5_L8", "DDR5_R1", "HBM_V5E", "HOST_V5E",
+    "paper_topology", "tpu_v5e_topology",
+]

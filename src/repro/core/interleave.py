@@ -1,0 +1,250 @@
+"""Page-granular N:M tier interleaving of one logical array.
+
+``InterleavedTensor`` is the framework object behind the paper's
+weighted-interleave experiments: a logical ``(rows, *feature)`` array
+whose pages are distributed across a fast and a slow tier according to a
+:class:`~repro.core.policy.MemPolicy`.  Reads and writes are routed to
+the owning tier; embedding-bag reduction (the paper's DLRM §5.2
+workload) runs a reduce on each part and sums — numerically identical to
+the un-tiered reduce (see tests/property tests).
+
+On the CPU dry-run backend both parts are plain device arrays and the
+tier split is accounting (ledger + telemetry + perfmodel); on a TPU
+runtime the slow part carries a ``pinned_host`` sharding (backend
+``memory_kind``) or is staged by the BulkMover (backend ``staged``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ledger import TierLedger
+from repro.core.policy import MemPolicy
+from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class InterleavedTensor:
+    """A logical array paged across (fast, slow) tiers along axis 0."""
+
+    fast: jax.Array  # (n_fast_pages * page_rows, *feature)
+    slow: jax.Array  # (n_slow_pages * page_rows, *feature)
+    page_tier: jax.Array  # (n_pages,) int8: 0 = fast, 1 = slow
+    page_local: jax.Array  # (n_pages,) int32: page index within its tier
+    page_rows: int
+    rows: int  # logical row count (may be < n_pages * page_rows)
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.fast, self.slow, self.page_tier, self.page_local)
+        aux = (self.page_rows, self.rows)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fast, slow, page_tier, page_local = children
+        page_rows, rows = aux
+        return cls(fast, slow, page_tier, page_local, page_rows, rows)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_array(
+        cls,
+        array: jax.Array,
+        policy: MemPolicy,
+        page_rows: int = 256,
+        *,
+        ledger: Optional[TierLedger] = None,
+        name: str = "interleaved",
+    ) -> "InterleavedTensor":
+        rows = array.shape[0]
+        n_pages = max(1, math.ceil(rows / page_rows))
+        if hasattr(policy, "page_is_slow"):
+            assign = policy.page_is_slow(n_pages).astype(np.int8)
+        else:  # _ExplicitAssignment adapter
+            assign = policy.assign_pages(n_pages)
+        page_local = np.zeros(n_pages, dtype=np.int32)
+        counters = [0, 0]
+        for p in range(n_pages):
+            t = int(assign[p])
+            t = 1 if t >= 1 else 0  # >2 tiers collapse onto slow for storage
+            page_local[p] = counters[t]
+            counters[t] += 1
+        pad_rows = n_pages * page_rows - rows
+        feature = array.shape[1:]
+        padded = jnp.concatenate(
+            [array, jnp.zeros((pad_rows,) + feature, array.dtype)], axis=0
+        ) if pad_rows else array
+        paged = padded.reshape((n_pages, page_rows) + feature)
+        assign01 = np.minimum(assign, 1)
+        fast_ids = np.nonzero(assign01 == 0)[0]
+        slow_ids = np.nonzero(assign01 == 1)[0]
+        def take_pages(ids):
+            if len(ids) == 0:
+                return jnp.zeros((0, page_rows) + feature, array.dtype)
+            return paged[np.asarray(ids)]
+        fast = take_pages(fast_ids).reshape((-1,) + feature)
+        slow = take_pages(slow_ids).reshape((-1,) + feature)
+        out = cls(
+            fast=fast,
+            slow=slow,
+            page_tier=jnp.asarray(assign01, jnp.int8),
+            page_local=jnp.asarray(page_local, jnp.int32),
+            page_rows=page_rows,
+            rows=rows,
+        )
+        if ledger is not None:
+            fast_tier = policy.tiers[0]
+            slow_tier = policy.tiers[1] if len(policy.tiers) > 1 else policy.tiers[0]
+            ledger.register(name, fast_tier, out.fast.size * out.fast.dtype.itemsize)
+            if out.slow.size:
+                ledger.register(name, slow_tier, out.slow.size * out.slow.dtype.itemsize)
+        return out
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return self.page_tier.shape[0]
+
+    @property
+    def row_bytes(self) -> int:
+        feat = int(np.prod(self.fast.shape[1:])) if self.fast.ndim > 1 else 1
+        return feat * self.fast.dtype.itemsize
+
+    def slow_fraction(self) -> float:
+        return float(np.asarray(self.page_tier, np.float32).mean())
+
+    # -- addressing ----------------------------------------------------------
+    def _route(self, idx: jax.Array):
+        """row idx -> (is_slow mask, local flat row index in owning part)."""
+        page = idx // self.page_rows
+        offset = idx % self.page_rows
+        tier = jnp.take(self.page_tier, page, mode="clip")
+        local_page = jnp.take(self.page_local, page, mode="clip")
+        local = local_page * self.page_rows + offset
+        return tier.astype(bool), local
+
+    # -- access --------------------------------------------------------------
+    def gather_rows(self, idx: jax.Array) -> jax.Array:
+        """rows[idx] — routed gather across both tiers."""
+        is_slow, local = self._route(idx)
+        from_fast = jnp.take(self.fast, local, axis=0, mode="clip")
+        if self.slow.shape[0] == 0:
+            return from_fast
+        from_slow = jnp.take(self.slow, local, axis=0, mode="clip")
+        mask = is_slow.reshape(is_slow.shape + (1,) * (from_fast.ndim - is_slow.ndim))
+        return jnp.where(mask, from_slow, from_fast)
+
+    def update_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
+        """Functional scatter-set of ``values`` at row ``idx``."""
+        is_slow, local = self._route(idx)
+        # Out-of-part indices are pushed out of bounds and dropped.
+        fast_idx = jnp.where(is_slow, self.fast.shape[0], local)
+        slow_idx = jnp.where(is_slow, local, self.slow.shape[0])
+        fast = self.fast.at[fast_idx].set(values, mode="drop")
+        slow = (
+            self.slow.at[slow_idx].set(values, mode="drop")
+            if self.slow.shape[0]
+            else self.slow
+        )
+        return dataclasses.replace(self, fast=fast, slow=slow)
+
+    def add_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
+        is_slow, local = self._route(idx)
+        fast_idx = jnp.where(is_slow, self.fast.shape[0], local)
+        slow_idx = jnp.where(is_slow, local, self.slow.shape[0])
+        fast = self.fast.at[fast_idx].add(values, mode="drop")
+        slow = (
+            self.slow.at[slow_idx].add(values, mode="drop")
+            if self.slow.shape[0]
+            else self.slow
+        )
+        return dataclasses.replace(self, fast=fast, slow=slow)
+
+    def bag_reduce(
+        self,
+        indices: jax.Array,  # (batch, bag)
+        weights: Optional[jax.Array] = None,  # (batch, bag)
+        reduce_fn: Optional[Callable] = None,
+    ) -> jax.Array:
+        """Embedding-bag sum over both tiers (DLRM §5.2 reduction).
+
+        ``reduce_fn(table, indices, weights) -> (batch, feature)`` lets the
+        Pallas ``embedding_reduce`` kernel slot in; default is pure jnp.
+        Rows owned by the other tier contribute weight 0 to each part, so
+        fast-part + slow-part equals the un-tiered reduction exactly.
+        """
+        if weights is None:
+            weights = jnp.ones(indices.shape, self.fast.dtype)
+        is_slow, local = self._route(indices)
+        w_fast = jnp.where(is_slow, 0, weights).astype(self.fast.dtype)
+        local_fast = jnp.minimum(local, max(self.fast.shape[0] - 1, 0))
+        if reduce_fn is None:
+            reduce_fn = _jnp_bag_reduce
+        out = reduce_fn(self.fast, local_fast, w_fast)
+        if self.slow.shape[0]:
+            w_slow = jnp.where(is_slow, weights, 0).astype(self.slow.dtype)
+            local_slow = jnp.minimum(local, self.slow.shape[0] - 1)
+            out = out + reduce_fn(self.slow, local_slow, w_slow)
+        return out
+
+    # -- migration (TPP-style page moves; used by elastic re-planning) -------
+    def migrate_pages(self, page_ids: np.ndarray, to_slow: bool) -> "InterleavedTensor":
+        """Move whole pages between tiers (host-side; not jit-traceable)."""
+        dense = np.asarray(self.to_array())
+        tier = np.asarray(self.page_tier).copy()
+        tier[np.asarray(page_ids)] = 1 if to_slow else 0
+        policy_like = _ExplicitAssignment(tier)
+        return InterleavedTensor.from_array(
+            jnp.asarray(dense), policy_like, self.page_rows
+        )
+
+    def to_array(self) -> jax.Array:
+        """Materialize the logical array (tests / checkpointing)."""
+        idx = jnp.arange(self.rows)
+        return self.gather_rows(idx)
+
+    # -- accounting -----------------------------------------------------------
+    def traffic_bytes(self, idx: np.ndarray) -> dict[str, int]:
+        """Bytes touched per tier for a concrete index batch (host-side)."""
+        page = np.asarray(idx).ravel() // self.page_rows
+        tier = np.asarray(self.page_tier)[np.minimum(page, self.n_pages - 1)]
+        slow_rows = int((tier == 1).sum())
+        fast_rows = int(tier.size - slow_rows)
+        return {
+            "fast": fast_rows * self.row_bytes,
+            "slow": slow_rows * self.row_bytes,
+        }
+
+    def record_gather(self, idx: np.ndarray, seconds: float,
+                      telemetry: Telemetry = GLOBAL_TELEMETRY) -> None:
+        t = self.traffic_bytes(idx)
+        telemetry.record_move("fast", "engine", t["fast"], seconds)
+        telemetry.record_move("slow", "engine", t["slow"], seconds)
+
+
+class _ExplicitAssignment:
+    """Adapter: a fixed page->tier map with the MemPolicy interface."""
+
+    tiers = ("fast", "slow")
+
+    def __init__(self, assignment: np.ndarray):
+        self._assignment = assignment.astype(np.int8)
+
+    def assign_pages(self, n_pages: int) -> np.ndarray:
+        if n_pages != len(self._assignment):
+            raise ValueError("page count mismatch")
+        return self._assignment
+
+
+def _jnp_bag_reduce(table: jax.Array, indices: jax.Array, weights: jax.Array):
+    """(batch, bag) weighted gather-sum reference; oracle for the kernel."""
+    gathered = jnp.take(table, indices, axis=0)  # (batch, bag, feature)
+    return jnp.einsum("bkf,bk->bf", gathered, weights.astype(table.dtype))

@@ -1,0 +1,238 @@
+"""MEMO — the paper's microbenchmark, re-expressed in JAX.
+
+Two modes:
+
+* **measure** — real timings on the current backend (this container's
+  CPU; on a TPU runtime, HBM): sequential load/store/copy bandwidth vs
+  lane count, random block access vs block size, and dependent
+  pointer-chase latency.  These validate the *shape* of the perfmodel
+  curves and give the kernel-level numbers in EXPERIMENTS.md.
+* **simulate** — per-tier tables from the calibrated perfmodel
+  (``repro.core.perfmodel``), reproducing the paper's Figs. 2/3/4/5 for
+  the paper testbed and predicting the TPU v5e tier pair.
+
+Lanes stand in for the paper's threads: MEMO shards the access across
+``lanes`` independent slices inside one fused program, which is how
+"concurrent streams" materialize on an XLA backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.tiers import OpClass, TierSpec, TierTopology
+
+
+@dataclasses.dataclass
+class Record:
+    name: str
+    tier: str
+    op: str
+    lanes: int
+    block_bytes: int
+    seconds: float
+    bytes_moved: int
+
+    @property
+    def gbps(self) -> float:
+        return self.bytes_moved / self.seconds / 1e9 if self.seconds else 0.0
+
+    def row(self) -> dict:
+        return {
+            "name": self.name, "tier": self.tier, "op": self.op,
+            "lanes": self.lanes, "block_bytes": self.block_bytes,
+            "seconds": self.seconds, "GBps": round(self.gbps, 3),
+        }
+
+
+def _time(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# --------------------------------------------------------------------------
+# Real measurements (current backend)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("lanes",))
+def _seq_load(x: jax.Array, lanes: int):
+    xs = x.reshape(lanes, -1)
+    return jnp.sum(xs, axis=1)
+
+
+@partial(jax.jit, static_argnames=("lanes",), donate_argnums=0)
+def _seq_store(x: jax.Array, lanes: int, v: jax.Array):
+    xs = x.reshape(lanes, -1)
+    return (xs * 0 + v[:, None]).reshape(x.shape)
+
+
+@partial(jax.jit, donate_argnums=1)
+def _seq_copy(src: jax.Array, dst: jax.Array):
+    del dst
+    return src + 0  # forced materialization = one read + one write stream
+
+
+@partial(jax.jit, static_argnames=("block_elems",))
+def _random_block_load(x: jax.Array, starts: jax.Array, block_elems: int):
+    def body(acc, s):
+        blk = jax.lax.dynamic_slice(x, (s,), (block_elems,))
+        return acc + jnp.sum(blk), None
+    acc, _ = jax.lax.scan(body, jnp.zeros((), x.dtype), starts)
+    return acc
+
+
+@jax.jit
+def _pointer_chase(perm: jax.Array, steps: jax.Array):
+    def body(i, p):
+        return perm[p]
+    return jax.lax.fori_loop(0, steps, body, jnp.zeros((), jnp.int32))
+
+
+def measure_sequential(
+    nbytes: int = 1 << 26, lanes_list: Sequence[int] = (1, 2, 4, 8)
+) -> list[Record]:
+    out = []
+    n = nbytes // 4
+    for lanes in lanes_list:
+        nn = n - n % lanes
+        x = jnp.arange(nn, dtype=jnp.float32)
+        s = _time(_seq_load, x, lanes)
+        out.append(Record("seq", "local", "load", lanes, nbytes, s, nn * 4))
+        v = jnp.arange(lanes, dtype=jnp.float32)
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(_seq_store(x, lanes, v))
+        s = time.perf_counter() - t0
+        out.append(Record("seq", "local", "store", lanes, nbytes, s, nn * 4))
+        del y
+    src = jnp.arange(n, dtype=jnp.float32)
+    dst = jnp.zeros(n, dtype=jnp.float32)
+    t0 = time.perf_counter()
+    jax.block_until_ready(_seq_copy(src, dst))
+    s = time.perf_counter() - t0
+    out.append(Record("seq", "local", "copy", 1, nbytes, s, 2 * n * 4))
+    return out
+
+
+def measure_random_block(
+    table_bytes: int = 1 << 26,
+    block_bytes_list: Sequence[int] = (1024, 4096, 16384, 65536),
+    n_blocks: int = 512,
+    seed: int = 0,
+) -> list[Record]:
+    out = []
+    n = table_bytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    for bb in block_bytes_list:
+        be = bb // 4
+        starts = jnp.asarray(
+            rng.integers(0, n - be, size=n_blocks, dtype=np.int64), jnp.int32
+        )
+        s = _time(_random_block_load, x, starts, be)
+        out.append(Record("rand", "local", "load", 1, bb, s, n_blocks * bb))
+    return out
+
+
+def measure_pointer_chase(
+    n_elems: int = 1 << 22, steps: int = 1 << 16, seed: int = 0
+) -> Record:
+    rng = np.random.default_rng(seed)
+    perm = jnp.asarray(rng.permutation(n_elems).astype(np.int32))
+    s = _time(_pointer_chase, perm, jnp.int32(steps))
+    return Record("ptr-chase", "local", "load", 1, 4, s, steps * 4)
+
+
+# --------------------------------------------------------------------------
+# Simulated per-tier tables (calibrated perfmodel)
+# --------------------------------------------------------------------------
+def simulate_latency(topology: TierTopology) -> list[dict]:
+    """Fig. 2 analogue: per-tier latency by instruction class."""
+    rows = []
+    for t in topology.tiers:
+        rows.append({
+            "tier": t.name,
+            "ld_ns": t.load_latency_ns,
+            "st_wb_ns": t.load_latency_ns * t.rfo_traffic_multiplier,
+            "nt_st_ns": t.load_latency_ns * 0.75,
+            "ptr_chase_ns": t.chase_latency_ns,
+        })
+    return rows
+
+
+def simulate_seq_bw(
+    topology: TierTopology, lanes: Sequence[int] = (1, 2, 4, 8, 12, 16, 24, 32)
+) -> list[dict]:
+    """Fig. 3 analogue: sequential bandwidth vs stream count per tier/op."""
+    rows = []
+    for t in topology.tiers:
+        for op in (OpClass.LOAD, OpClass.STORE, OpClass.NT_STORE):
+            for L in lanes:
+                rows.append({
+                    "tier": t.name, "op": op.value, "lanes": L,
+                    "GBps": perfmodel.stream_bandwidth(t, op, L) / 1e9,
+                })
+    return rows
+
+
+def simulate_random_bw(
+    topology: TierTopology,
+    blocks: Sequence[int] = (1024, 4096, 16384, 65536, 262144),
+    lanes: Sequence[int] = (1, 2, 4, 8, 16),
+) -> list[dict]:
+    """Fig. 5 analogue."""
+    rows = []
+    for t in topology.tiers:
+        for op in (OpClass.LOAD, OpClass.STORE, OpClass.NT_STORE):
+            for bb in blocks:
+                for L in lanes:
+                    rows.append({
+                        "tier": t.name, "op": op.value, "block": bb, "lanes": L,
+                        "GBps": perfmodel.random_block_bandwidth(t, op, bb, L) / 1e9,
+                    })
+    return rows
+
+
+def simulate_movement(
+    topology: TierTopology,
+    nbytes: int = 1 << 28,
+    page_bytes: int = 4 << 10,
+    batches: Sequence[int] = (1, 16, 128),
+    engine_streams: int = 4,
+) -> list[dict]:
+    """Fig. 4b analogue: engine-offloaded bulk movement D2C/C2D/C2C/D2D.
+
+    Tiered-memory systems move data at page granularity (4 KiB/2 MiB —
+    paper §6); at 4 KiB the per-descriptor offload latency dominates and
+    batching/asynchrony show exactly the Fig. 4b ordering.
+    """
+    fast, slow = topology.fast, topology.slow or topology.fast
+    routes = {
+        "D2D": (fast, fast), "D2C": (fast, slow),
+        "C2D": (slow, fast), "C2C": (slow, slow),
+    }
+    n_desc = nbytes // page_bytes
+    rows = []
+    for route, (src, dst) in routes.items():
+        for sync in (True, False):
+            for b in batches:
+                c = perfmodel.bulk_move_cost(
+                    src, dst, nbytes, n_descriptors=n_desc, batch_size=b,
+                    asynchronous=not sync, n_streams=engine_streams,
+                )
+                rows.append({
+                    "route": route, "mode": "sync" if sync else "async",
+                    "batch": b, "GBps": nbytes / c.seconds / 1e9,
+                })
+    return rows

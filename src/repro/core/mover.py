@@ -1,0 +1,244 @@
+"""BulkMover — the Intel-DSA analogue: centralized, batched, async movement.
+
+The paper's guidelines (§6) for bulk data movement between tiers:
+  * use cache-bypassing paths (nt-store / movdir64B) — here the Pallas
+    ``stream_copy`` kernel or XLA donated copies;
+  * batch descriptors to amortize offload latency (Fig. 4b: batch 16/128);
+  * submit asynchronously and overlap with compute;
+  * limit concurrent writers to the slow tier (controller interference);
+  * centralize movement in one daemon instead of per-application access.
+
+``BulkMover`` is that daemon.  It executes real copies on the current
+backend, records telemetry, and (because this box has one memory) also
+reports *modeled* seconds from the calibrated perfmodel so benchmarks
+can reproduce the paper's tier behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perfmodel
+from repro.core.tiers import OpClass, TierSpec, TierTopology
+from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
+
+
+@dataclasses.dataclass
+class Descriptor:
+    """One movement request (DSA work descriptor analogue)."""
+
+    src_tier: str
+    dst_tier: str
+    payload: Any  # jax/numpy array (or pytree) to move
+    op: OpClass = OpClass.NT_STORE  # cache-bypass by default (guideline 1)
+    on_done: Optional[Callable[[Any], None]] = None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(self.payload)
+        )
+
+
+@dataclasses.dataclass
+class Completion:
+    descriptor: Descriptor
+    result: Any
+    wall_seconds: float
+    modeled_seconds: float
+
+
+def _execute_copy(payload):
+    """Materialize a fresh copy on the current backend (the actual move)."""
+    out = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), payload)
+    jax.block_until_ready(out)
+    return out
+
+
+class BulkMover:
+    """Centralized movement engine with batching, asynchrony, writer limits."""
+
+    def __init__(
+        self,
+        topology: TierTopology,
+        *,
+        batch_size: int = 16,
+        asynchronous: bool = True,
+        max_writers: int = 2,
+        max_readers: int = 8,
+        telemetry: Telemetry = GLOBAL_TELEMETRY,
+        execute: Callable[[Any], Any] = _execute_copy,
+    ):
+        if batch_size < 1:
+            raise ValueError("batch_size >= 1")
+        self.topology = topology
+        self.batch_size = batch_size
+        self.asynchronous = asynchronous
+        self.max_writers = max_writers
+        self.max_readers = max_readers
+        self.telemetry = telemetry
+        self._execute = execute
+        self._write_sem = threading.Semaphore(max_writers)
+        self._read_sem = threading.Semaphore(max_readers)
+        self._queue: "queue.Queue[Optional[list[Descriptor]]]" = queue.Queue()
+        self._completions: "queue.Queue[Completion]" = queue.Queue()
+        self._pending = 0
+        self._pending_lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        if asynchronous:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # -- cost modeling -------------------------------------------------------
+    def _tier(self, name: str) -> TierSpec:
+        return self.topology.by_name(name)
+
+    def modeled_cost(self, descs: Sequence[Descriptor]) -> float:
+        """Modeled seconds for a descriptor set (DSA model): descriptors
+        grouped per route; batching amortizes submission overhead."""
+        routes: dict[tuple, list[Descriptor]] = {}
+        for d in descs:
+            routes.setdefault((d.src_tier, d.dst_tier, d.op), []).append(d)
+        total = 0.0
+        for (src, dst, op), group in routes.items():
+            cost = perfmodel.bulk_move_cost(
+                self._tier(src), self._tier(dst),
+                sum(d.nbytes for d in group),
+                n_descriptors=len(group),
+                batch_size=self.batch_size,
+                asynchronous=self.asynchronous,
+                op=op,
+                n_streams=min(self.max_writers,
+                              self._tier(dst).store_peak_streams),
+            )
+            total += cost.seconds
+        return total
+
+    # -- execution -----------------------------------------------------------
+    def _run_batch(self, batch: list[Descriptor]) -> list[Completion]:
+        out = []
+        modeled = self.modeled_cost(batch)
+        for d in batch:
+            writes_slow = self._tier(d.dst_tier).link_bw is not None
+            sem = self._write_sem if writes_slow else self._read_sem
+            with _acquired(sem):
+                t0 = time.perf_counter()
+                result = self._execute(d.payload)
+                dt = time.perf_counter() - t0
+            self.telemetry.record_move(
+                d.src_tier, d.dst_tier, d.nbytes, dt, descriptors=1, batches=0
+            )
+            comp = Completion(d, result, dt, modeled / len(batch))
+            if d.on_done is not None:
+                d.on_done(result)
+            out.append(comp)
+        self.telemetry.record_move(
+            batch[0].src_tier, batch[0].dst_tier, 0, 0.0, descriptors=0, batches=1
+        )
+        return out
+
+    def _drain(self):
+        while True:
+            batch = self._queue.get()
+            if batch is None:
+                return
+            for comp in self._run_batch(batch):
+                self._completions.put(comp)
+            with self._pending_lock:
+                self._pending -= len(batch)
+
+    def submit(self, descs: Sequence[Descriptor]) -> list[Completion]:
+        """Submit descriptors; sync mode returns completions immediately."""
+        descs = list(descs)
+        if not descs:
+            return []
+        if not self.asynchronous:
+            out = []
+            for i in range(0, len(descs), self.batch_size):
+                out.extend(self._run_batch(descs[i : i + self.batch_size]))
+            return out
+        with self._pending_lock:
+            self._pending += len(descs)
+        for i in range(0, len(descs), self.batch_size):
+            self._queue.put(descs[i : i + self.batch_size])
+        return []
+
+    def poll(self) -> list[Completion]:
+        out = []
+        while True:
+            try:
+                out.append(self._completions.get_nowait())
+            except queue.Empty:
+                return out
+
+    def wait_all(self, timeout: float = 60.0) -> list[Completion]:
+        """Fence: block until every submitted descriptor completed."""
+        deadline = time.monotonic() + timeout
+        out = []
+        while True:
+            out.extend(self.poll())
+            with self._pending_lock:
+                if self._pending == 0 and self._queue.empty():
+                    out.extend(self.poll())
+                    return out
+            if time.monotonic() > deadline:
+                raise TimeoutError("BulkMover.wait_all timed out")
+            time.sleep(0.0005)
+
+    def close(self):
+        if self._worker is not None:
+            self._queue.put(None)
+            self._worker.join(timeout=5)
+            self._worker = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class _acquired:
+    def __init__(self, sem: threading.Semaphore):
+        self.sem = sem
+
+    def __enter__(self):
+        self.sem.acquire()
+
+    def __exit__(self, *exc):
+        self.sem.release()
+        return False
+
+
+def double_buffer(items: Iterable[Any], load: Callable[[Any], Any]) -> Iterator[Any]:
+    """Prefetch-one pipeline: load(next) overlaps with consumer of current.
+
+    The staging pattern for paged optimizer offload and the data pipeline —
+    the software shape of DSA async mode.
+    """
+    it = iter(items)
+    try:
+        first = next(it)
+    except StopIteration:
+        return
+    result = {}
+    def _load(item, slot):
+        result[slot] = load(item)
+    cur_t = threading.Thread(target=_load, args=(first, 0))
+    cur_t.start()
+    slot = 0
+    for nxt in it:
+        nxt_t = threading.Thread(target=_load, args=(nxt, 1 - slot))
+        nxt_t.start()
+        cur_t.join()
+        yield result.pop(slot)
+        cur_t, slot = nxt_t, 1 - slot
+    cur_t.join()
+    yield result.pop(slot)

@@ -1,0 +1,246 @@
+"""Bandwidth-aware placement planner — the paper's guidelines, mechanized.
+
+Given the access profile of every named buffer in a training/serving
+step and a two-tier topology, produce a placement plan that applies §6:
+
+  1. latency-bound buffers (µs-SLO state, recurrent state, pointer-chase
+     structures) are *pinned to the fast tier* (guideline: "avoid running
+     µs-latency state entirely on CXL");
+  2. if everything fits in the fast tier and the fast tier is not
+     bandwidth-saturated, everything stays fast (Fig. 7: interleaving
+     cannot beat pure DRAM for a latency-bound app);
+  3. capacity overflow spills the *coldest tolerant* buffers (lowest
+     bytes-touched-per-step per resident byte) to the slow tier via
+     weighted N:M interleave;
+  4. if the fast tier is bandwidth-bound (streamed bytes/step over fast
+     bandwidth exceeds compute time), shift streaming bytes to the slow
+     tier until per-step transfer times equalize — the Fig. 9 SNC result
+     (+11% at 20% CXL) generalized:
+        x* = (F*Bs - S*Bf) / (Bf + Bs)   bytes/step moved to slow;
+  5. write-heavy buffers have their slow fraction damped by the
+     store/load bandwidth ratio and the writer limit (guideline: limit
+     concurrent writers; RFO doubles temporal-store traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.classifier import AccessProfile, Boundedness, classify
+from repro.core.ledger import TierLedger
+from repro.core.policy import BufferClass, MemPolicy
+from repro.core.tiers import TierTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferReq:
+    """One logical buffer the planner must place."""
+
+    name: str
+    klass: BufferClass
+    nbytes: int
+    profile: AccessProfile
+    #: hard pin (e.g. staging buffers, decode state)
+    pin_fast: bool = False
+    #: page size for the interleave policy this buffer will use
+    page_bytes: int = 2 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class Decision:
+    buffer: str
+    policy: MemPolicy
+    slow_fraction: float
+    boundedness: Boundedness
+    reason: str
+
+
+@dataclasses.dataclass
+class Plan:
+    decisions: dict[str, Decision]
+    ledger: TierLedger
+    est_fast_seconds: float
+    est_slow_seconds: float
+    est_step_seconds: float
+    notes: list[str]
+
+    def slow_fraction(self, name: str) -> float:
+        return self.decisions[name].slow_fraction
+
+    def report(self) -> str:
+        lines = [
+            f"{'buffer':<28s} {'class':<12s} {'bound':<10s} {'slow%':>6s}  reason"
+        ]
+        for d in self.decisions.values():
+            lines.append(
+                f"{d.buffer:<28s} {'':<12s} {d.boundedness.value:<10s}"
+                f" {d.slow_fraction*100:5.1f}%  {d.reason}"
+            )
+        lines.append(self.ledger.report())
+        lines.append(
+            f"est step: fast {self.est_fast_seconds*1e3:.3f} ms / "
+            f"slow {self.est_slow_seconds*1e3:.3f} ms / "
+            f"total {self.est_step_seconds*1e3:.3f} ms"
+        )
+        return "\n".join(lines)
+
+
+_LATENCY_CLASSES = {BufferClass.RECURRENT_STATE}
+
+
+def plan(
+    buffers: Sequence[BufferReq],
+    topology: TierTopology,
+    *,
+    compute_seconds: float,
+    reserve_fast_bytes: int = 0,
+    fast_name: Optional[str] = None,
+    slow_name: Optional[str] = None,
+) -> Plan:
+    fast = topology.fast
+    slow = topology.slow
+    fast_name = fast_name or fast.name
+    slow_name = slow_name or (slow.name if slow else fast.name)
+    notes: list[str] = []
+    ledger = TierLedger(topology)
+    if reserve_fast_bytes:
+        ledger.register("__reserved__", fast_name, reserve_fast_bytes,
+                        note="activations/temps (XLA)", strict=False)
+
+    frac: dict[str, float] = {}
+    bound: dict[str, Boundedness] = {}
+    reason: dict[str, str] = {}
+    tolerant: list[BufferReq] = []
+
+    for b in buffers:
+        bd = classify(b.profile, slow if slow else fast)
+        bound[b.name] = bd
+        if b.pin_fast or b.klass in _LATENCY_CLASSES or bd == Boundedness.LATENCY_BOUND:
+            frac[b.name] = 0.0
+            reason[b.name] = "latency-bound/pinned -> fast tier (guideline 5)"
+        else:
+            frac[b.name] = 0.0
+            reason[b.name] = "fits fast"
+            tolerant.append(b)
+
+    if slow is None:
+        return _finalize(buffers, frac, bound, reason, ledger, topology,
+                         fast_name, slow_name, compute_seconds, notes)
+
+    # --- step 3: capacity -----------------------------------------------
+    fast_cap = fast.capacity_bytes - reserve_fast_bytes
+    total_fast = sum(b.nbytes for b in buffers)
+    if total_fast > fast_cap:
+        notes.append(
+            f"fast-tier overflow: {total_fast/2**30:.1f} GiB demand vs "
+            f"{fast_cap/2**30:.1f} GiB; spilling coldest tolerant buffers"
+        )
+        overflow = total_fast - fast_cap
+        slow_free = slow.capacity_bytes
+        # coldest first: bytes touched per step per resident byte
+        for b in sorted(tolerant, key=lambda b: b.profile.bytes_per_step / max(b.nbytes, 1)):
+            if overflow <= 0 or slow_free <= 0:
+                break
+            move = min(b.nbytes, overflow, slow_free)
+            frac[b.name] = max(frac[b.name], move / b.nbytes)
+            reason[b.name] = (
+                f"capacity spill: {move/2**30:.2f} GiB -> {slow_name} (guideline 4)"
+            )
+            overflow -= move
+            slow_free -= move
+        if overflow > 0:
+            # Even the slow tier cannot absorb it; surface as plan failure.
+            raise MemoryError(
+                f"placement infeasible: {overflow/2**30:.2f} GiB cannot be "
+                "placed after spilling all tolerant buffers"
+            )
+
+    # --- step 4: bandwidth balancing --------------------------------------
+    def stream_bytes(on_slow: bool) -> float:
+        total = 0.0
+        for b in buffers:
+            f = frac[b.name]
+            share = f if on_slow else (1.0 - f)
+            w_mult = 1.0 if b.profile.bytes_written_per_step == 0 else (
+                slow.rfo_traffic_multiplier if on_slow else 1.0
+            )
+            total += share * (
+                b.profile.bytes_read_per_step
+                + b.profile.bytes_written_per_step * w_mult
+            )
+        return total
+
+    slow_bw = min(slow.load_bw, slow.link_bw or slow.load_bw)
+    fast_time = stream_bytes(False) / fast.load_bw
+    slow_time = stream_bytes(True) / slow_bw
+    if fast_time > compute_seconds and fast_time > slow_time:
+        # Fast tier is the bottleneck: shift streaming bytes until the
+        # two tiers' transfer times equalize (or tolerance runs out).
+        F, S = stream_bytes(False), stream_bytes(True)
+        x_star = (F * slow_bw - S * fast.load_bw) / (fast.load_bw + slow_bw)
+        moved = 0.0
+        notes.append(
+            f"fast tier bandwidth-bound ({fast_time*1e3:.2f} ms > compute "
+            f"{compute_seconds*1e3:.2f} ms); target shift {x_star/2**30:.2f} GiB/step"
+        )
+        # hottest *streaming* buffers move first: they carry bytes/step
+        # with the least capacity cost.
+        for b in sorted(
+            tolerant,
+            key=lambda b: -(b.profile.bytes_per_step / max(b.nbytes, 1)),
+        ):
+            if moved >= x_star:
+                break
+            if bound[b.name] != Boundedness.BANDWIDTH_BOUND:
+                continue
+            movable = (1.0 - frac[b.name]) * b.profile.bytes_per_step
+            # guideline: damp write-heavy spills by writer limits + RFO
+            w = b.profile.bytes_written_per_step / max(b.profile.bytes_per_step, 1)
+            damp = 1.0 - w * (1.0 - slow.store_bw / slow.load_bw)
+            take = min(movable * damp, x_star - moved)
+            if take <= 0:
+                continue
+            df = take / max(b.profile.bytes_per_step, 1)
+            frac[b.name] = min(1.0, frac[b.name] + df)
+            reason[b.name] = (
+                f"bandwidth balance: +{df*100:.1f}% -> {slow_name} (Fig.9 regime)"
+            )
+            moved += take
+
+    return _finalize(buffers, frac, bound, reason, ledger, topology,
+                     fast_name, slow_name, compute_seconds, notes)
+
+
+def _finalize(buffers, frac, bound, reason, ledger, topology,
+              fast_name, slow_name, compute_seconds, notes) -> Plan:
+    fast = topology.fast
+    slow = topology.slow
+    decisions = {}
+    fast_stream = 0.0
+    slow_stream = 0.0
+    for b in buffers:
+        f = frac[b.name]
+        policy = MemPolicy.from_slow_fraction(fast_name, slow_name, f,
+                                              round_up=True)
+        f_eff = policy.slow_fraction(fast_name)
+        decisions[b.name] = Decision(b.name, policy, f_eff, bound[b.name], reason[b.name])
+        ledger.register(b.name, fast_name, int(b.nbytes * (1 - f_eff)), strict=False)
+        if f_eff > 0:
+            ledger.register(b.name, slow_name, int(b.nbytes * f_eff), strict=False)
+        w_mult = slow.rfo_traffic_multiplier if slow else 1.0
+        fast_stream += (1 - f_eff) * b.profile.bytes_per_step
+        slow_stream += f_eff * (
+            b.profile.bytes_read_per_step + b.profile.bytes_written_per_step * w_mult
+        )
+    ledger.check()
+    slow_bw = min(slow.load_bw, slow.link_bw or slow.load_bw) if slow else fast.load_bw
+    est_fast = fast_stream / fast.load_bw
+    est_slow = slow_stream / slow_bw
+    return Plan(
+        decisions=decisions,
+        ledger=ledger,
+        est_fast_seconds=est_fast,
+        est_slow_seconds=est_slow,
+        est_step_seconds=max(compute_seconds, est_fast, est_slow),
+        notes=notes,
+    )

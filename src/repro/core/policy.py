@@ -1,0 +1,154 @@
+"""Placement policies: the numactl / Linux-mempolicy analogue.
+
+The paper drives all of its application studies (§5) through numactl's
+``membind`` / ``preferred`` / ``interleave`` modes plus the then-new
+kernel patch for **weighted (N:M) interleaving** across memory nodes
+[Weiner, 30].  ``MemPolicy`` reproduces that interface at the framework
+level: a policy maps the pages of one logical buffer onto tiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Sequence
+
+import numpy as np
+
+
+class PolicyKind(enum.Enum):
+    MEMBIND = "membind"  # all pages on one tier
+    PREFERRED = "preferred"  # fill preferred tier, overflow to next
+    INTERLEAVE = "interleave"  # round-robin 1:1
+    WEIGHTED_INTERLEAVE = "weighted"  # N:M round-robin (kernel patch analogue)
+
+
+class BufferClass(enum.Enum):
+    """Named buffer classes the planner knows how to reason about."""
+
+    PARAMS = "params"
+    GRADS = "grads"
+    OPT_STATE = "opt_state"
+    KV_CACHE = "kv_cache"
+    EMBEDDING = "embedding"
+    ACTIVATION = "activation"
+    RECURRENT_STATE = "recurrent_state"
+    DATA = "data"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemPolicy:
+    """Page placement policy over an ordered list of tier names.
+
+    ``weights[i]`` pages go to ``tiers[i]`` per round-robin cycle — the
+    N:M interleave of the paper (e.g. DRAM:CXL = 30:1 is 3.23% on CXL).
+    """
+
+    kind: PolicyKind
+    tiers: tuple[str, ...]
+    weights: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.kind == PolicyKind.WEIGHTED_INTERLEAVE:
+            if len(self.weights) != len(self.tiers):
+                raise ValueError("weighted interleave needs one weight per tier")
+            if any(w < 0 for w in self.weights) or sum(self.weights) == 0:
+                raise ValueError("weights must be non-negative, not all zero")
+
+    @staticmethod
+    def membind(tier: str) -> "MemPolicy":
+        return MemPolicy(PolicyKind.MEMBIND, (tier,))
+
+    @staticmethod
+    def preferred(tier: str, fallback: str) -> "MemPolicy":
+        return MemPolicy(PolicyKind.PREFERRED, (tier, fallback))
+
+    @staticmethod
+    def interleave(tiers: Sequence[str]) -> "MemPolicy":
+        return MemPolicy(PolicyKind.INTERLEAVE, tuple(tiers))
+
+    @staticmethod
+    def weighted(tiers: Sequence[str], weights: Sequence[int]) -> "MemPolicy":
+        return MemPolicy(
+            PolicyKind.WEIGHTED_INTERLEAVE, tuple(tiers), tuple(int(w) for w in weights)
+        )
+
+    @staticmethod
+    def from_slow_fraction(fast: str, slow: str, fraction: float,
+                           denominator: int = 64,
+                           round_up: bool = False) -> "MemPolicy":
+        """Build the N:M policy closest to placing ``fraction`` on ``slow``.
+
+        Uses the smallest denominator within tolerance so short page runs
+        still realize the ratio (a 64-long blocky cycle would leave an
+        8-page cache entirely on the fast tier at 50%).  ``round_up``
+        guarantees slow_fraction >= fraction (capacity spills must never
+        under-shoot)."""
+        if fraction <= 0.0:
+            return MemPolicy.membind(fast)
+        if fraction >= 1.0:
+            return MemPolicy.membind(slow)
+        import math
+        from fractions import Fraction
+        if round_up:
+            fr = Fraction(math.ceil(fraction * denominator - 1e-12),
+                          denominator)
+        else:
+            fr = Fraction(fraction).limit_denominator(denominator)
+        if fr.numerator == 0:
+            fr = Fraction(1, denominator)
+        m, d = fr.numerator, fr.denominator
+        if d == m:
+            return MemPolicy.membind(slow)
+        return MemPolicy.weighted((fast, slow), (d - m, m))
+
+    def slow_fraction(self, fast: str | None = None) -> float:
+        """Fraction of pages landing beyond the ``fast`` tier.
+
+        ``fast`` defaults to the policy's first tier; pass the topology's
+        fast-tier name to get the fraction relative to it (so
+        ``membind(slow)`` correctly reports 1.0).
+        """
+        fast = fast if fast is not None else self.tiers[0]
+        if self.kind in (PolicyKind.MEMBIND, PolicyKind.PREFERRED):
+            return 0.0 if self.tiers[0] == fast else 1.0
+        if self.kind == PolicyKind.INTERLEAVE:
+            on_fast = sum(1 for t in self.tiers if t == fast)
+            return (len(self.tiers) - on_fast) / len(self.tiers)
+        total = sum(self.weights)
+        on_fast = sum(w for t, w in zip(self.tiers, self.weights) if t == fast)
+        return (total - on_fast) / total
+
+    def assign_pages(self, n_pages: int) -> np.ndarray:
+        """page -> tier-ordinal assignment (int8), round-robin semantics.
+
+        Matches the kernel patch: each cycle places ``weights[i]``
+        consecutive pages on tier ``i``.
+        """
+        if n_pages < 0:
+            raise ValueError("n_pages must be >= 0")
+        if self.kind in (PolicyKind.MEMBIND, PolicyKind.PREFERRED):
+            return np.zeros(n_pages, dtype=np.int8)
+        if self.kind == PolicyKind.INTERLEAVE:
+            return (np.arange(n_pages) % len(self.tiers)).astype(np.int8)
+        cycle = np.concatenate(
+            [np.full(w, i, dtype=np.int8) for i, w in enumerate(self.weights) if w > 0]
+        )
+        reps = -(-n_pages // len(cycle))
+        return np.tile(cycle, reps)[:n_pages]
+
+    _FAST_NAMES = ("fast", "hbm", "dram", "device", "ddr5-l8", "snc-2ch")
+
+    def page_is_slow(self, n_pages: int) -> np.ndarray:
+        """page -> bool slow-tier map (resolves ordinals via tier NAMES,
+        so membind('slow') correctly lands every page on the slow tier)."""
+        assign = self.assign_pages(n_pages)
+        slow_ord = np.array([t.lower() not in self._FAST_NAMES
+                             for t in self.tiers], dtype=bool)
+        return slow_ord[np.minimum(assign, len(self.tiers) - 1)]
+
+    def page_counts(self, n_pages: int) -> dict[str, int]:
+        assign = self.assign_pages(n_pages)
+        return {
+            t: int((assign == i).sum())
+            for i, t in enumerate(self.tiers)
+        }

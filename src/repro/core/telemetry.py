@@ -1,0 +1,78 @@
+"""Movement/access telemetry: bytes and descriptors per tier route.
+
+The paper's guidelines hinge on knowing per-route traffic (D2C, C2D,
+C2C, D2D in Fig. 4).  Every mover/interleave operation records here so
+benchmarks and the planner's feedback loop see real traffic, and so a
+"centralized daemon" (§6) has the data to throttle writers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import defaultdict
+
+
+@dataclasses.dataclass
+class RouteStats:
+    bytes_moved: int = 0
+    descriptors: int = 0
+    batches: int = 0
+    seconds: float = 0.0
+
+    @property
+    def bandwidth(self) -> float:
+        return self.bytes_moved / self.seconds if self.seconds > 0 else 0.0
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.routes: dict[tuple[str, str], RouteStats] = defaultdict(RouteStats)
+        self.counters: dict[str, float] = defaultdict(float)
+
+    def record_move(self, src: str, dst: str, nbytes: int, seconds: float,
+                    descriptors: int = 1, batches: int = 1) -> None:
+        with self._lock:
+            r = self.routes[(src, dst)]
+            r.bytes_moved += int(nbytes)
+            r.descriptors += descriptors
+            r.batches += batches
+            r.seconds += seconds
+
+    def bump(self, name: str, value: float = 1.0) -> None:
+        with self._lock:
+            self.counters[name] += value
+
+    def route(self, src: str, dst: str) -> RouteStats:
+        return self.routes[(src, dst)]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "routes": {
+                    f"{s}->{d}": dataclasses.asdict(v)
+                    for (s, d), v in self.routes.items()
+                },
+                "counters": dict(self.counters),
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.routes.clear()
+            self.counters.clear()
+
+
+GLOBAL_TELEMETRY = Telemetry()
+
+
+class Timer:
+    """Context-manager wall timer (blocks on jax arrays if passed)."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,210 @@
+"""Memory-tier model: the paper's testbed and the TPU v5e target.
+
+The paper (Sun et al., MICRO'23) characterizes three tiers on x86:
+local 8-channel DDR5, CXL-attached DDR4 behind PCIe Gen5 x16, and
+remote-NUMA single-channel DDR5.  On TPU v5e the analogous two tiers are
+on-chip HBM and host DRAM behind PCIe.  ``TierSpec`` captures the
+characteristics the paper shows matter: peak bandwidth per operation
+class, latency (flushed-line and dependent pointer-chase), and the
+stream counts beyond which the controller contends (Fig. 3/5 collapse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+GiB = 1024**3
+GB = 1e9
+
+
+class OpClass(enum.Enum):
+    """Access classes from the paper's MEMO microbenchmark."""
+
+    LOAD = "load"
+    STORE = "store"  # temporal store (+wb) — incurs RFO on the paper's CXL
+    NT_STORE = "nt_store"  # cache-bypass store (nt-store / movdir64B analogue)
+    COPY = "copy"  # paired load+store bulk movement
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One memory tier as seen from the compute engine."""
+
+    name: str
+    kind: str  # "hbm" | "host" | "ddr_local" | "cxl" | "ddr_remote"
+    capacity_bytes: int
+    # Peak aggregate bandwidth per op class (bytes/s).
+    load_bw: float
+    store_bw: float  # temporal store path (RFO-afflicted on CXL-like tiers)
+    nt_store_bw: float  # cache-bypass store path
+    # Latency (ns).
+    load_latency_ns: float  # flushed-line single load
+    chase_latency_ns: float  # dependent pointer-chase per hop
+    # Contention model (Fig. 3/5): bandwidth ramps ~linearly with streams up
+    # to *_peak_streams, stays flat to *_collapse_streams, then degrades by
+    # collapse_factor (controller-buffer interference).
+    load_peak_streams: int
+    store_peak_streams: int
+    load_collapse_streams: int
+    store_collapse_streams: int
+    collapse_factor: float
+    # Link behind which the tier sits (PCIe for CXL/host); None = direct.
+    link_bw: Optional[float] = None
+    # Traffic multiplier for temporal (in-place) writes: read-for-ownership /
+    # fetch-modify-flush costs 2x bytes on far tiers (paper §4.2 / F3).
+    rfo_traffic_multiplier: float = 1.0
+
+    def peak_bw(self, op: OpClass) -> float:
+        if op == OpClass.LOAD:
+            return self.load_bw
+        if op == OpClass.STORE:
+            return self.store_bw
+        if op == OpClass.NT_STORE:
+            return self.nt_store_bw
+        # COPY: harmonic combination of a load and a store stream.
+        return 1.0 / (1.0 / self.load_bw + 1.0 / self.nt_store_bw)
+
+    def peak_streams(self, op: OpClass) -> int:
+        return self.load_peak_streams if op == OpClass.LOAD else self.store_peak_streams
+
+    def collapse_streams(self, op: OpClass) -> int:
+        return (
+            self.load_collapse_streams
+            if op == OpClass.LOAD
+            else self.store_collapse_streams
+        )
+
+
+# ---------------------------------------------------------------------------
+# Paper testbed (Table 1 + Figs. 2/3): used to calibrate/validate perfmodel.
+# Absolute latencies chosen to satisfy the paper's reported ratios:
+#   CXL flushed-load = 2.2x DDR5-L8; CXL chase = 3.7x DDR5-L8 = 2.2x DDR5-R1.
+# ---------------------------------------------------------------------------
+DDR5_L8 = TierSpec(
+    name="ddr5-l8",
+    kind="ddr_local",
+    capacity_bytes=128 * GiB,
+    load_bw=221 * GB,  # Fig. 3a peak
+    store_bw=140 * GB,
+    nt_store_bw=170 * GB,  # Fig. 3a nt-store peak
+    load_latency_ns=170.0,
+    chase_latency_ns=90.0,
+    load_peak_streams=26,
+    store_peak_streams=16,
+    load_collapse_streams=64,
+    store_collapse_streams=64,
+    collapse_factor=0.95,
+)
+
+CXL_AGILEX = TierSpec(
+    name="cxl-agilex",
+    kind="cxl",
+    capacity_bytes=16 * GiB,
+    load_bw=20 * GB,  # peaks ~8 threads (Fig. 3b)
+    store_bw=8 * GB,  # temporal store, RFO-limited
+    nt_store_bw=22 * GB,  # ~DDR4-2666 theoretical max, 2 threads
+    load_latency_ns=374.0,  # 2.2x DDR5-L8
+    chase_latency_ns=333.0,  # 3.7x DDR5-L8
+    load_peak_streams=8,
+    store_peak_streams=2,
+    load_collapse_streams=12,
+    store_collapse_streams=4,
+    collapse_factor=0.65,  # drops to ~16.8/20 for loads; harsher for stores
+    link_bw=64 * GB,  # PCIe Gen5 x16
+    rfo_traffic_multiplier=2.0,
+)
+
+DDR5_R1 = TierSpec(
+    name="ddr5-r1",
+    kind="ddr_remote",
+    capacity_bytes=256 * GiB,
+    load_bw=30 * GB,  # single channel DDR5-4800 behind UPI
+    store_bw=16 * GB,
+    nt_store_bw=26 * GB,
+    load_latency_ns=306.0,  # ~1.8x DDR5-L8 (paper: 1x-2.5x band)
+    chase_latency_ns=151.0,  # CXL chase / 2.2
+    load_peak_streams=8,
+    store_peak_streams=4,
+    load_collapse_streams=24,
+    store_collapse_streams=16,
+    collapse_factor=0.85,
+)
+
+# ---------------------------------------------------------------------------
+# TPU v5e target (deployment): HBM fast tier + host-DRAM "CXL" tier.
+# ---------------------------------------------------------------------------
+TPU_PEAK_FLOPS_BF16 = 197e12  # per chip
+TPU_HBM_BW = 819 * GB
+TPU_HBM_BYTES = 16 * GiB
+TPU_ICI_LINK_BW = 50 * GB  # per link
+TPU_ICI_LINKS_PER_CHIP = 4  # v5e 2D torus: 4 links
+TPU_DCN_BW_PER_HOST = 12.5 * GB  # cross-pod (pod axis) effective
+TPU_PCIE_BW = 32 * GB  # host<->chip effective (the "CXL" link)
+TPU_CHIPS_PER_HOST = 8
+
+HBM_V5E = TierSpec(
+    name="hbm",
+    kind="hbm",
+    capacity_bytes=TPU_HBM_BYTES,
+    load_bw=TPU_HBM_BW,
+    store_bw=TPU_HBM_BW,
+    nt_store_bw=TPU_HBM_BW,
+    load_latency_ns=350.0,
+    chase_latency_ns=500.0,
+    load_peak_streams=8,
+    store_peak_streams=8,
+    load_collapse_streams=32,
+    store_collapse_streams=32,
+    collapse_factor=0.95,
+)
+
+HOST_V5E = TierSpec(
+    name="host",
+    kind="host",
+    capacity_bytes=512 * GiB // TPU_CHIPS_PER_HOST,  # per-chip share of host DRAM
+    load_bw=TPU_PCIE_BW,
+    store_bw=TPU_PCIE_BW / 2,  # fetch-modify-flush path
+    nt_store_bw=TPU_PCIE_BW,
+    load_latency_ns=2_000.0,
+    chase_latency_ns=5_000.0,
+    load_peak_streams=4,
+    store_peak_streams=2,
+    load_collapse_streams=8,
+    store_collapse_streams=4,
+    collapse_factor=0.7,
+    link_bw=TPU_PCIE_BW,
+    rfo_traffic_multiplier=2.0,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierTopology:
+    """A fast tier + optional slow tier(s), as one compute engine sees them."""
+
+    fast: TierSpec
+    slow: Optional[TierSpec] = None
+    extra: tuple[TierSpec, ...] = ()
+
+    @property
+    def tiers(self) -> tuple[TierSpec, ...]:
+        out = (self.fast,)
+        if self.slow is not None:
+            out = out + (self.slow,)
+        return out + self.extra
+
+    def by_name(self, name: str) -> TierSpec:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+
+def paper_topology() -> TierTopology:
+    """The paper's testbed: local DDR5 fast tier + CXL slow tier (+ remote)."""
+    return TierTopology(fast=DDR5_L8, slow=CXL_AGILEX, extra=(DDR5_R1,))
+
+
+def tpu_v5e_topology() -> TierTopology:
+    """Deployment target: HBM fast tier + host-DRAM-behind-PCIe slow tier."""
+    return TierTopology(fast=HBM_V5E, slow=HOST_V5E)

@@ -1,0 +1,9 @@
+"""Shared kernel plumbing: interpret-mode selection for CPU validation."""
+from __future__ import annotations
+
+import jax
+
+
+def interpret_default() -> bool:
+    """Pallas TPU kernels execute via the interpreter on CPU backends."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode kernel: one new token vs a long KV cache.
+
+The decode-shape hot spot (decode_32k / long-context serving): per step
+the whole KV prefix streams HBM -> VMEM exactly once (the cache-bypass
+pattern the paper prescribes for far-tier reads), while the online-
+softmax state (m, l, acc) stays VMEM-resident across KV blocks.  GQA is
+exploited by processing all G = H/K query heads of one KV head per grid
+cell, so each KV byte fetched serves G query heads (arithmetic-intensity
+lever for the bandwidth-bound decode roofline).
+
+Grid: (B, K, T // block_t), KV-block innermost (sequential accumulate).
+Sequence lengths are scalar-prefetched: blocks past the valid prefix are
+skipped entirely (no DMA compute waste for ragged batches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, block_t: int, t_total: int):
+    b = pl.program_id(0)
+    tb = pl.program_id(2)
+    n_tb = pl.num_programs(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(tb * block_t < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (Tb, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (Tb, hd)
+        s = jnp.dot(q, k.T) / np.sqrt(q.shape[-1])  # (G, Tb)
+        t_idx = tb * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(t_idx < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(tb == n_tb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(
+    q: jax.Array,  # (B, H, hd)
+    k: jax.Array,  # (B, T, K, hd)
+    v: jax.Array,  # (B, T, K, hd)
+    lengths: jax.Array,  # (B,) int32 valid prefix
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_t = min(block_t, T)
+    assert T % block_t == 0, "cache length must tile by block_t"
+    qg = q.reshape(B, K, G, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, T // block_t),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kh, tb, L: (b, kh, 0, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b, kh, tb, L: (b, tb, kh, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b, kh, tb, L: (b, tb, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kh, tb, L: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t, t_total=T),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), jnp.float32),
+        interpret=interpret,
+    )
+    out = fn(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.decode_attention import kernel, ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_t: int = 512,
+                     use_kernel: bool = True) -> jax.Array:
+    if not use_kernel or k.shape[1] % min(block_t, k.shape[1]):
+        return ref.decode_attention(q, k, v, lengths)
+    return kernel.decode_attention(
+        q, k, v, lengths, block_t=block_t, interpret=interpret_default()
+    )

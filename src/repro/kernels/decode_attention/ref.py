@@ -1,0 +1,24 @@
+"""Oracle for flash-decode GQA attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """q: (B,H,hd); k,v: (B,T,K,hd); lengths: (B,) valid prefix.
+
+    Returns (B,H,hd) in fp32.
+    """
+    B, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, k.astype(jnp.float32)) / np.sqrt(hd)
+    valid = jnp.arange(T)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)

@@ -1,0 +1,63 @@
+"""Pallas TPU embedding-bag reduction kernel.
+
+The paper's DLRM embedding-reduction workload (§5.2) is a random-row
+gather + weighted sum over a large table.  TPU adaptation: the per-bag
+row indices are **scalar-prefetched** so the BlockSpec ``index_map`` can
+steer each grid step's HBM->VMEM DMA straight to the right table row —
+the cache-bypass streaming access the paper recommends (no reuse, no
+pollution), with the accumulator resident in VMEM across the K axis.
+
+Grid: (B, K).  Table block (1, D) selected by indices[b, k]; the output
+block (1, D) revisits b for all k so the accumulation stays in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, row_ref, w_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0, k].astype(jnp.float32)
+    out_ref[...] += (row_ref[...].astype(jnp.float32) * w).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_reduce(
+    table: jax.Array,  # (V, D)
+    indices: jax.Array,  # (B, K) int32
+    weights: jax.Array,  # (B, K)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, K = indices.shape
+    V, D = table.shape
+    out_dtype = jnp.float32
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            # one table row per grid step, chosen by the prefetched index
+            pl.BlockSpec((1, D), lambda b, k, idx: (idx[b, k], 0)),
+            # the bag's weights, resident per-b
+            pl.BlockSpec((1, K), lambda b, k, idx: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, k, idx: (b, 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
+        interpret=interpret,
+    )
+    return fn(indices.astype(jnp.int32), table, weights).astype(table.dtype)

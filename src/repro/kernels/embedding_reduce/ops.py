@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the embedding-bag reduction kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.embedding_reduce import kernel, ref
+
+
+def embedding_reduce(table: jax.Array, indices: jax.Array, weights: jax.Array,
+                     *, use_kernel: bool = True) -> jax.Array:
+    """(V,D) x (B,K) -> (B,D).  Kernel on TPU / interpret on CPU."""
+    if not use_kernel:
+        return ref.embedding_reduce(table, indices, weights)
+    return kernel.embedding_reduce(
+        table, indices, weights, interpret=interpret_default()
+    )

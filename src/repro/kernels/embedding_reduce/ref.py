@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the embedding-bag reduction (DLRM §5.2 workload)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_reduce(table: jax.Array, indices: jax.Array,
+                     weights: jax.Array) -> jax.Array:
+    """table: (V, D); indices, weights: (B, K) -> (B, D) weighted sums."""
+    gathered = jnp.take(table, indices, axis=0)  # (B, K, D)
+    return jnp.einsum("bkd,bk->bd", gathered, weights.astype(table.dtype))

@@ -1,0 +1,43 @@
+"""Pallas TPU streaming (cache-bypass) bulk copy.
+
+The nt-store / movdir64B analogue from the paper's §6 guidelines: data
+moves HBM -> VMEM tile -> HBM with no reuse, so it cannot pollute any
+cache-like resource, and the tile size is the explicit analogue of the
+64 B cache-bypass granule (sized to VMEM instead).  Used by the
+BulkMover for page staging; optional dtype cast fuses the compressed-
+staging path (bf16 <-> fp32 moment pages) into the same single pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(src_ref, out_ref):
+    out_ref[...] = src_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "out_dtype", "interpret"))
+def stream_copy(
+    src: jax.Array,  # (N, M) — page-major layout
+    *,
+    block_rows: int = 256,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    out_dtype = out_dtype or src.dtype
+    N, M = src.shape
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0, "rows must tile evenly"
+    fn = pl.pallas_call(
+        _kernel,
+        grid=(N // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, M), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, M), out_dtype),
+        interpret=interpret,
+    )
+    return fn(src)

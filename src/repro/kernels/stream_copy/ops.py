@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the streaming copy kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.stream_copy import kernel, ref
+
+
+def stream_copy(src: jax.Array, *, out_dtype=None, block_rows: int = 256,
+                use_kernel: bool = True) -> jax.Array:
+    if not use_kernel or src.ndim != 2 or src.shape[0] % block_rows:
+        return ref.stream_copy(src, out_dtype)
+    return kernel.stream_copy(
+        src, block_rows=block_rows, out_dtype=out_dtype,
+        interpret=interpret_default(),
+    )

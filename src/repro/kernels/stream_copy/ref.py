@@ -1,0 +1,10 @@
+"""Oracle for the cache-bypass streaming copy (optionally casting)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_copy(src: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or src.dtype
+    return src.astype(out_dtype)

@@ -1,0 +1,102 @@
+"""Pallas TPU WKV6 recurrence kernel.
+
+TPU adaptation of the RWKV6 CUDA kernel: instead of one CUDA thread per
+channel with shared-memory staging, the per-(batch, head) state matrix
+(hd x hd fp32) lives in **VMEM scratch across the whole time axis**, and
+r/k/v/w stream through VMEM in time chunks — HBM traffic is exactly one
+pass over the inputs (the op is bandwidth-bound; state reuse is what the
+VMEM residency buys).  The recurrence itself runs on the VPU via a
+`fori_loop` over the chunk; numerically exact (no 1/P chunked rescaling,
+which overflows for small decays).
+
+Grid: (B*H, T // block_t), time innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_ref,
+            *, block_t: int):
+    tb = pl.program_id(1)
+    n_tb = pl.num_programs(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+
+    def step(t, _):
+        rt = r_ref[0, t].astype(jnp.float32)  # (hd,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        s = s_ref[...]  # (hd, hd): [k-dim, v-dim]
+        kv = kt[:, None] * vt[None, :]
+        y = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)
+        y_ref[0, t] = y
+        s_ref[...] = wt[:, None] * s + kv
+        return ()
+
+    jax.lax.fori_loop(0, block_t, step, ())
+
+    @pl.when(tb == n_tb - 1)
+    def _finish():
+        sT_ref[0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv6(
+    r: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,  # (H, hd)
+    state: jax.Array,  # (B, H, hd, hd) fp32
+    *,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    B, T, H, hd = r.shape
+    block_t = min(block_t, T)
+    assert T % block_t == 0, "T must tile by block_t"
+    BH = B * H
+
+    def flat(x):  # (B,T,H,hd) -> (BH, T, hd)
+        return x.transpose(0, 2, 1, 3).reshape(BH, T, hd)
+
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(BH, hd)
+    s0 = state.reshape(BH, hd, hd)
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t),
+        grid=(BH, T // block_t),
+        in_specs=[
+            pl.BlockSpec((1, block_t, hd), lambda bh, tb: (bh, tb, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda bh, tb: (bh, tb, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda bh, tb: (bh, tb, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda bh, tb: (bh, tb, 0)),
+            pl.BlockSpec((1, hd), lambda bh, tb: (bh, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, tb: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, hd), lambda bh, tb: (bh, tb, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, tb: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )
+    y, sT = fn(rf, kf, vf, wf, uf, s0)
+    y = y.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, hd, hd)

@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the WKV6 recurrence kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.wkv6 import kernel, ref
+
+
+def wkv6(r, k, v, w, u, state, *, block_t: int = 256, use_kernel: bool = True):
+    if not use_kernel or r.shape[1] % min(block_t, r.shape[1]):
+        return ref.wkv6(r, k, v, w, u, state)
+    return kernel.wkv6(r, k, v, w, u, state, block_t=block_t,
+                       interpret=interpret_default())

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV6 recurrence (same math as models.rwkv)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r, k, v, w, u, state):
+    """r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) fp32.
+
+    Returns (y (B,T,H,hd) fp32, final_state).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+                      for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state

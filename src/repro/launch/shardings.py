@@ -1,0 +1,182 @@
+"""Sharding rules: logical-axis mapping from parameter paths to mesh axes.
+
+TP shards the flattened head (H*hd), FFN (F), vocab (V), and expert (E)
+dims; FSDP additionally shards one large dim of each weight over the
+data(+pod) axes for models past ``fsdp_threshold`` params.  Head-count
+dims (40, 20...) do not divide a 16-way model axis, so constraints are
+placed on the flat projections and XLA propagates the rest — the
+baseline recorded in EXPERIMENTS.md §Perf iterates from there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import dp_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    fsdp: bool = False  # shard params over data axes too (ZeRO-3-ish)
+    zero1: bool = False  # params replicated over dp; ONLY moments dp-sharded
+    fsdp_threshold: float = 10e9  # auto-enable above this many params
+    seq_shard_prefill: bool = True  # shard long-seq activations over data axes
+
+    @staticmethod
+    def for_arch(cfg: ArchConfig) -> "ShardingConfig":
+        # params bf16 + grads fp32 + moments fp32x2 = 14 B/param; enable
+        # FSDP once a pure-TP layout would eat >25% of HBM per chip.
+        per_chip = cfg.param_count() * 14 / 16
+        return ShardingConfig(fsdp=per_chip > 0.25 * 16 * 1024**3)
+
+
+# param-name classification --------------------------------------------------
+_COL_KEYS = {"wq", "wk", "wv", "w_gate", "w_up", "Wk", "Wr", "Wv", "Wg",
+             "W_gate", "W_in", "W_a", "W_i"}
+_ROW_KEYS = {"wo", "w_down", "Wo", "W_out"}
+_REPLICATE_KEYS = {"scale", "bias", "w0", "u", "gn_scale", "gn_bias",
+                   "lam", "conv", "b_a", "b_i", "w_A", "w_B",
+                   "mu_r", "mu_k", "mu_v", "mu_w", "mu_g"}
+
+
+def _leaf_key(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", str(last))
+
+
+def param_spec(path, leaf, cfg: ArchConfig, mesh, scfg: ShardingConfig) -> P:
+    """PartitionSpec for one parameter leaf (stacked layer dims included)."""
+    key = _leaf_key(path)
+    keys = [getattr(p, "key", "") for p in path]
+    ndim = len(leaf.shape)
+    dp = dp_axes(mesh)
+    fs = dp if scfg.fsdp else None
+
+    def spec(*tail: object) -> P:
+        """Right-align ``tail`` onto the leaf's dims (leading dims unsharded)."""
+        full = [None] * (ndim - len(tail)) + list(tail)
+        return P(*full)
+
+    if key in {"embed"}:
+        return P("model", None)  # vocab-sharded table
+    if key in {"lm_head"}:
+        return P(None, "model")
+    if key in {"router"}:
+        return P(None, None) if ndim == 2 else spec(None, None)
+    if key in {"enc_pos", "dec_pos"}:
+        return P(None, None)
+    if "experts" in keys:
+        # (units, E, D, F) / (units, E, F, D): EP on data axes, TP on model
+        if key in {"w_gate", "w_up"}:
+            return spec(fs, None, "model") if ndim >= 3 else spec(None, "model")
+        if key == "w_down":
+            return spec(fs, "model", None) if ndim >= 3 else spec("model", None)
+    if key in _REPLICATE_KEYS:
+        return P(*([None] * ndim))
+    if key.startswith("b") and ndim <= 2:  # qkv biases (stacked (L, Hhd))
+        return spec("model")
+    if key in _COL_KEYS and ndim >= 2:
+        return spec(fs, "model")
+    if key in _ROW_KEYS and ndim >= 2:
+        return spec("model", fs)
+    return P(*([None] * ndim))
+
+
+def param_shardings(params_abstract, cfg: ArchConfig, mesh,
+                    scfg: Optional[ShardingConfig] = None):
+    scfg = scfg or ShardingConfig.for_arch(cfg)
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, cfg, mesh, scfg))
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def opt_state_shardings(params_shardings, params_abstract=None,
+                        zero1: bool = False):
+    """Moments follow their parameter's sharding; under ZeRO-1 they are
+    additionally sharded over the dp axes (first evenly-divisible dim),
+    so replicated params don't imply replicated optimizer state."""
+    mesh = jax.tree_util.tree_leaves(params_shardings)[0].mesh
+    moments = params_shardings
+    if zero1 and params_abstract is not None:
+        dp = dp_axes(mesh)
+        n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+
+        def shard_more(sh, leaf):
+            spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+            for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+                if ax is None and dim % n_dp == 0 and dim >= n_dp:
+                    spec[i] = dp
+                    return NamedSharding(mesh, P(*spec))
+            return sh
+
+        moments = jax.tree_util.tree_map(shard_more, params_shardings,
+                                         params_abstract)
+    return {
+        "step": NamedSharding(mesh, P()),
+        "mu": moments,
+        "nu": moments,
+    }
+
+
+def batch_sharding(mesh, batch: int, extra_dims: int = 1,
+                   feature_dims: int = 0):
+    """(B, ...) batch-sharded over the dp axes when divisible."""
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    lead = dp if batch % n_dp == 0 else None
+    return NamedSharding(mesh, P(lead, *([None] * (extra_dims - 1 + feature_dims))))
+
+
+def activation_policy(mesh, *, seq_sharded: bool = False) -> dict:
+    """Logical-name -> sharding constraints installed around model calls."""
+    dp = dp_axes(mesh)
+    seq = dp if seq_sharded else None
+    return {
+        "act_btd": NamedSharding(mesh, P(dp if not seq_sharded else None, seq, None)),
+        "act_btf": NamedSharding(mesh, P(dp if not seq_sharded else None, seq, "model")),
+        "act_btv": NamedSharding(mesh, P(dp if not seq_sharded else None, seq, "model")),
+        "act_ecd": NamedSharding(mesh, P(dp, None, None)),  # experts over dp (EP)
+        "act_ecd_flat": NamedSharding(mesh, P(dp, None)),  # (E*C, D) expert-major
+        "act_td": NamedSharding(mesh, P(dp, None)),  # flat tokens, batch-major
+        "_ep": (mesh, dp),  # shard_map expert-parallel dispatch context
+        "_q_chunk": 256,  # score-block rows per flight
+        "_flash": True,  # online-softmax KV chunking (no (C,S) score spill)
+        "_kv_chunk": 1024,
+    }
+
+
+def cache_shardings(cache_abstract, mesh):
+    """KV cache / recurrent state: batch dim sharded over dp axes."""
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+
+    n_model = mesh.shape["model"]
+
+    def one(path, leaf):
+        key = _leaf_key(path)
+        if key == "len":
+            return NamedSharding(mesh, P(None))
+        nd = len(leaf.shape)
+        batch_ok = nd >= 2 and leaf.shape[1] % n_dp == 0
+        # self-attention KV caches (L, B, T, K, hd): shard the time axis
+        # over the model axis too — decode attention partial-softmaxes per
+        # shard and all-reduces (flash-decode style); without this, MHA
+        # caches (kv=40) blow HBM.
+        if key in ("k", "v") and nd == 5 and leaf.shape[2] % n_model == 0:
+            return NamedSharding(
+                mesh, P(None, dp if batch_ok else None, "model", None, None))
+        if key in ("xk", "xv") and nd == 5:
+            return NamedSharding(
+                mesh, P(None, dp if batch_ok else None, None, None, None))
+        if batch_ok:
+            return NamedSharding(mesh, P(None, dp, *([None] * (nd - 2))))
+        if nd >= 1 and leaf.shape[0] % n_dp == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)

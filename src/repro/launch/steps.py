@@ -1,0 +1,271 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``make_train_step`` builds the jitted training step: microbatched
+gradient accumulation (lax.scan) with per-layer remat, fp32 grad
+accumulators, AdamW update fused in (or grads returned for the tiered
+offload path).  ``make_serve_step``/``make_prefill_step`` build the
+decode/prefill programs.  ``input_specs`` produces the sharded
+ShapeDtypeStruct stand-ins the dry run lowers against (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch import shardings as shmod
+from repro.launch.mesh import dp_axes
+from repro.launch.shapes import ShapeSpec
+from repro.models.common import activation_sharding
+from repro.models.registry import Arch
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# Abstract params / batch / cache
+# ---------------------------------------------------------------------------
+def abstract_params(arch: Arch):
+    return jax.eval_shape(lambda k: arch.module.init(arch.cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_batch(arch: Arch, shape: ShapeSpec) -> dict:
+    cfg = arch.cfg
+    B, S = shape.batch, shape.seq
+    from repro.models.common import dtype_of
+    dt = dtype_of(cfg.param_dtype)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.n_prefix_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder.n_ctx, cfg.d_model), dt)
+    return batch
+
+
+def abstract_cache(arch: Arch, shape: ShapeSpec, dtype=None):
+    return jax.eval_shape(
+        lambda: arch.module.init_cache(arch.cfg, shape.batch, shape.seq,
+                                       dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_micro_grad_step(arch: Arch, *, act_policy: Optional[dict] = None
+                         ) -> Callable:
+    """ZeRO-offload device program: ONE microbatch fwd+bwd, bf16 grads out.
+    The host daemon accumulates grads in fp32 and pages the optimizer
+    state (TieredAdamW) — no device-resident fp32 accumulator at all."""
+    cfg, mod = arch.cfg, arch.module
+    train_policy = dict(act_policy or {})
+    train_policy.pop("_flash", None)
+
+    def micro_step(params, micro_batch):
+        with activation_sharding(train_policy):
+            loss, grads = jax.value_and_grad(
+                lambda p: mod.loss(cfg, p, micro_batch, remat=True))(params)
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16), grads)
+        return grads, {"loss": loss}
+
+    return micro_step
+
+
+def make_train_step(arch: Arch, opt_cfg: adamw.AdamWConfig, *,
+                    n_micro: int = 1, act_policy: Optional[dict] = None,
+                    return_grads: bool = False, mesh=None,
+                    grad_shardings=None) -> Callable:
+    cfg = arch.cfg
+    mod = arch.module
+    micro_sh = None
+    if mesh is not None and n_micro > 1:
+        micro_sh = NamedSharding(mesh, P(None, dp_axes(mesh)))
+
+    # flash stays OFF in training: JAX's scan-bwd saves per-chunk score
+    # residuals, so pure-JAX flash does not cut backward HBM traffic
+    # (measured: §Perf, refuted hypothesis); needs the custom-VJP Pallas
+    # kernel. Prefill/serve keep it (7.7x memory-term win measured).
+    train_policy = dict(act_policy or {})
+    train_policy.pop("_flash", None)
+
+    def loss_fn(params, mb):
+        with activation_sharding(train_policy):
+            return mod.loss(cfg, params, mb, remat=True)
+
+    def grads_of(params, batch):
+        if n_micro == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def reshape(x):
+            y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+            if micro_sh is not None:
+                spec = P(None, micro_sh.spec[1], *([None] * (y.ndim - 2)))
+                y = jax.lax.with_sharding_constraint(
+                    y, NamedSharding(micro_sh.mesh, spec))
+            return y
+
+        micro = jax.tree_util.tree_map(reshape, batch)
+
+        def constrain(t):
+            if grad_shardings is None:
+                return t
+            return jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, t, grad_shardings)
+
+        zero = constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = constrain(jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g))
+            return (g_acc, l_acc + l), None
+
+        (g, l), _ = jax.lax.scan(acc, (zero, jnp.float32(0)), micro)
+        inv = 1.0 / n_micro
+        g = jax.tree_util.tree_map(lambda x: x * inv, g)
+        return l * inv, g
+
+    if return_grads:
+        def train_step(params, batch):
+            loss, grads = grads_of(params, batch)
+            return grads, {"loss": loss}
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = adamw.apply(opt_cfg, params, grads, opt_state)
+        return params, opt_state, dict(metrics, loss=loss)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill / serve steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(arch: Arch, *, act_policy: Optional[dict] = None) -> Callable:
+    cfg, mod = arch.cfg, arch.module
+
+    def prefill_step(params, batch):
+        with activation_sharding(act_policy or {}):
+            kwargs = {}
+            if cfg.family == "audio":
+                kwargs["frames"] = batch["frames"]
+            if cfg.family == "vlm":
+                kwargs["prefix_embeds"] = batch["prefix_embeds"]
+            logits = mod.forward(cfg, params, batch["tokens"],
+                                 last_only=True, **kwargs)
+            return logits[:, -1, :]  # next-token logits only
+
+    return prefill_step
+
+
+def make_serve_step(arch: Arch, *, act_policy: Optional[dict] = None,
+                    unroll: bool = False) -> Callable:
+    cfg, mod = arch.cfg, arch.module
+    import inspect
+    kw = {}
+    if unroll and "unroll" in inspect.signature(mod.decode_step).parameters:
+        kw["unroll"] = True
+
+    def serve_step(params, cache, tokens):
+        with activation_sharding(act_policy or {}):
+            return mod.decode_step(cfg, params, cache, tokens, **kw)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded input specs for the dry run
+# ---------------------------------------------------------------------------
+def _with_sharding(abstract, shardings):
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        abstract, shardings)
+
+
+def batch_shardings(batch_abstract: dict, mesh):
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def one(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if b % n_dp == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+@dataclasses.dataclass
+class CellSpecs:
+    """Everything the dry run needs for one (arch x shape x mesh) cell."""
+    params: object
+    param_sh: object
+    batch: Optional[dict] = None
+    batch_sh: Optional[dict] = None
+    opt_state: Optional[dict] = None
+    opt_sh: Optional[dict] = None
+    cache: Optional[dict] = None
+    cache_sh: Optional[dict] = None
+    tokens: Optional[object] = None
+    tokens_sh: Optional[object] = None
+
+
+def self_cache_bytes(cfg, shape) -> int:
+    """Self-attention KV bytes for one decode cell (0 for ssm)."""
+    if cfg.family == "ssm":
+        return 0
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    T = min(cfg.local_window, shape.seq) if cfg.local_window else shape.seq
+    return 2 * cfg.n_layers * shape.batch * T * K * hd * 2
+
+
+def input_specs(arch: Arch, shape: ShapeSpec, mesh,
+                scfg: Optional[shmod.ShardingConfig] = None,
+                cache_dtype=None) -> CellSpecs:
+    cfg = arch.cfg
+    scfg = scfg or shmod.ShardingConfig.for_arch(cfg)
+    pa = abstract_params(arch)
+    psh = shmod.param_shardings(pa, cfg, mesh, scfg)
+    out = CellSpecs(params=_with_sharding(pa, psh), param_sh=psh)
+    if shape.kind in ("train", "prefill"):
+        ba = abstract_batch(arch, shape)
+        bsh = batch_shardings(ba, mesh)
+        out.batch = _with_sharding(ba, bsh)
+        out.batch_sh = bsh
+    if shape.kind == "train":
+        oa = jax.eval_shape(lambda p: adamw.init_state(p), pa)
+        osh = shmod.opt_state_shardings(psh, pa, zero1=scfg.zero1)
+        out.opt_state = _with_sharding(oa, osh)
+        out.opt_sh = osh
+    if shape.kind == "decode":
+        if cache_dtype is None:
+            # fp8 KV quantization when the bf16 cache alone would blow HBM
+            # (qwen1.5 MHA at 128x32k) — standard serving practice.
+            per_chip = self_cache_bytes(cfg, shape) / mesh.devices.size
+            # fp8 KV quantization once the bf16 cache would eat >15% of HBM
+            # (leaves headroom for the decode working set) — standard
+            # serving practice; exactness tests cover the bf16 path.
+            if per_chip > 0.15 * 16 * 1024**3 and cfg.family != "ssm":
+                cache_dtype = jnp.float8_e4m3fn
+        ca = abstract_cache(arch, shape, dtype=cache_dtype)
+        csh = shmod.cache_shardings(ca, mesh)
+        out.cache = _with_sharding(ca, csh)
+        out.cache_sh = csh
+        dp = dp_axes(mesh)
+        n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+        tsh = NamedSharding(mesh, P(dp if shape.batch % n_dp == 0 else None))
+        out.tokens = jax.ShapeDtypeStruct((shape.batch,), jnp.int32, sharding=tsh)
+        out.tokens_sh = tsh
+    return out

@@ -1,0 +1,151 @@
+"""Shared model primitives: norms, RoPE, MLPs, embeddings, sharding hooks."""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hooks.  launch/shardings.py installs a policy dict
+# {logical_name: PartitionSpec}; models call maybe_shard(x, name).  Without a
+# policy (smoke tests) this is the identity.
+# ---------------------------------------------------------------------------
+_SHARDING_POLICY = threading.local()
+
+
+def current_policy() -> Optional[dict]:
+    return getattr(_SHARDING_POLICY, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(policy: dict):
+    prev = current_policy()
+    _SHARDING_POLICY.policy = policy
+    try:
+        yield
+    finally:
+        _SHARDING_POLICY.policy = prev
+
+
+def maybe_shard(x: jax.Array, name: str) -> jax.Array:
+    pol = current_policy()
+    if pol is None or name not in pol:
+        return x
+    return jax.lax.with_sharding_constraint(x, pol[name])
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in fp32, cast back)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_params(d: int, kind: str, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (supports partial rotary)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, rope_pct: float = 1.0) -> jax.Array:
+    rot = int(head_dim * rope_pct) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_pct: float = 1.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    rot = int(hd * rope_pct) // 2 * 2
+    if rot == 0:
+        return x
+    freqs = rope_freqs(hd, theta, rope_pct)  # (rot/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype) if rot < hd else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_apply(x, p, act: str):
+    if act in ("swiglu", "geglu"):
+        gate = x @ p["w_gate"]
+        up = x @ p["w_up"]
+        inner = (jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)) * up
+        return inner @ p["w_down"]
+    if act == "relu_sq":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def mlp_params(key, d: int, f: int, act: str, dtype) -> dict:
+    if act in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": he(k1, (d, f), dtype),
+            "w_up": he(k2, (d, f), dtype),
+            "w_down": he(k3, (f, d), dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    return {"w_up": he(k1, (d, f), dtype), "w_down": he(k2, (f, d), dtype)}
+
+
+def he(key, shape, dtype=jnp.float32, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL, fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]

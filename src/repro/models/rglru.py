@@ -1,0 +1,298 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA,
+pattern (recurrent, recurrent, local_attn) — the paper-pool "1:2" mix.
+
+Recurrent block: gated branch (GeLU) x (conv1d(4) -> RG-LRU) -> out proj;
+RG-LRU: a = exp(-c * softplus(L) * sigmoid(W_a x)), h = a h + sqrt(1-a^2)
+* (i (.) x).  Every temporal block is followed by a GeGLU MLP block.
+State is O(window + d_model) in sequence length -> long_500k in scope.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    apply_norm,
+    cross_entropy,
+    dtype_of,
+    embed_init,
+    he,
+    maybe_shard,
+    mlp_apply,
+    mlp_params,
+    norm_params,
+)
+
+RG_C = 8.0
+CONV_W = 4
+
+
+def _unit(cfg: ArchConfig) -> tuple[int, int]:
+    unit = len(cfg.block_pattern)
+    return cfg.n_layers // unit, cfg.n_layers % unit
+
+
+def init_rec_layer(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": norm_params(D, cfg.norm, jnp.float32),
+        "rec": {
+            "W_gate": he(ks[0], (D, D), dt),
+            "W_in": he(ks[1], (D, D), dt),
+            "conv": he(ks[2], (CONV_W, D), dt, 0.5),
+            "W_a": he(ks[3], (D, D), dt, 0.5),
+            "b_a": jnp.zeros((D,), jnp.float32),
+            "W_i": he(ks[4], (D, D), dt, 0.5),
+            "b_i": jnp.zeros((D,), jnp.float32),
+            "lam": jnp.full((D,), 0.655, jnp.float32),  # softplus^-1 tuning
+            "W_out": he(ks[5], (D, D), dt),
+        },
+        "ln2": norm_params(D, cfg.norm, jnp.float32),
+        "mlp": mlp_params(jax.random.fold_in(key, 7), D, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def init_attn_layer(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_params(cfg.d_model, cfg.norm, jnp.float32),
+        "attn": attn.attn_params(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dt, cfg.qkv_bias,
+        ),
+        "ln2": norm_params(cfg.d_model, cfg.norm, jnp.float32),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    n_units, n_tail = _unit(cfg)
+    ke, ku, kt, kh = jax.random.split(key, 4)
+    uks = jax.random.split(ku, n_units)
+    unit = {
+        "rec_a": jax.vmap(lambda k: init_rec_layer(cfg, jax.random.fold_in(k, 0)))(uks),
+        "rec_b": jax.vmap(lambda k: init_rec_layer(cfg, jax.random.fold_in(k, 1)))(uks),
+        "attn": jax.vmap(lambda k: init_attn_layer(cfg, jax.random.fold_in(k, 2)))(uks),
+    }
+    params = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dt),
+        "units": unit,
+        "final_norm": norm_params(cfg.d_model, cfg.norm, jnp.float32),
+        "lm_head": embed_init(kh, cfg.vocab_padded, cfg.d_model, dt).T,
+    }
+    if n_tail:
+        tks = jax.random.split(kt, n_tail)
+        params["tail_rec"] = jax.vmap(lambda k: init_rec_layer(cfg, k))(tks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+def rg_lru_scan(x: jax.Array, a: jax.Array, gated: jax.Array, h0: jax.Array):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) * gated_t, via associative scan.
+
+    x unused except shape; a, gated: (B,T,D) fp32; h0: (B,D).
+    """
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, beta), axis=1)
+    h = a_s * h0[:, None, :] + b_s
+    return h, h[:, -1]
+
+
+def rec_block(cfg: ArchConfig, x, rp, conv_state, h_state):
+    """x: (B,T,D). Returns (out, (new_conv_state, new_h))."""
+    gate = jax.nn.gelu(x @ rp["W_gate"])
+    u = x @ rp["W_in"]
+    # temporal conv width 4 (causal), carrying CONV_W-1 inputs across calls
+    hist = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)  # (B,T+3,D)
+    conv = sum(
+        hist[:, CONV_W - 1 - i : hist.shape[1] - i] * rp["conv"][CONV_W - 1 - i]
+        for i in range(CONV_W)
+    )
+    uf = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid((x @ rp["W_a"]).astype(jnp.float32) + rp["b_a"])
+    i = jax.nn.sigmoid((x @ rp["W_i"]).astype(jnp.float32) + rp["b_i"])
+    log_a = -RG_C * jax.nn.softplus(rp["lam"]) * r
+    a = jnp.exp(log_a)
+    h, h_last = rg_lru_scan(uf, a, i * uf, h_state)
+    out = (h.astype(x.dtype) * gate) @ rp["W_out"]
+    new_conv = hist[:, -(CONV_W - 1):].astype(jnp.float32)
+    return out, (new_conv, h_last)
+
+
+def _rec_layer_fwd(cfg, x, lp, states):
+    conv_s, h_s = states
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    out, new_states = rec_block(cfg, h, lp["rec"], conv_s, h_s)
+    x = x + out
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    x = x + maybe_shard(mlp_apply(h, lp["mlp"], cfg.act), "act_btd")
+    return x, new_states
+
+
+def _attn_layer_fwd(cfg, x, lp, positions):
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    h = attn.attention(
+        h, lp["attn"],
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, positions=positions,
+        causal=True, window=cfg.local_window,
+        rope_theta=cfg.rope_theta, rope_pct=cfg.rope_pct, use_rope=cfg.rope,
+    )
+    x = x + h
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    return x + maybe_shard(mlp_apply(h, lp["mlp"], cfg.act), "act_btd")
+
+
+def init_states(cfg: ArchConfig, batch: int):
+    n_units, n_tail = _unit(cfg)
+    D = cfg.d_model
+    def rec_state(n):
+        return (
+            jnp.zeros((n, batch, CONV_W - 1, D), jnp.float32),
+            jnp.zeros((n, batch, D), jnp.float32),
+        )
+    return {"a": rec_state(n_units), "b": rec_state(n_units),
+            "tail": rec_state(n_tail) if n_tail else None}
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
+            remat: bool = False, last_only: bool = False):
+    B, T = tokens.shape
+    x = maybe_shard(jnp.take(params["embed"], tokens, axis=0), "act_btd")
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    states = init_states(cfg, B)
+
+    rec_body = partial(_rec_layer_fwd, cfg)
+    attn_body = partial(_attn_layer_fwd, cfg)
+    if remat:
+        rec_body = jax.checkpoint(rec_body)
+        attn_body = jax.checkpoint(attn_body)
+
+    def unit_fn(x, inp):
+        up, sa_c, sa_h, sb_c, sb_h = inp
+        x, _ = rec_body(x, up["rec_a"], (sa_c, sa_h))
+        x, _ = rec_body(x, up["rec_b"], (sb_c, sb_h))
+        x = attn_body(x, up["attn"], positions)
+        return x, None
+
+    (sa_c, sa_h), (sb_c, sb_h) = states["a"], states["b"]
+    x, _ = jax.lax.scan(unit_fn, x, (params["units"], sa_c, sa_h, sb_c, sb_h))
+    if "tail_rec" in params:
+        tc, th = states["tail"]
+        def tail_fn(x, inp):
+            lp, c, h = inp
+            x, _ = rec_body(x, lp, (c, h))
+            return x, None
+        x, _ = jax.lax.scan(tail_fn, x, (params["tail_rec"], tc, th))
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return maybe_shard(x @ params["lm_head"], "act_btv")
+
+
+def loss(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False):
+    logits = forward(cfg, params, batch["tokens"], remat=remat)
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode: recurrent states + ring-buffer KV for local attention layers.
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or dtype_of(cfg.param_dtype)
+    n_units, n_tail = _unit(cfg)
+    D, K, hd = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    W = min(cfg.local_window or max_len, max_len)
+    def rec(n):
+        return {
+            "conv": jnp.zeros((n, batch, CONV_W - 1, D), jnp.float32),
+            "h": jnp.zeros((n, batch, D), jnp.float32),
+        }
+    return {
+        "rec_a": rec(n_units), "rec_b": rec(n_units),
+        "tail": rec(n_tail) if n_tail else None,
+        "k": jnp.zeros((n_units, batch, W, K, hd), dt),
+        "v": jnp.zeros((n_units, batch, W, K, hd), dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _rec_decode(cfg, x, lp, conv_s, h_s):
+    """One-token recurrent layer. x: (B,D)."""
+    h = apply_norm(x[:, None], lp["ln1"], cfg.norm)[:, 0]
+    rp = lp["rec"]
+    gate = jax.nn.gelu(h @ rp["W_gate"])
+    u = h @ rp["W_in"]
+    hist = jnp.concatenate([conv_s.astype(u.dtype), u[:, None]], axis=1)  # (B,4,D)
+    conv = sum(hist[:, CONV_W - 1 - i] * rp["conv"][CONV_W - 1 - i] for i in range(CONV_W))
+    uf = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid((h @ rp["W_a"]).astype(jnp.float32) + rp["b_a"])
+    i = jax.nn.sigmoid((h @ rp["W_i"]).astype(jnp.float32) + rp["b_i"])
+    a = jnp.exp(-RG_C * jax.nn.softplus(rp["lam"]) * r)
+    h_new = a * h_s + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i * uf)
+    out = (h_new.astype(x.dtype) * gate) @ rp["W_out"]
+    x = x + out
+    h2 = apply_norm(x[:, None], lp["ln2"], cfg.norm)[:, 0]
+    x = x + mlp_apply(h2, lp["mlp"], cfg.act)
+    return x, hist[:, 1:].astype(jnp.float32), h_new
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["len"]
+
+    def unit_fn(x, inp):
+        up, ca, ha, cb, hb, kc, vc = inp
+        x, ca, ha = _rec_decode(cfg, x, up["rec_a"], ca, ha)
+        x, cb, hb = _rec_decode(cfg, x, up["rec_b"], cb, hb)
+        lp = up["attn"]
+        h = apply_norm(x[:, None], lp["ln1"], cfg.norm)[:, 0]
+        h, kc, vc = attn.decode_attention(
+            h, lp["attn"], kc, vc, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=pos,
+            rope_theta=cfg.rope_theta, rope_pct=cfg.rope_pct,
+            use_rope=cfg.rope, window=cfg.local_window,
+        )
+        x = x + h
+        h = apply_norm(x[:, None], lp["ln2"], cfg.norm)[:, 0]
+        x = x + mlp_apply(h, lp["mlp"], cfg.act)
+        return x, (ca, ha, cb, hb, kc, vc)
+
+    x, (ca, ha, cb, hb, kc, vc) = jax.lax.scan(
+        unit_fn, x,
+        (params["units"], cache["rec_a"]["conv"], cache["rec_a"]["h"],
+         cache["rec_b"]["conv"], cache["rec_b"]["h"], cache["k"], cache["v"]),
+    )
+    new_cache = {
+        "rec_a": {"conv": ca, "h": ha}, "rec_b": {"conv": cb, "h": hb},
+        "tail": cache["tail"], "k": kc, "v": vc, "len": cache["len"] + 1,
+    }
+    if "tail_rec" in params:
+        def tail_fn(x, inp):
+            lp, c, h = inp
+            x, c, h = _rec_decode(cfg, x, lp, c, h)
+            return x, (c, h)
+        x, (tc, th) = jax.lax.scan(
+            tail_fn, x, (params["tail_rec"], cache["tail"]["conv"], cache["tail"]["h"])
+        )
+        new_cache["tail"] = {"conv": tc, "h": th}
+    x = apply_norm(x[:, None], params["final_norm"], cfg.norm)[:, 0]
+    logits = x @ params["lm_head"]
+    return logits, new_cache

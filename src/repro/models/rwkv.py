@@ -1,0 +1,263 @@
+"""RWKV6 "Finch" — attention-free RNN LM with data-dependent decay.
+
+Faithful structure: token-shift lerps, LoRA-modulated per-channel decay
+``w = exp(-exp(w0 + tanh(x @ A) @ B))``, per-head WKV state
+``S <- diag(w) S + k^T v`` with bonus ``u``, grouped head-norm + silu
+output gate, and squared-ReLU channel mixing.  Training runs a
+`lax.scan` over time (exact reference); the Pallas ``wkv6`` kernel
+provides the TPU chunked form.  State is O(1) in sequence length, so the
+long_500k shape is in scope (DESIGN.md §Arch-applicability), and the
+recurrent state is classified latency-bound -> pinned to the fast tier.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (
+    cross_entropy,
+    dtype_of,
+    embed_init,
+    he,
+    layer_norm,
+    maybe_shard,
+)
+
+LORA_RANK = 64
+
+
+def _heads(cfg: ArchConfig) -> tuple[int, int]:
+    hd = cfg.rwkv_head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_layer(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = _heads(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "ln1": {"scale": jnp.ones((D,), jnp.float32), "bias": jnp.zeros((D,), jnp.float32)},
+        "ln2": {"scale": jnp.ones((D,), jnp.float32), "bias": jnp.zeros((D,), jnp.float32)},
+        "tm": {
+            "mu_r": jnp.full((D,), 0.5, dt), "mu_k": jnp.full((D,), 0.5, dt),
+            "mu_v": jnp.full((D,), 0.5, dt), "mu_w": jnp.full((D,), 0.5, dt),
+            "mu_g": jnp.full((D,), 0.5, dt),
+            "w0": jnp.full((D,), -6.0, jnp.float32),
+            "w_A": he(ks[0], (D, LORA_RANK), dt, 0.1),
+            "w_B": he(ks[1], (LORA_RANK, D), dt, 0.1),
+            "u": jnp.zeros((H, hd), jnp.float32),
+            "Wr": he(ks[2], (D, D), dt), "Wk": he(ks[3], (D, D), dt),
+            "Wv": he(ks[4], (D, D), dt), "Wg": he(ks[5], (D, D), dt),
+            "Wo": he(ks[6], (D, D), dt),
+            "gn_scale": jnp.ones((H, hd), jnp.float32),
+            "gn_bias": jnp.zeros((H, hd), jnp.float32),
+        },
+        "cm": {
+            "mu_k": jnp.full((D,), 0.5, dt), "mu_r": jnp.full((D,), 0.5, dt),
+            "Wk": he(ks[7], (D, F), dt), "Wv": he(ks[8], (F, D), dt),
+            "Wr": he(ks[9], (D, D), dt),
+        },
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: init_layer(cfg, k))(jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                       "bias": jnp.zeros((cfg.d_model,), jnp.float32)},
+        "lm_head": embed_init(kh, cfg.vocab_padded, cfg.d_model, dt).T,
+    }
+
+
+def _group_norm(y: jax.Array, scale, bias, eps=64e-5):
+    """Per-head layer norm; y: (..., H, hd)."""
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    return (yf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _decay(tm: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay w in (0,1); xw: (..., D)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ tm["w_A"].astype(jnp.float32))
+    lora = lora @ tm["w_B"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(tm["w0"] + lora))
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Exact WKV6 recurrence over time.
+
+    r,k,w: (B,T,H,hd); v: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd).
+    Returns (y (B,T,H,hd) fp32, final state).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state, *, chunk: int = 16):
+    """Chunked WKV6: intra-chunk matrix form + inter-chunk state carry.
+
+    The TPU-native reformulation (mirrors the Pallas kernel's VMEM
+    blocking in pure JAX, so the dry run lowers it): per chunk, decay
+    ratios exp(L_{t-1} - L_s) for s < t are all <= 1 — numerically safe,
+    no 1/P blowup — and the recurrent state is read/written once per
+    CHUNK instead of once per token, cutting state HBM traffic by the
+    chunk length (EXPERIMENTS.md §Perf, rwkv hillclimb).
+    """
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    assert T % C == 0
+    n = T // C
+    f32 = jnp.float32
+    rs, ks, vs = (a.astype(f32).reshape(B, n, C, H, hd) for a in (r, k, v))
+    logw = jnp.log(jnp.maximum(w.astype(f32), 1e-38)).reshape(B, n, C, H, hd)
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)  # s < t
+
+    def per_chunk(S, inp):
+        rc, kc, vc, lw = inp  # (B,C,H,hd)
+        lam = jnp.cumsum(lw, axis=1)  # L_t (inclusive)
+        lam_prev = lam - lw  # L_{t-1}
+        rP = rc * jnp.exp(lam_prev)
+        y = jnp.einsum("bthi,bhij->bthj", rP, S)
+        diff = lam_prev[:, :, None] - lam[:, None, :]  # (B,t,s,H,hd), <= 0
+        dmat = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        coeff = jnp.einsum("bthi,btshi,bshi->btsh", rc, dmat, kc)
+        y = y + jnp.einsum("btsh,bshj->bthj", coeff, vc)
+        diag = jnp.einsum("bthi,hi,bthi->bth", rc, u.astype(f32), kc)
+        y = y + diag[..., None] * vc
+        lam_C = lam[:, -1:]
+        S = jnp.exp(lam_C[:, 0])[..., None] * S + jnp.einsum(
+            "bshi,bshj->bhij", kc * jnp.exp(lam_C - lam), vc)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, logw))
+    state, ys = jax.lax.scan(per_chunk, state.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * C, H, hd)
+    return y, state
+
+
+def _use_chunked() -> bool:
+    from repro.models.common import current_policy
+    pol = current_policy()
+    return bool(pol and pol.get("_wkv_chunked"))
+
+
+def time_mix(cfg: ArchConfig, x: jax.Array, tm: dict, state, shift_in):
+    """x: (B,T,D). Returns (out, (new_shift, new_state))."""
+    B, T, D = x.shape
+    H, hd = _heads(cfg)
+    xs = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)  # x_{t-1}
+    mix = lambda mu: x + (xs - x) * mu
+    r = (mix(tm["mu_r"]) @ tm["Wr"]).reshape(B, T, H, hd)
+    k = (mix(tm["mu_k"]) @ tm["Wk"]).reshape(B, T, H, hd)
+    v = (mix(tm["mu_v"]) @ tm["Wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(mix(tm["mu_g"]) @ tm["Wg"])
+    w = _decay(tm, mix(tm["mu_w"])).reshape(B, T, H, hd)
+    wkv = wkv_chunked if (_use_chunked() and T % 16 == 0) else wkv_scan
+    y, new_state = wkv(r, k, v, w, tm["u"], state)
+    y = _group_norm(y, tm["gn_scale"], tm["gn_bias"]).reshape(B, T, D)
+    out = (y.astype(x.dtype) * g) @ tm["Wo"]
+    return out, (x[:, -1], new_state)
+
+
+def channel_mix(x: jax.Array, cm: dict, shift_in):
+    xs = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xk = x + (xs - x) * cm["mu_k"]
+    xr = x + (xs - x) * cm["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ cm["Wk"]))
+    return jax.nn.sigmoid(xr @ cm["Wr"]) * (k @ cm["Wv"]), x[:, -1]
+
+
+def _layer_fwd(cfg: ArchConfig, x, lp, states):
+    tm_shift, cm_shift, wkv_state = states
+    h = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+    out, (tm_shift, wkv_state) = time_mix(cfg, h, lp["tm"], wkv_state, tm_shift)
+    x = x + out
+    h = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+    out, cm_shift = channel_mix(h, lp["cm"], cm_shift)
+    x = x + maybe_shard(out, "act_btd")
+    return x, (tm_shift, cm_shift, wkv_state)
+
+
+def init_states(cfg: ArchConfig, batch: int):
+    H, hd = _heads(cfg)
+    D = cfg.d_model
+    return (
+        jnp.zeros((cfg.n_layers, batch, D), jnp.float32),
+        jnp.zeros((cfg.n_layers, batch, D), jnp.float32),
+        jnp.zeros((cfg.n_layers, batch, H, hd, hd), jnp.float32),
+    )
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
+            states=None, remat: bool = False, return_states: bool = False,
+            last_only: bool = False):
+    B, T = tokens.shape
+    x = maybe_shard(jnp.take(params["embed"], tokens, axis=0), "act_btd")
+    if states is None:
+        states = init_states(cfg, B)
+    body = partial(_layer_fwd, cfg)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, inp):
+        lp, tm_s, cm_s, wkv_s = inp
+        x, new_states = body(x, lp, (tm_s.astype(x.dtype), cm_s.astype(x.dtype), wkv_s))
+        return x, new_states
+
+    x, new_states = jax.lax.scan(
+        scan_fn, x, (params["layers"],) + tuple(states)
+    )
+    if last_only:
+        x = x[:, -1:]
+    x = layer_norm(x, params["final_norm"]["scale"], params["final_norm"]["bias"])
+    logits = maybe_shard(x @ params["lm_head"], "act_btv")
+    if return_states:
+        return logits, new_states
+    return logits
+
+
+def loss(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False):
+    logits = forward(cfg, params, batch["tokens"], remat=remat)
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token per call; cache = recurrent states (O(1) in seq len).
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, dtype=None) -> dict:
+    tm, cm, wkv = init_states(cfg, batch)
+    return {"tm": tm, "cm": cm, "wkv": wkv, "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array):
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None]  # (B,1,D)
+
+    def scan_fn(x, inp):
+        lp, tm_s, cm_s, wkv_s = inp
+        x, ns = _layer_fwd(cfg, x, lp, (tm_s.astype(x.dtype), cm_s.astype(x.dtype), wkv_s))
+        return x, ns
+
+    x, (tm, cm, wkv) = jax.lax.scan(
+        scan_fn, x, (params["layers"], cache["tm"], cache["cm"], cache["wkv"])
+    )
+    x = layer_norm(x, params["final_norm"]["scale"], params["final_norm"]["bias"])
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"tm": tm, "cm": cm, "wkv": wkv, "len": cache["len"] + 1}

@@ -1,0 +1,187 @@
+"""Dense decoder-only transformer (qwen2.5/qwen1.5, starcoder2, stablelm,
+InternLM2-backbone).  Layers are scanned (stacked params, `lax.scan`) so
+HLO stays compact at 64 layers; remat is applied per layer for training.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    apply_norm,
+    cross_entropy,
+    dtype_of,
+    embed_init,
+    maybe_shard,
+    mlp_apply,
+    mlp_params,
+    norm_params,
+)
+
+
+def init_layer(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_params(cfg.d_model, cfg.norm, jnp.float32),
+        "attn": attn.attn_params(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dt, cfg.qkv_bias,
+        ),
+        "ln2": norm_params(cfg.d_model, cfg.norm, jnp.float32),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(cfg, k))(layer_keys)
+    params = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": norm_params(cfg.d_model, cfg.norm, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(kh, cfg.vocab_padded, cfg.d_model, dt).T
+    return params
+
+
+def _layer_fwd(cfg: ArchConfig, x, lp, positions):
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    h = attn.attention(
+        h, lp["attn"],
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, positions=positions,
+        causal=True, window=cfg.local_window,
+        rope_theta=cfg.rope_theta, rope_pct=cfg.rope_pct, use_rope=cfg.rope,
+    )
+    x = x + h
+    h = apply_norm(x, lp["ln2"], cfg.norm)
+    h = mlp_apply(h, lp["mlp"], cfg.act)
+    h = maybe_shard(h, "act_btd")
+    return x + h
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    *,
+    prefix_embeds: Optional[jax.Array] = None,  # (B, P, D) VLM stub input
+    remat: bool = False,
+    last_only: bool = False,  # prefill: logits for the final position only
+) -> jax.Array:
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    x = maybe_shard(x, "act_btd")
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    body = partial(_layer_fwd, cfg)
+    if remat:
+        body = jax.checkpoint(body, static_argnums=())
+
+    def scan_fn(x, lp):
+        return body(x, lp, positions), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return maybe_shard(logits, "act_btv")
+
+
+def loss(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False):
+    logits = forward(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"), remat=remat,
+    )
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or dtype_of(cfg.param_dtype)
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    T = min(max_len, cfg.local_window) if cfg.local_window else max_len
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, T, K, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, T, K, hd), dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,  # (B,) current token ids
+    *,
+    extra_partitions_fn=None,  # layer_idx -> [(k, v, valid)] tiered KV split
+) -> tuple[jax.Array, dict]:
+    """One token for every sequence in the batch. Returns (logits, cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, D)
+    pos = cache["len"]
+
+    def scan_fn(carry, inp):
+        x = carry
+        lp, kc, vc, idx = inp
+        h = apply_norm(x[:, None], lp["ln1"], cfg.norm)[:, 0]
+        extra = extra_partitions_fn(idx) if extra_partitions_fn else ()
+        h, kc, vc = attn.decode_attention(
+            h, lp["attn"], kc, vc, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=pos,
+            rope_theta=cfg.rope_theta, rope_pct=cfg.rope_pct,
+            use_rope=cfg.rope, window=cfg.local_window,
+            extra_partitions=extra,
+        )
+        x = x + h
+        h = apply_norm(x[:, None], lp["ln2"], cfg.norm)[:, 0]
+        x = x + mlp_apply(h, lp["mlp"], cfg.act)
+        return x, (kc, vc)
+
+    if extra_partitions_fn is None:
+        # fori + in-place dynamic updates: the (L,B,T,K,hd) cache stays a
+        # single donated buffer (a scan would double-buffer its carry).
+        def body(i, carry):
+            x, kc, vc = carry
+            lp = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False),
+                params["layers"])
+            ki = jax.lax.dynamic_index_in_dim(kc, i, 0, False)
+            vi = jax.lax.dynamic_index_in_dim(vc, i, 0, False)
+            x, (k2, v2) = scan_fn(x, (lp, ki, vi, i))
+            kc = jax.lax.dynamic_update_index_in_dim(kc, k2.astype(kc.dtype), i, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, v2.astype(vc.dtype), i, 0)
+            return x, kc, vc
+        x, k_new, v_new = jax.lax.fori_loop(
+            0, cfg.n_layers, body, (x, cache["k"], cache["v"]))
+    else:
+        # per-layer python loop when tier partitions differ per layer
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, (kc, vc) = scan_fn(x, (lp, cache["k"][i], cache["v"][i], i))
+            ks.append(kc)
+            vs.append(vc)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = apply_norm(x[:, None], params["final_norm"], cfg.norm)[:, 0]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
+    return logits, new_cache

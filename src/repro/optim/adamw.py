@@ -1,0 +1,83 @@
+"""AdamW with fp32 moments, global-norm clipping, decoupled weight decay."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        base = jnp.asarray(self.lr, jnp.float32)
+        return base * self.schedule(step) if self.schedule else base
+
+
+def init_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    ))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def moment_update(g, mu, nu, b1, b2):
+    gf = g.astype(jnp.float32)
+    return b1 * mu + (1 - b1) * gf, b2 * nu + (1 - b2) * gf * gf
+
+
+def param_update(p, mu_hat, nu_hat, lr, eps, wd):
+    pf = p.astype(jnp.float32)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + eps) + wd * pf
+    return (pf - lr * upd).astype(p.dtype)
+
+
+def apply(cfg: AdamWConfig, params, grads, state) -> tuple[dict, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cfg.lr_at(step)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        mu, nu = moment_update(g, mu, nu, cfg.b1, cfg.b2)
+        new_p = param_update(p, mu / c1, nu / c2, lr, cfg.eps, cfg.weight_decay)
+        return new_p, mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "step": step,
+        "mu": tdef.unflatten([o[1] for o in out]),
+        "nu": tdef.unflatten([o[2] for o in out]),
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,27 @@
+"""LR schedules (multiplicative factors on the base LR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f
+
+
+def warmup_linear(warmup_steps: int, total_steps: int, min_frac: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        return jnp.where(s < warmup_steps, warm, 1 - (1 - min_frac) * prog)
+    return f
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)

@@ -1,0 +1,112 @@
+"""Elastic re-meshing: re-plan mesh + tier placement when capacity changes.
+
+When a pod loses hosts (or gains them back), the runtime must (1) choose
+a new (data, model) factorization of the surviving chips, (2) re-run the
+bandwidth-aware placement planner against the *shrunken* fast-tier
+budget — exactly the paper's scenario of demand exceeding DRAM, where
+weighted interleaving to the slow tier absorbs the loss — and (3) emit a
+resharding plan mapping old checkpoint shards onto the new mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.planner import BufferReq, Plan, plan as plan_placement
+from repro.core.tiers import TierTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    n_chips: int
+    data: int
+    model: int
+    pods: int = 1
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.pods > 1 else (self.data, self.model)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+
+def choose_mesh(n_chips: int, *, model_parallel_hint: int = 16,
+                pods: int = 1) -> MeshPlan:
+    """Largest model axis <= hint that divides chips-per-pod; rest is data."""
+    per_pod = n_chips // pods
+    if per_pod * pods != n_chips:
+        raise ValueError("chips must divide evenly into pods")
+    model = min(model_parallel_hint, per_pod)
+    while per_pod % model:
+        model -= 1
+    return MeshPlan(n_chips=n_chips, data=per_pod // model, model=model, pods=pods)
+
+
+@dataclasses.dataclass
+class ReshardMove:
+    buffer: str
+    kind: str  # "repartition" | "tier_shift"
+    detail: str
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    old_mesh: MeshPlan
+    new_mesh: MeshPlan
+    placement: Plan
+    moves: list[ReshardMove]
+
+
+def replan(
+    old_mesh: MeshPlan,
+    surviving_chips: int,
+    buffers: Sequence[BufferReq],
+    topology: TierTopology,
+    *,
+    compute_seconds: float,
+    old_placement: Optional[Plan] = None,
+    reserve_fast_bytes: int = 0,
+) -> ElasticPlan:
+    """Plan the shrink/grow: new mesh + new tier placement + moves.
+
+    Per-chip state grows by old/new chip ratio; the planner decides how
+    much of that growth spills to the slow tier (N:M re-weighting).
+    """
+    new_mesh = choose_mesh(surviving_chips, model_parallel_hint=old_mesh.model,
+                           pods=old_mesh.pods if surviving_chips % old_mesh.pods == 0
+                           else 1)
+    growth = old_mesh.n_chips / new_mesh.n_chips
+    scaled = [
+        dataclasses.replace(
+            b, nbytes=int(b.nbytes * growth),
+            profile=dataclasses.replace(
+                b.profile,
+                bytes_read_per_step=b.profile.bytes_read_per_step * growth,
+                bytes_written_per_step=b.profile.bytes_written_per_step * growth,
+            ),
+        )
+        for b in buffers
+    ]
+    placement = plan_placement(
+        scaled, topology, compute_seconds=compute_seconds * growth,
+        reserve_fast_bytes=reserve_fast_bytes,
+    )
+    moves: list[ReshardMove] = []
+    if (new_mesh.data, new_mesh.model) != (old_mesh.data, old_mesh.model):
+        moves.append(ReshardMove(
+            "*", "repartition",
+            f"mesh {old_mesh.shape} -> {new_mesh.shape}: all-gather shards on "
+            f"dead hosts' peers, re-scatter to the new layout",
+        ))
+    for name, d in placement.decisions.items():
+        old_f = old_placement.slow_fraction(name) if old_placement and \
+            name in old_placement.decisions else 0.0
+        if abs(d.slow_fraction - old_f) > 1e-3:
+            moves.append(ReshardMove(
+                name, "tier_shift",
+                f"slow fraction {old_f:.1%} -> {d.slow_fraction:.1%} "
+                f"(bulk-mover demotion of {d.slow_fraction - old_f:+.1%} pages)",
+            ))
+    return ElasticPlan(old_mesh, new_mesh, placement, moves)

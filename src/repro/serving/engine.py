@@ -1,0 +1,158 @@
+"""Batched serving engine with continuous batching over slot-based decode.
+
+Requests occupy batch slots; each engine step decodes one token for
+every active slot (ragged lengths handled by the cache's valid masks).
+Per-request latency is tracked both as measured wall time and as
+*modeled* time on the target tier topology (compute + per-tier KV
+streaming via the calibrated perfmodel), which is what the Redis-
+analogue benchmark (Figs. 6-7) reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import perfmodel
+from repro.core.policy import MemPolicy
+from repro.core.tiers import OpClass, TierTopology
+from repro.serving.kv_cache import TieredKVCache, tiered_decode_step
+from repro.serving.sampler import sample_greedy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    modeled_seconds: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return (self.finished_at or time.perf_counter()) - self.submitted_at
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: dict,
+        *,
+        max_batch: int = 8,
+        max_len: int = 512,
+        policy: Optional[MemPolicy] = None,
+        topology: Optional[TierTopology] = None,
+        page_t: int = 64,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.topology = topology
+        policy = policy or MemPolicy.membind("fast")
+        self.cache = TieredKVCache.create(
+            cfg, max_batch, max_len, policy, page_t=page_t)
+        self._decode = jax.jit(
+            lambda p, c, t: tiered_decode_step(cfg, p, c, t))
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.queue: list[Request] = []
+        self._next_rid = 0
+        self.done: list[Request] = []
+        # modeled per-step seconds: per-tier KV streaming on the target HW
+        self._step_model_cache: Optional[dict] = None
+
+    # -- request management ---------------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new_tokens,
+                                  submitted_at=time.perf_counter()))
+        return rid
+
+    def _admit(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # prefill by decode-replay into this slot (exact; slot-local)
+                self._reset_slot(i)
+                for tok in req.prompt[:-1]:
+                    self._step_slot_token(i, tok)
+
+    def _reset_slot(self, i: int) -> None:
+        self.cache = dataclasses.replace(
+            self.cache, lengths=self.cache.lengths.at[i].set(0))
+
+    # -- stepping ---------------------------------------------------------------
+    def _current_tokens(self) -> jnp.ndarray:
+        toks = np.zeros((self.max_batch,), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            toks[i] = (req.generated[-1] if req.generated else req.prompt[-1])
+        return jnp.asarray(toks)
+
+    def _step_slot_token(self, i: int, token: int) -> None:
+        toks = np.zeros((self.max_batch,), np.int32)
+        toks[i] = token
+        logits, cache = self._decode(self.params, self.cache, jnp.asarray(toks))
+        # only slot i advances; rebuild lengths so other slots are unchanged
+        lengths = self.cache.lengths.at[i].add(1)
+        self.cache = dataclasses.replace(cache, lengths=lengths)
+
+    def modeled_step_seconds(self) -> float:
+        """Per-decode-step time on the target topology (compute ignored on
+        this CPU box; KV streaming dominates decode)."""
+        if self.topology is None:
+            return 0.0
+        rb = self.cache.read_bytes_per_step()
+        fast_t = rb["fast"] / perfmodel.stream_bandwidth(
+            self.topology.fast, OpClass.LOAD, 8)
+        slow = self.topology.slow
+        slow_t = rb["slow"] / perfmodel.stream_bandwidth(
+            slow, OpClass.LOAD, 4) if slow is not None and rb["slow"] else 0.0
+        # decode also pays one dependent hop into each tier holding pages
+        lat = self.topology.fast.chase_latency_ns * 1e-9
+        if slow is not None and rb["slow"]:
+            lat += slow.chase_latency_ns * 1e-9 * self.cfg.n_layers
+        return max(fast_t, slow_t) + lat
+
+    def step(self) -> int:
+        """Decode one token for all active slots. Returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, self._current_tokens())
+        step_model_s = self.modeled_step_seconds()
+        now = time.perf_counter()
+        toks = sample_greedy(logits)
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(toks[i]))
+            req.modeled_seconds += step_model_s
+            if req.first_token_at is None:
+                req.first_token_at = now
+            if len(req.generated) >= req.max_new_tokens:
+                req.finished_at = now
+                self.done.append(req)
+                self.slots[i] = None
+                self._reset_slot(i)
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done

@@ -1,0 +1,180 @@
+"""Tiered, page-interleaved KV cache + decode step (the Redis §5.1 analogue).
+
+The KV time axis is split into pages placed across (fast, slow) tiers by
+a MemPolicy — the paper's N:M weighted interleave applied to serving
+state.  Decode attends over both partitions and merges exactly via
+log-sum-exp (attention.merge_partials); per-step per-tier byte counts
+feed the perfmodel so benchmarks reproduce the paper's p99/QPS curves
+on this CPU-only box.
+
+Applies to the uniform-attention (dense/vlm/moe-attention) families;
+recurrent state (rwkv/rglru) is latency-bound and planner-pinned fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import MemPolicy
+from repro.models import attention as attn
+from repro.models.common import apply_norm, dtype_of, mlp_apply
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TieredKVCache:
+    k_fast: jax.Array  # (L, B, Tf, K, hd)
+    v_fast: jax.Array
+    k_slow: jax.Array  # (L, B, Ts, K, hd)
+    v_slow: jax.Array
+    lengths: jax.Array  # (B,)
+    # static addressing (from the policy's page assignment)
+    page_tier: jax.Array  # (n_pages,) int8
+    page_local: jax.Array  # (n_pages,)
+    pos_fast: jax.Array  # (Tf,) global position held by each fast slot
+    pos_slow: jax.Array  # (Ts,)
+    page_t: int
+
+    def tree_flatten(self):
+        children = (self.k_fast, self.v_fast, self.k_slow, self.v_slow,
+                    self.lengths, self.page_tier, self.page_local,
+                    self.pos_fast, self.pos_slow)
+        return children, (self.page_t,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, page_t=aux[0])
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def create(cls, cfg: ArchConfig, batch: int, max_len: int,
+               policy: MemPolicy, *, page_t: int = 256, dtype=None
+               ) -> "TieredKVCache":
+        dt = dtype or dtype_of(cfg.param_dtype)
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        page_t = min(page_t, max_len)
+        assert max_len % page_t == 0
+        n_pages = max_len // page_t
+        assign = policy.page_is_slow(n_pages).astype(np.int8)
+        page_local = np.zeros(n_pages, np.int32)
+        counters = [0, 0]
+        pos_parts: list[list[int]] = [[], []]
+        for p in range(n_pages):
+            t = int(assign[p])
+            page_local[p] = counters[t]
+            counters[t] += 1
+            pos_parts[t].extend(range(p * page_t, (p + 1) * page_t))
+        Tf = max(counters[0] * page_t, page_t)  # at least one page fast
+        Ts = counters[1] * page_t
+        pos_fast = np.full(Tf, np.iinfo(np.int32).max, np.int32)
+        pos_fast[: len(pos_parts[0])] = pos_parts[0]
+        pos_slow = np.asarray(pos_parts[1], np.int32) if Ts else np.zeros(0, np.int32)
+        return cls(
+            k_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
+            v_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
+            k_slow=jnp.zeros((L, batch, max(Ts, 0), K, hd), dt),
+            v_slow=jnp.zeros((L, batch, max(Ts, 0), K, hd), dt),
+            lengths=jnp.zeros((batch,), jnp.int32),
+            page_tier=jnp.asarray(assign, jnp.int8),
+            page_local=jnp.asarray(page_local, jnp.int32),
+            pos_fast=jnp.asarray(pos_fast),
+            pos_slow=jnp.asarray(pos_slow),
+            page_t=page_t,
+        )
+
+    # -- addressing -------------------------------------------------------------
+    def _route(self, pos: jax.Array):
+        page = pos // self.page_t
+        page = jnp.minimum(page, self.page_tier.shape[0] - 1)
+        tier = jnp.take(self.page_tier, page).astype(bool)
+        local = jnp.take(self.page_local, page) * self.page_t + pos % self.page_t
+        return tier, local
+
+    def slow_fraction(self) -> float:
+        return float(np.asarray(self.page_tier, np.float32).mean())
+
+    # -- per-step traffic (drives the latency/QPS simulation) ------------------
+    def read_bytes_per_step(self) -> dict[str, int]:
+        """Bytes streamed per decode step per tier (both K and V)."""
+        item = self.k_fast.dtype.itemsize
+        L, B, Tf, K, hd = self.k_fast.shape
+        Ts = self.k_slow.shape[2]
+        return {
+            "fast": 2 * L * B * Tf * K * hd * item,
+            "slow": 2 * L * B * Ts * K * hd * item,
+        }
+
+    # -- append + attend --------------------------------------------------------
+    def append_layer(self, layer: jax.Array, k_new: jax.Array, v_new: jax.Array):
+        """Scatter one token's K/V for one layer. k_new: (B, K, hd)."""
+        B = k_new.shape[0]
+        is_slow, local = self._route(self.lengths)
+        bidx = jnp.arange(B)
+        f_idx = jnp.where(is_slow, self.k_fast.shape[2], local)
+        s_idx = jnp.where(is_slow, local, self.k_slow.shape[2] or 1)
+        k_fast = self.k_fast.at[layer, bidx, f_idx].set(
+            k_new.astype(self.k_fast.dtype), mode="drop")
+        v_fast = self.v_fast.at[layer, bidx, f_idx].set(
+            v_new.astype(self.v_fast.dtype), mode="drop")
+        if self.k_slow.shape[2]:
+            k_slow = self.k_slow.at[layer, bidx, s_idx].set(
+                k_new.astype(self.k_slow.dtype), mode="drop")
+            v_slow = self.v_slow.at[layer, bidx, s_idx].set(
+                v_new.astype(self.v_slow.dtype), mode="drop")
+        else:
+            k_slow, v_slow = self.k_slow, self.v_slow
+        return dataclasses.replace(
+            self, k_fast=k_fast, v_fast=v_fast, k_slow=k_slow, v_slow=v_slow)
+
+    def partitions(self, layer: int):
+        """[(k, v, valid)] per tier for decode attention (post-append)."""
+        upto = self.lengths[:, None] + 1
+        parts = [(self.k_fast[layer], self.v_fast[layer],
+                  self.pos_fast[None, :] < upto)]
+        if self.k_slow.shape[2]:
+            parts.append((self.k_slow[layer], self.v_slow[layer],
+                          self.pos_slow[None, :] < upto))
+        return parts
+
+
+def tiered_decode_step(cfg: ArchConfig, params: dict, cache: TieredKVCache,
+                       tokens: jax.Array) -> tuple[jax.Array, TieredKVCache]:
+    """One decode step for the dense family over a tiered KV cache."""
+    B = tokens.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache.lengths
+
+    for li in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[li], params["layers"])
+        h = apply_norm(x[:, None], lp["ln1"], cfg.norm)[:, 0]
+        q = h @ lp["attn"]["wq"]
+        k = h @ lp["attn"]["wk"]
+        v = h @ lp["attn"]["wv"]
+        if "bq" in lp["attn"]:
+            q, k, v = (q + lp["attn"]["bq"], k + lp["attn"]["bk"],
+                       v + lp["attn"]["bv"])
+        q = q.reshape(B, H, hd)
+        k = k.reshape(B, K, hd)
+        v = v.reshape(B, K, hd)
+        if cfg.rope:
+            from repro.models.common import apply_rope
+            q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta, cfg.rope_pct)[:, 0]
+            k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta, cfg.rope_pct)[:, 0]
+        cache = cache.append_layer(li, k, v)
+        parts = [attn.attend_partial(q, kk, vv, valid)
+                 for (kk, vv, valid) in cache.partitions(li)]
+        o = attn.merge_partials(parts).astype(x.dtype)
+        x = x + o.reshape(B, H * hd) @ lp["attn"]["wo"]
+        h = apply_norm(x[:, None], lp["ln2"], cfg.norm)[:, 0]
+        x = x + mlp_apply(h, lp["mlp"], cfg.act)
+
+    x = apply_norm(x[:, None], params["final_norm"], cfg.norm)[:, 0]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, dataclasses.replace(cache, lengths=cache.lengths + 1)

@@ -1,0 +1,19 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(logits: jax.Array, key, temperature: float = 1.0):
+    return jax.random.categorical(key, logits / max(temperature, 1e-6), axis=-1)
+
+
+def sample_topk(logits: jax.Array, key, k: int = 40, temperature: float = 1.0):
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(key, vals / max(temperature, 1e-6), axis=-1)
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0]

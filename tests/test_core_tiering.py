@@ -1,0 +1,241 @@
+"""Core tiered-memory library tests: policy, interleave, planner, mover,
+classifier, ledger — including hypothesis property tests on the system's
+invariants (interleave addressing is a bijection; bag-reduce equals the
+untiered reduction; planner never overflows capacity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AccessProfile, Boundedness, BufferClass, BufferReq, BulkMover,
+    CapacityError, Descriptor, InterleavedTensor, MemPolicy, OpClass,
+    TierLedger, classify, paper_topology, plan, tpu_v5e_topology,
+)
+from repro.core import perfmodel
+from repro.core.mover import double_buffer
+
+
+# -- MemPolicy ---------------------------------------------------------------
+@given(st.integers(1, 63), st.integers(1, 200))
+@settings(max_examples=50, deadline=None)
+def test_weighted_interleave_ratio(m, n_pages):
+    """N:M page assignment hits the requested ratio within one cycle."""
+    pol = MemPolicy.weighted(("fast", "slow"), (64 - m, m))
+    assign = pol.assign_pages(n_pages)
+    assert assign.shape == (n_pages,)
+    frac = (assign == 1).mean()
+    assert abs(frac - m / 64) <= 64 / max(n_pages, 64)
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_from_slow_fraction_roundtrip(f):
+    pol = MemPolicy.from_slow_fraction("fast", "slow", f)
+    assert abs(pol.slow_fraction("fast") - f) < 1 / 32
+
+
+def test_paper_ratios():
+    """The paper's 30:1 (3.23%) and 9:1 (10%) interleave ratios."""
+    p = MemPolicy.weighted(("dram", "cxl"), (30, 1))
+    assert abs(p.slow_fraction("dram") - 0.0323) < 1e-3
+    p = MemPolicy.weighted(("dram", "cxl"), (9, 1))
+    assert abs(p.slow_fraction("dram") - 0.10) < 1e-9
+
+
+# -- InterleavedTensor --------------------------------------------------------
+@given(st.integers(1, 7), st.integers(1, 7), st.integers(2, 16),
+       st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_interleave_gather_bijection(wf, ws, page_rows, seed):
+    """gather(update(x)) round-trips for any N:M policy and page size."""
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(page_rows, 6 * page_rows))
+    x = jnp.asarray(rng.normal(size=(rows, 4)), jnp.float32)
+    it = InterleavedTensor.from_array(
+        x, MemPolicy.weighted(("fast", "slow"), (wf, ws)), page_rows)
+    assert np.allclose(it.to_array(), x)
+    idx = jnp.asarray(rng.integers(0, rows, size=8))
+    assert np.allclose(it.gather_rows(idx), x[np.asarray(idx)])
+    vals = jnp.ones((8, 4)) * 7.0
+    it2 = it.update_rows(idx, vals)
+    assert np.allclose(it2.gather_rows(idx), vals)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_interleave_bag_reduce_exact(seed):
+    """Tiered embedding-bag == untiered reduction (DLRM §5.2 invariant)."""
+    rng = np.random.default_rng(seed)
+    V, D, B, K = 64, 8, 4, 6
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, size=(B, K)))
+    w = jnp.asarray(rng.uniform(size=(B, K)), jnp.float32)
+    ref = jnp.einsum("bkd,bk->bd", table[idx], w)
+    for weights in [(1, 1), (3, 1), (1, 3)]:
+        it = InterleavedTensor.from_array(
+            table, MemPolicy.weighted(("fast", "slow"), weights), page_rows=4)
+        out = it.bag_reduce(idx, w)
+        assert np.allclose(out, ref, atol=1e-5)
+
+
+def test_interleave_with_kernel_reduce():
+    """The Pallas embedding_reduce kernel slots into the tiered container."""
+    from repro.kernels.embedding_reduce import ops
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, size=(4, 8)))
+    w = jnp.asarray(rng.uniform(size=(4, 8)), jnp.float32)
+    it = InterleavedTensor.from_array(
+        table, MemPolicy.weighted(("fast", "slow"), (1, 1)), page_rows=8)
+    out = it.bag_reduce(idx, w, reduce_fn=lambda t, i, ww:
+                        ops.embedding_reduce(t, i, ww))
+    ref = jnp.einsum("bkd,bk->bd", table[idx], w)
+    assert np.allclose(out, ref, atol=1e-4)
+
+
+def test_migrate_pages():
+    x = jnp.arange(80.0).reshape(20, 4)
+    it = InterleavedTensor.from_array(x, MemPolicy.membind("fast"), page_rows=4)
+    assert it.slow_fraction() == 0.0
+    it2 = it.migrate_pages(np.array([1, 3]), to_slow=True)
+    assert 0.3 < it2.slow_fraction() < 0.5
+    assert np.allclose(it2.to_array(), x)
+
+
+# -- classifier ---------------------------------------------------------------
+def test_classifier_redis_vs_dlrm():
+    """§6.1: Redis-like access is latency-bound; DLRM-like is bandwidth-bound."""
+    topo = paper_topology()
+    redis = AccessProfile(
+        bytes_read_per_step=4096, bytes_written_per_step=512,
+        dependent_chain=32, parallelism=1, granularity=64,
+        compute_seconds=2e-6, deadline_seconds=50e-6)
+    dlrm = AccessProfile(
+        bytes_read_per_step=2e9, bytes_written_per_step=0,
+        dependent_chain=1, parallelism=1024, granularity=256,
+        compute_seconds=0.01)
+    assert classify(redis, topo.slow) == Boundedness.LATENCY_BOUND
+    assert classify(dlrm, topo.slow) == Boundedness.BANDWIDTH_BOUND
+
+
+# -- planner -------------------------------------------------------------------
+def _req(name, klass, nbytes, rps, wps=0.0, chain=1, par=1024):
+    return BufferReq(name, klass, int(nbytes), AccessProfile(
+        rps, wps, chain, par, 2 << 20, 0.05))
+
+
+def test_planner_pins_latency_bound():
+    topo = tpu_v5e_topology()
+    reqs = [
+        _req("state", BufferClass.RECURRENT_STATE, 1 << 20, 1e6, 1e6, chain=64, par=1),
+        _req("opt", BufferClass.OPT_STATE, 30 << 30, 30e9, 30e9),
+    ]
+    p = plan(reqs, topo, compute_seconds=0.05)
+    assert p.slow_fraction("state") == 0.0
+    # must spill the ~14 GiB overflow (30 GiB demand vs 16 GiB HBM)
+    assert 0.40 < p.slow_fraction("opt") < 0.55
+
+
+def test_planner_never_overflows_fast_tier():
+    topo = tpu_v5e_topology()
+    reqs = [_req(f"b{i}", BufferClass.OPT_STATE, 4 << 30, 4e9) for i in range(6)]
+    p = plan(reqs, topo, compute_seconds=0.05, reserve_fast_bytes=2 << 30)
+    p.ledger.check()
+    used = p.ledger.used("hbm")
+    assert used <= topo.fast.capacity_bytes
+
+
+def test_planner_infeasible_raises():
+    topo = tpu_v5e_topology()
+    reqs = [_req("huge", BufferClass.OPT_STATE, 200 << 30, 1e9)]
+    with pytest.raises(MemoryError):
+        plan(reqs, topo, compute_seconds=0.05)
+
+
+@given(st.integers(1, 6), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_planner_capacity_property(n, seed):
+    """Whatever the workload, a feasible plan never overflows any tier."""
+    rng = np.random.default_rng(seed)
+    topo = tpu_v5e_topology()
+    reqs = [
+        _req(f"b{i}", BufferClass.OPT_STATE,
+             int(rng.uniform(0.1, 8) * 2**30), rng.uniform(1e8, 1e10))
+        for i in range(n)
+    ]
+    try:
+        p = plan(reqs, topo, compute_seconds=0.05)
+    except MemoryError:
+        return
+    p.ledger.check()
+
+
+# -- ledger --------------------------------------------------------------------
+def test_ledger_capacity_error():
+    topo = tpu_v5e_topology()
+    led = TierLedger(topo)
+    led.register("a", "hbm", 10 << 30)
+    with pytest.raises(CapacityError):
+        led.register("b", "hbm", 10 << 30)
+    led.release("a")
+    led.register("b", "hbm", 10 << 30)
+
+
+# -- mover ----------------------------------------------------------------------
+def test_mover_sync_async_equivalence():
+    topo = tpu_v5e_topology()
+    payloads = [jnp.full((128,), i, jnp.float32) for i in range(12)]
+    with BulkMover(topo, asynchronous=False, batch_size=4) as sync_m:
+        outs = sync_m.submit([Descriptor("host", "hbm", p) for p in payloads])
+        sync_res = [c.result for c in outs]
+    with BulkMover(topo, asynchronous=True, batch_size=4) as async_m:
+        async_m.submit([Descriptor("host", "hbm", p) for p in payloads])
+        comps = async_m.wait_all()
+    assert len(comps) == 12
+    for p, r in zip(payloads, sync_res):
+        assert np.allclose(p, r)
+
+
+def test_mover_modeled_cost_prefers_batching():
+    """Fig. 4b ordering: async >= sync; batched sync >= unbatched sync."""
+    topo = paper_topology()
+    small_pages = [Descriptor("cxl-agilex", "ddr5-l8", jnp.zeros((1024,)))
+                   for _ in range(64)]
+    t_sync1 = BulkMover(topo, asynchronous=False, batch_size=1).modeled_cost(small_pages)
+    t_sync128 = BulkMover(topo, asynchronous=False, batch_size=128).modeled_cost(small_pages)
+    t_async = BulkMover(topo, asynchronous=True, batch_size=128).modeled_cost(small_pages)
+    assert t_sync128 <= t_sync1
+    assert t_async <= t_sync128 * 1.01
+
+
+def test_double_buffer_order():
+    out = list(double_buffer(range(7), lambda i: i * i))
+    assert out == [i * i for i in range(7)]
+
+
+# -- perfmodel calibration (paper's headline numbers) ---------------------------
+def test_perfmodel_reproduces_paper_facts():
+    topo = paper_topology()
+    l8, cxl = topo.fast, topo.slow
+    # F1: latency ratios
+    assert abs(cxl.load_latency_ns / l8.load_latency_ns - 2.2) < 0.05
+    assert abs(cxl.chase_latency_ns / l8.chase_latency_ns - 3.7) < 0.05
+    # F2: CXL load bw collapses past 12 threads
+    bw8 = perfmodel.stream_bandwidth(cxl, OpClass.LOAD, 8)
+    bw16 = perfmodel.stream_bandwidth(cxl, OpClass.LOAD, 16)
+    assert bw16 < bw8
+    assert abs(bw16 / 1e9 - 16.8) < 3.0  # paper: drops to ~16.8 GB/s
+    # nt-store peaks at 2 threads near DDR4-2666 theoretical max
+    nt2 = perfmodel.stream_bandwidth(cxl, OpClass.NT_STORE, 2)
+    assert abs(nt2 / 1e9 - 22) < 2.0
+    assert perfmodel.stream_bandwidth(cxl, OpClass.NT_STORE, 8) < nt2
+    # F3: RFO makes temporal stores to CXL cost 2x the traffic
+    assert perfmodel.store_traffic_bytes(cxl, 1000, OpClass.STORE) == 2000
+    assert perfmodel.store_traffic_bytes(cxl, 1000, OpClass.NT_STORE) == 1000
+    # F5: random block bw converges to sequential with block size
+    r1k = perfmodel.random_block_bandwidth(cxl, OpClass.LOAD, 1024, 4)
+    r64k = perfmodel.random_block_bandwidth(cxl, OpClass.LOAD, 65536, 4)
+    seq = perfmodel.stream_bandwidth(cxl, OpClass.LOAD, 4)
+    assert r1k < r64k <= seq
