@@ -5,6 +5,11 @@ tier characterization (tiers/perfmodel/memo), placement policies
 (policy/planner/classifier), page interleaving (interleave), bulk
 movement (mover), and capacity accounting (ledger).
 """
+from repro.core.caption import (
+    CaptionConfig,
+    CaptionController,
+    EpochMetrics,
+)
 from repro.core.classifier import AccessProfile, Boundedness, classify
 from repro.core.interleave import InterleavedTensor
 from repro.core.ledger import CapacityError, TierLedger
@@ -25,6 +30,7 @@ from repro.core.tiers import (
 )
 
 __all__ = [
+    "CaptionConfig", "CaptionController", "EpochMetrics",
     "AccessProfile", "Boundedness", "classify",
     "InterleavedTensor", "CapacityError", "TierLedger",
     "BulkMover", "Descriptor", "double_buffer",

@@ -1,0 +1,311 @@
+"""Caption (§7): feedback-driven dynamic tiering via counter sampling.
+
+The paper's headline proposal: instead of committing to one static
+interleave ratio, sample hardware counters every epoch and *converge*
+to an empirically favorable slow-tier percentage (up to +24% for
+bandwidth-bound apps, Fig. 11).  ``CaptionController`` is that loop as
+a small state machine over :class:`~repro.core.telemetry.EpochCounters`
+style samples:
+
+  PROBE    perturb the slow-tier fraction by one hill-climbing step;
+  MEASURE  hold the candidate for ``probe_epochs`` windows, smoothing
+           the throughput signal with an EWMA (Caption's measurement
+           module — one noisy PMU window never decides anything);
+  ADJUST   compare against the previous operating point with a
+           hysteresis band: keep climbing on improvement, back off and
+           halve the step on regression, declare convergence when the
+           step underflows.
+
+The §6 guardrails are first-class:
+  * latency-bound profiles never gain slow-tier pages (Fig. 7: any CXL
+    fraction hurts a µs-SLO app) — the controller only walks toward the
+    fast tier;
+  * write-heavy epochs damp the step toward the slow tier by the
+    store/load bandwidth ratio (RFO doubles temporal-store traffic);
+  * epochs that exceed the writer limit freeze growth of the slow
+    fraction (concurrent writers collapse the CXL controller, Fig. 3);
+  * the capacity floor from the static plan is a hard lower bound — the
+    controller can tune *how much more* than the spill minimum lives on
+    the slow tier, never less than fits.
+
+The static planner supplies the *initial* state (``from_plan``), so the
+one-shot §6 plan is the cold-start prior, not the final answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import TYPE_CHECKING, Optional
+
+from repro.core.classifier import Boundedness
+from repro.core.tiers import TierTopology
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.planner import Plan
+
+
+class Phase(enum.Enum):
+    WARMUP = "warmup"  # first operating point, no comparison baseline yet
+    MEASURE = "measure"  # accumulating epochs at the current fraction
+    ADJUST = "adjust"  # a decision was taken this epoch
+    CONVERGED = "converged"  # step underflowed; holding
+
+
+@dataclasses.dataclass(frozen=True)
+class CaptionConfig:
+    """Knobs of the control loop (documented in ROADMAP.md)."""
+
+    #: application steps per observation epoch (the PMU window length).
+    epoch_steps: int = 16
+    #: epochs to hold each candidate fraction before judging it.
+    probe_epochs: int = 2
+    #: initial hill-climbing step, in slow-fraction points.
+    step: float = 0.05
+    #: convergence threshold: the walk stops once the step halves below.
+    min_step: float = 0.01
+    #: relative throughput change that counts as signal (hysteresis band).
+    hysteresis: float = 0.02
+    #: EWMA smoothing factor for the throughput signal.
+    ewma_alpha: float = 0.5
+    #: hard ceiling on the slow-tier fraction.
+    max_fraction: float = 0.95
+    #: writer-concurrency limit; above it the slow fraction cannot grow.
+    writer_limit: int = 2
+    #: fast-tier pressure above which pages are not pulled back fast.
+    pressure_high: float = 0.95
+    #: damp growth steps by write share (RFO/store-bandwidth guardrail).
+    write_damp: bool = True
+
+    def __post_init__(self):
+        if self.epoch_steps < 1:
+            raise ValueError("epoch_steps must be >= 1")
+        if self.probe_epochs < 1:
+            raise ValueError("probe_epochs must be >= 1")
+        if not 0.0 < self.step <= 1.0:
+            raise ValueError("step must be in (0, 1]")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if not 0.0 <= self.max_fraction <= 1.0:
+            raise ValueError("max_fraction must be in [0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochMetrics:
+    """What one epoch tells the controller (derived from EpochCounters)."""
+
+    #: application progress per second (tokens/s, samples/s, steps/s...).
+    throughput: float
+    #: written / (read + written) bytes this epoch.
+    write_ratio: float = 0.0
+    #: peak concurrent writers into the slow tier this epoch.
+    writer_concurrency: int = 0
+    #: fast-tier occupancy in [0, 1].
+    fast_pressure: float = 0.0
+
+    @staticmethod
+    def from_counters(counters, *, throughput: float,
+                      slow_name: str = "slow") -> "EpochMetrics":
+        """Derive the guardrail inputs from an EpochCounters window."""
+        into_slow = counters.bytes_into(slow_name)
+        from_slow = counters.bytes_from(slow_name)
+        total = into_slow + from_slow
+        return EpochMetrics(
+            throughput=throughput,
+            write_ratio=into_slow / total if total else 0.0,
+            writer_concurrency=int(
+                counters.gauges.get("writer_concurrency", 0)),
+            fast_pressure=float(counters.gauges.get("fast_pressure", 0.0)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Outcome of one observed epoch."""
+
+    fraction: float
+    changed: bool
+    phase: Phase
+    reason: str
+
+
+class CaptionController:
+    """Hill-climbing slow-fraction controller with hysteresis (§7)."""
+
+    def __init__(
+        self,
+        topology: TierTopology,
+        config: Optional[CaptionConfig] = None,
+        *,
+        initial_fraction: float = 0.0,
+        min_fraction: float = 0.0,
+        boundedness: Boundedness = Boundedness.BANDWIDTH_BOUND,
+    ):
+        self.topology = topology
+        self.cfg = config or CaptionConfig()
+        self.boundedness = boundedness
+        self.min_fraction = min(max(min_fraction, 0.0), self.cfg.max_fraction)
+        self.fraction = min(max(initial_fraction, self.min_fraction),
+                            self.cfg.max_fraction)
+        self.phase = Phase.WARMUP
+        # Latency-bound state starts walking home to the fast tier; anything
+        # else probes toward the slow tier from its static prior.
+        self._dir = -1.0 if self.latency_bound else 1.0
+        self._step = self.cfg.step
+        self._ewma: Optional[float] = None
+        self._epochs_here = 0
+        self._prev: Optional[tuple[float, float]] = None  # (fraction, tput)
+        self.history: list[Decision] = []
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def latency_bound(self) -> bool:
+        return self.boundedness == Boundedness.LATENCY_BOUND
+
+    @property
+    def converged(self) -> bool:
+        return self.phase == Phase.CONVERGED
+
+    @classmethod
+    def from_plan(cls, plan: "Plan", buffer: str, topology: TierTopology,
+                  config: Optional[CaptionConfig] = None
+                  ) -> "CaptionController":
+        """Seed the loop with the static planner's decision for ``buffer``:
+        its fraction is the cold-start prior, its capacity spill is the
+        floor, and its boundedness selects the latency guardrail."""
+        d = plan.decisions[buffer]
+        return cls(
+            topology, config,
+            initial_fraction=d.slow_fraction,
+            min_fraction=d.min_slow_fraction,
+            boundedness=d.boundedness,
+        )
+
+    # -- the loop ------------------------------------------------------------
+    def observe_window(self, window, throughput: float, *,
+                       mover=None, fast_pressure: Optional[float] = None,
+                       slow_name: Optional[str] = None,
+                       seconds: Optional[float] = None) -> Decision:
+        """One epoch straight from an EpochWindow: publish the standard
+        gauges, close the window, derive metrics, decide.  The shared
+        glue for every integration point (serving engine, train driver)."""
+        if fast_pressure is not None:
+            window.gauge("fast_pressure", fast_pressure)
+        if mover is not None:
+            window.gauge("writer_concurrency", mover.take_peak_writers())
+            if slow_name is None and mover.topology.slow is not None:
+                slow_name = mover.topology.slow.name
+        counters = window.tick(seconds=seconds)
+        return self.observe(EpochMetrics.from_counters(
+            counters, throughput=throughput, slow_name=slow_name or "slow"))
+
+    def actuated(self, fraction: float) -> None:
+        """Feed back what the actuator actually achieved.
+
+        Page-granular actuation rounds the requested fraction (a step
+        smaller than one page moves nothing); the walk must continue from
+        the real operating point, not the phantom request, or throughput
+        measurements get attributed to fractions the system never ran."""
+        self.fraction = float(fraction)
+
+    def observe(self, metrics: EpochMetrics) -> Decision:
+        """Feed one epoch; returns the (possibly updated) target fraction."""
+        a = self.cfg.ewma_alpha
+        self._ewma = (metrics.throughput if self._ewma is None
+                      else a * metrics.throughput + (1 - a) * self._ewma)
+        self._epochs_here += 1
+        if self.phase == Phase.CONVERGED:
+            return self._emit(False, "converged; holding")
+        if self._epochs_here < self.cfg.probe_epochs:
+            return self._emit(False, "measuring", phase=Phase.MEASURE)
+        return self._adjust(metrics)
+
+    def _adjust(self, metrics: EpochMetrics) -> Decision:
+        cur_t = float(self._ewma)
+        reason = ""
+        if self._prev is not None:
+            prev_f, prev_t = self._prev
+            rel = (cur_t - prev_t) / max(abs(prev_t), 1e-12)
+            if rel < -self.cfg.hysteresis:
+                # Regression: back off to the better point, reverse, shrink.
+                # A latency-bound buffer may only ever revert DOWNWARD (the
+                # monotone guardrail beats the hill-climber's memory).
+                self._dir, self._step = -self._dir, self._step / 2
+                back = (min(prev_f, self.fraction) if self.latency_bound
+                        else prev_f)
+                if self._step < self.cfg.min_step:
+                    return self._move_to(back, Phase.CONVERGED,
+                                         "regressed; step underflow -> hold "
+                                         f"at {back:.3f}")
+                return self._move_to(back, Phase.ADJUST,
+                                     f"regressed {rel*100:+.1f}%; revert + "
+                                     "reverse")
+            if rel <= self.cfg.hysteresis:
+                # Flat within hysteresis: the gradient is gone; shrink.
+                self._step /= 2
+                if self._step < self.cfg.min_step:
+                    return self._move_to(self.fraction, Phase.CONVERGED,
+                                         "flat; converged")
+                reason = f"flat ({rel*100:+.1f}%); refining"
+            else:
+                reason = f"improved {rel*100:+.1f}%; continue"
+        else:
+            reason = "cold start; probing"
+
+        delta = self._dir * self._step
+        delta, guard = self._guardrails(delta, metrics)
+        target = min(max(self.fraction + delta, self.min_fraction),
+                     self.cfg.max_fraction)
+        if guard:
+            reason = f"{reason} [{guard}]"
+        if target == self.fraction:
+            # Pinned against a bound or frozen by a guardrail; if the walk
+            # cannot move it is done.
+            phase = Phase.CONVERGED if self._at_bound() else Phase.ADJUST
+            return self._move_to(target, phase, reason + "; immovable")
+        return self._move_to(target, Phase.ADJUST, reason)
+
+    def _guardrails(self, delta: float, m: EpochMetrics) -> tuple[float, str]:
+        notes = []
+        if self.latency_bound and delta > 0:
+            # Guideline 5 / Fig. 7: never grow the slow share of a
+            # latency-bound buffer.
+            delta = 0.0
+            notes.append("latency-bound: growth pinned")
+        if delta > 0 and m.writer_concurrency > self.cfg.writer_limit:
+            delta = 0.0
+            notes.append(
+                f"writers {m.writer_concurrency} > {self.cfg.writer_limit}")
+        if delta > 0 and self.cfg.write_damp and m.write_ratio > 0:
+            slow = self.topology.slow
+            if slow is not None:
+                damp = 1.0 - m.write_ratio * (1.0 - slow.store_bw / slow.load_bw)
+                delta *= max(damp, 0.0)
+                if damp < 1.0:
+                    notes.append(f"write-damped x{damp:.2f}")
+        if delta < 0 and m.fast_pressure >= self.cfg.pressure_high:
+            delta = 0.0
+            notes.append(
+                f"fast pressure {m.fast_pressure:.2f}: shrink frozen")
+        return delta, "; ".join(notes)
+
+    def _at_bound(self) -> bool:
+        lo, hi = self.min_fraction, self.cfg.max_fraction
+        return ((self.fraction <= lo and self._dir < 0)
+                or (self.fraction >= hi and self._dir > 0))
+
+    def _move_to(self, target: float, phase: Phase, reason: str) -> Decision:
+        changed = abs(target - self.fraction) > 1e-12
+        self._prev = (self.fraction, float(self._ewma))
+        self.fraction = target
+        self.phase = phase
+        self._ewma = None
+        self._epochs_here = 0
+        return self._emit(changed, reason, phase=phase)
+
+    def _emit(self, changed: bool, reason: str,
+              phase: Optional[Phase] = None) -> Decision:
+        if phase is not None:
+            self.phase = phase
+        d = Decision(self.fraction, changed, self.phase, reason)
+        self.history.append(d)
+        return d

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,23 @@ import numpy as np
 from repro.core.ledger import TierLedger
 from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
+
+
+def tier_page_map(assign: np.ndarray) -> tuple[np.ndarray, np.ndarray, list[int]]:
+    """(assign01, local index within owning tier, per-tier page counts).
+
+    The one place the page->tier bookkeeping lives: tiers beyond the
+    second collapse onto slow for storage, and each page's local index
+    is its arrival order within its tier.  Shared by construction and
+    repartition here and by the tiered KV cache.
+    """
+    assign01 = np.minimum(np.asarray(assign), 1).astype(np.int8)
+    local = np.zeros(len(assign01), np.int32)
+    counters = [0, 0]
+    for p, t in enumerate(assign01):
+        local[p] = counters[t]
+        counters[t] += 1
+    return assign01, local, counters
 
 
 @jax.tree_util.register_pytree_node_class
@@ -66,24 +83,13 @@ class InterleavedTensor:
     ) -> "InterleavedTensor":
         rows = array.shape[0]
         n_pages = max(1, math.ceil(rows / page_rows))
-        if hasattr(policy, "page_is_slow"):
-            assign = policy.page_is_slow(n_pages).astype(np.int8)
-        else:  # _ExplicitAssignment adapter
-            assign = policy.assign_pages(n_pages)
-        page_local = np.zeros(n_pages, dtype=np.int32)
-        counters = [0, 0]
-        for p in range(n_pages):
-            t = int(assign[p])
-            t = 1 if t >= 1 else 0  # >2 tiers collapse onto slow for storage
-            page_local[p] = counters[t]
-            counters[t] += 1
+        assign01, page_local, _ = tier_page_map(policy.page_is_slow(n_pages))
         pad_rows = n_pages * page_rows - rows
         feature = array.shape[1:]
         padded = jnp.concatenate(
             [array, jnp.zeros((pad_rows,) + feature, array.dtype)], axis=0
         ) if pad_rows else array
         paged = padded.reshape((n_pages, page_rows) + feature)
-        assign01 = np.minimum(assign, 1)
         fast_ids = np.nonzero(assign01 == 0)[0]
         slow_ids = np.nonzero(assign01 == 1)[0]
         def take_pages(ids):
@@ -135,6 +141,8 @@ class InterleavedTensor:
     def gather_rows(self, idx: jax.Array) -> jax.Array:
         """rows[idx] — routed gather across both tiers."""
         is_slow, local = self._route(idx)
+        if self.fast.shape[0] == 0:  # everything slow (membind-slow / f=1.0)
+            return jnp.take(self.slow, local, axis=0, mode="clip")
         from_fast = jnp.take(self.fast, local, axis=0, mode="clip")
         if self.slow.shape[0] == 0:
             return from_fast
@@ -184,15 +192,21 @@ class InterleavedTensor:
         if weights is None:
             weights = jnp.ones(indices.shape, self.fast.dtype)
         is_slow, local = self._route(indices)
-        w_fast = jnp.where(is_slow, 0, weights).astype(self.fast.dtype)
-        local_fast = jnp.minimum(local, max(self.fast.shape[0] - 1, 0))
         if reduce_fn is None:
             reduce_fn = _jnp_bag_reduce
-        out = reduce_fn(self.fast, local_fast, w_fast)
+        out = None
+        if self.fast.shape[0]:
+            w_fast = jnp.where(is_slow, 0, weights).astype(self.fast.dtype)
+            local_fast = jnp.minimum(local, self.fast.shape[0] - 1)
+            out = reduce_fn(self.fast, local_fast, w_fast)
         if self.slow.shape[0]:
             w_slow = jnp.where(is_slow, weights, 0).astype(self.slow.dtype)
             local_slow = jnp.minimum(local, self.slow.shape[0] - 1)
-            out = out + reduce_fn(self.slow, local_slow, w_slow)
+            part = reduce_fn(self.slow, local_slow, w_slow)
+            out = part if out is None else out + part
+        if out is None:  # zero-row tensor
+            feat = self.fast.shape[1:]
+            out = jnp.zeros((indices.shape[0],) + feat, self.fast.dtype)
         return out
 
     # -- migration (TPP-style page moves; used by elastic re-planning) -------
@@ -205,6 +219,102 @@ class InterleavedTensor:
         return InterleavedTensor.from_array(
             jnp.asarray(dense), policy_like, self.page_rows
         )
+
+    def repartition(
+        self,
+        policy: MemPolicy,
+        *,
+        mover=None,  # Optional[BulkMover]
+        fast_tier: str = "fast",
+        slow_tier: str = "slow",
+        telemetry: Telemetry = GLOBAL_TELEMETRY,
+    ) -> "InterleavedTensor":
+        """Re-tier under ``policy``, migrating ONLY the delta pages.
+
+        The Caption controller's actuation path: diff the current
+        page->tier map against the policy's and ship just the changed
+        pages between tiers — through the
+        :class:`~repro.core.mover.BulkMover` when one is given (batched,
+        cache-bypass descriptors, writer-limited), else accounted directly
+        to telemetry.  Unchanged pages are recompacted within their own
+        tier and never cross the interconnect, so inter-tier traffic
+        equals ``delta_pages * page_bytes`` exactly (asserted by
+        benchmarks/fig11_caption.py).
+
+        Numerically a no-op: ``to_array()`` before == after.
+        """
+        n = self.n_pages
+        new_assign = np.asarray(policy.page_is_slow(n), np.int8)
+        old_assign = np.asarray(self.page_tier)
+        delta = np.nonzero(new_assign != old_assign)[0]
+        if delta.size == 0:
+            return self
+
+        feature = self.fast.shape[1:]
+        old_local = np.asarray(self.page_local)
+        fast_paged = np.asarray(self.fast).reshape((-1, self.page_rows) + feature)
+        slow_paged = np.asarray(self.slow).reshape((-1, self.page_rows) + feature)
+
+        def old_page(p: int) -> np.ndarray:
+            part = slow_paged if old_assign[p] else fast_paged
+            return part[old_local[p]]
+
+        # Ship only the delta through the movement engine.
+        moved: dict[int, Any] = {}
+        page_bytes = self.page_rows * self.row_bytes
+        if mover is not None:
+            from repro.core.mover import Descriptor
+            descs = [
+                Descriptor(
+                    src_tier=slow_tier if old_assign[p] else fast_tier,
+                    dst_tier=fast_tier if old_assign[p] else slow_tier,
+                    payload=jnp.asarray(old_page(p)),
+                    on_done=lambda r, p=int(p): moved.__setitem__(p, r),
+                )
+                for p in delta
+            ]
+            mover.submit(descs)
+            if mover.asynchronous:
+                mover.wait_all()
+        else:
+            for p in delta:
+                src = slow_tier if old_assign[p] else fast_tier
+                dst = fast_tier if old_assign[p] else slow_tier
+                telemetry.record_move(src, dst, page_bytes, 0.0)
+                moved[int(p)] = old_page(p)
+
+        new_assign, new_local, _ = tier_page_map(new_assign)
+        parts: list[list[np.ndarray]] = [[], []]
+        for p in range(n):
+            parts[int(new_assign[p])].append(
+                np.asarray(moved[p]) if p in moved else old_page(p))
+
+        def stack(pages: list[np.ndarray]) -> jax.Array:
+            if not pages:
+                return jnp.zeros((0,) + feature, self.fast.dtype)
+            return jnp.asarray(
+                np.stack(pages).reshape((-1,) + feature), self.fast.dtype)
+
+        return dataclasses.replace(
+            self,
+            fast=stack(parts[0]),
+            slow=stack(parts[1]),
+            page_tier=jnp.asarray(new_assign, jnp.int8),
+            page_local=jnp.asarray(new_local, jnp.int32),
+        )
+
+    def repartition_fraction(self, fraction: float, **kwargs
+                             ) -> "InterleavedTensor":
+        """Re-tier to ``fraction`` slow with the minimal page delta.
+
+        Unlike ``repartition(MemPolicy.from_slow_fraction(...))`` — whose
+        N:M pattern can disagree with the current map on many pages — this
+        flips exactly ``|target - current|`` pages (evenly spread), so the
+        controller's small adjustments stay cheap.
+        """
+        assign = minimal_delta_assignment(
+            np.asarray(self.page_tier), fraction)
+        return self.repartition(_ExplicitAssignment(assign), **kwargs)
 
     def to_array(self) -> jax.Array:
         """Materialize the logical array (tests / checkpointing)."""
@@ -242,6 +352,38 @@ class _ExplicitAssignment:
         if n_pages != len(self._assignment):
             raise ValueError("page count mismatch")
         return self._assignment
+
+    def page_is_slow(self, n_pages: int) -> np.ndarray:
+        return self.assign_pages(n_pages).astype(bool)
+
+
+def minimal_delta_assignment(current: np.ndarray, fraction: float) -> np.ndarray:
+    """New page->tier map hitting ``fraction`` slow with the FEWEST flips.
+
+    The Caption actuation helper: two N:M interleave patterns at nearby
+    ratios can disagree on far more pages than the ratio delta, so the
+    controller flips exactly ``|target - current|`` pages instead,
+    spreading the flipped pages evenly (interleave discipline: clustered
+    slow pages would serialize on one tier for strided access).
+    """
+    cur = np.asarray(current, np.int8)
+    n = len(cur)
+    target = int(round(min(max(fraction, 0.0), 1.0) * n))
+    cur_slow = int(cur.sum())
+    if target == cur_slow:
+        return cur.copy()
+    out = cur.copy()
+    if target > cur_slow:
+        cands = np.nonzero(cur == 0)[0]
+        k = target - cur_slow
+        new_tier = 1
+    else:
+        cands = np.nonzero(cur == 1)[0]
+        k = cur_slow - target
+        new_tier = 0
+    pick = cands[(np.arange(k) * len(cands)) // k]  # even spread, distinct
+    out[pick] = new_tier
+    return out
 
 
 def _jnp_bag_reduce(table: jax.Array, indices: jax.Array, weights: jax.Array):

@@ -86,6 +86,11 @@ class BulkMover:
         self._execute = execute
         self._write_sem = threading.Semaphore(max_writers)
         self._read_sem = threading.Semaphore(max_readers)
+        # Writer-concurrency watermark: the §6 "limit concurrent writers"
+        # signal a controller (core/caption.py) reads each epoch.
+        self._writer_lock = threading.Lock()
+        self._active_writers = 0
+        self.peak_writers = 0
         self._queue: "queue.Queue[Optional[list[Descriptor]]]" = queue.Queue()
         self._completions: "queue.Queue[Completion]" = queue.Queue()
         self._pending = 0
@@ -128,8 +133,18 @@ class BulkMover:
             writes_slow = self._tier(d.dst_tier).link_bw is not None
             sem = self._write_sem if writes_slow else self._read_sem
             with _acquired(sem):
+                if writes_slow:
+                    with self._writer_lock:
+                        self._active_writers += 1
+                        self.peak_writers = max(self.peak_writers,
+                                                self._active_writers)
                 t0 = time.perf_counter()
-                result = self._execute(d.payload)
+                try:
+                    result = self._execute(d.payload)
+                finally:
+                    if writes_slow:
+                        with self._writer_lock:
+                            self._active_writers -= 1
                 dt = time.perf_counter() - t0
             self.telemetry.record_move(
                 d.src_tier, d.dst_tier, d.nbytes, dt, descriptors=1, batches=0
@@ -168,6 +183,12 @@ class BulkMover:
         for i in range(0, len(descs), self.batch_size):
             self._queue.put(descs[i : i + self.batch_size])
         return []
+
+    def take_peak_writers(self) -> int:
+        """Peak concurrent slow-tier writers since last call (then reset)."""
+        with self._writer_lock:
+            peak, self.peak_writers = self.peak_writers, self._active_writers
+            return peak
 
     def poll(self) -> list[Completion]:
         out = []

@@ -53,6 +53,10 @@ class Decision:
     slow_fraction: float
     boundedness: Boundedness
     reason: str
+    #: capacity floor: the slow fraction forced by fast-tier overflow.  A
+    #: dynamic controller (core/caption.py) may tune the fraction but can
+    #: never go below this without re-overflowing the fast tier.
+    min_slow_fraction: float = 0.0
 
 
 @dataclasses.dataclass
@@ -124,8 +128,9 @@ def plan(
             tolerant.append(b)
 
     if slow is None:
-        return _finalize(buffers, frac, bound, reason, ledger, topology,
-                         fast_name, slow_name, compute_seconds, notes)
+        return _finalize(buffers, frac, bound, reason, dict(frac), ledger,
+                         topology, fast_name, slow_name, compute_seconds,
+                         notes)
 
     # --- step 3: capacity -----------------------------------------------
     fast_cap = fast.capacity_bytes - reserve_fast_bytes
@@ -154,6 +159,10 @@ def plan(
                 f"placement infeasible: {overflow/2**30:.2f} GiB cannot be "
                 "placed after spilling all tolerant buffers"
             )
+
+    # Everything placed so far is there because it must be (capacity); the
+    # bandwidth-balancing step below only ever adds voluntary slow share.
+    floor = dict(frac)
 
     # --- step 4: bandwidth balancing --------------------------------------
     def stream_bytes(on_slow: bool) -> float:
@@ -207,11 +216,11 @@ def plan(
             )
             moved += take
 
-    return _finalize(buffers, frac, bound, reason, ledger, topology,
+    return _finalize(buffers, frac, bound, reason, floor, ledger, topology,
                      fast_name, slow_name, compute_seconds, notes)
 
 
-def _finalize(buffers, frac, bound, reason, ledger, topology,
+def _finalize(buffers, frac, bound, reason, floor, ledger, topology,
               fast_name, slow_name, compute_seconds, notes) -> Plan:
     fast = topology.fast
     slow = topology.slow
@@ -223,7 +232,9 @@ def _finalize(buffers, frac, bound, reason, ledger, topology,
         policy = MemPolicy.from_slow_fraction(fast_name, slow_name, f,
                                               round_up=True)
         f_eff = policy.slow_fraction(fast_name)
-        decisions[b.name] = Decision(b.name, policy, f_eff, bound[b.name], reason[b.name])
+        decisions[b.name] = Decision(b.name, policy, f_eff, bound[b.name],
+                                     reason[b.name],
+                                     min_slow_fraction=floor.get(b.name, 0.0))
         ledger.register(b.name, fast_name, int(b.nbytes * (1 - f_eff)), strict=False)
         if f_eff > 0:
             ledger.register(b.name, slow_name, int(b.nbytes * f_eff), strict=False)

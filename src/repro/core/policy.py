@@ -101,16 +101,36 @@ class MemPolicy:
             return MemPolicy.membind(slow)
         return MemPolicy.weighted((fast, slow), (d - m, m))
 
-    def slow_fraction(self, fast: str | None = None) -> float:
+    def slow_fraction(self, fast: str | None = None, *,
+                      n_pages: int | None = None,
+                      page_bytes: int | None = None,
+                      ledger=None) -> float:
         """Fraction of pages landing beyond the ``fast`` tier.
 
         ``fast`` defaults to the policy's first tier; pass the topology's
         fast-tier name to get the fraction relative to it (so
         ``membind(slow)`` correctly reports 1.0).
+
+        ``PREFERRED`` is capacity-dependent: pages fill the preferred
+        tier and *overflow to the fallback*.  Pass ``n_pages`` +
+        ``page_bytes`` + a ``ledger`` (TierLedger: knows free capacity per
+        tier) to get the capacity-aware fraction; without them the
+        optimistic no-overflow answer is returned.
         """
         fast = fast if fast is not None else self.tiers[0]
-        if self.kind in (PolicyKind.MEMBIND, PolicyKind.PREFERRED):
+        if self.kind == PolicyKind.MEMBIND:
             return 0.0 if self.tiers[0] == fast else 1.0
+        if self.kind == PolicyKind.PREFERRED:
+            on_preferred = 1.0
+            if (n_pages and page_bytes and ledger is not None):
+                fit = max(0, int(ledger.free(self.tiers[0]))) // page_bytes
+                on_preferred = min(n_pages, fit) / n_pages
+            frac = 0.0
+            if self.tiers[0] != fast:
+                frac += on_preferred
+            if len(self.tiers) > 1 and self.tiers[1] != fast:
+                frac += 1.0 - on_preferred
+            return frac
         if self.kind == PolicyKind.INTERLEAVE:
             on_fast = sum(1 for t in self.tiers if t == fast)
             return (len(self.tiers) - on_fast) / len(self.tiers)

@@ -4,6 +4,11 @@ The paper's guidelines hinge on knowing per-route traffic (D2C, C2D,
 C2C, D2D in Fig. 4).  Every mover/interleave operation records here so
 benchmarks and the planner's feedback loop see real traffic, and so a
 "centralized daemon" (§6) has the data to throttle writers.
+
+:class:`EpochWindow` is the PMU-sampling analogue the Caption
+controller (§7) reads: it closes fixed observation windows over the
+cumulative route counters and reports per-epoch deltas plus EWMA
+bandwidths, writer concurrency, and fast-tier pressure gauges.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import dataclasses
 import threading
 import time
 from collections import defaultdict
+from typing import Optional
 
 
 @dataclasses.dataclass
@@ -64,6 +70,100 @@ class Telemetry:
 
 
 GLOBAL_TELEMETRY = Telemetry()
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochCounters:
+    """One closed observation window over the telemetry counters.
+
+    ``route_bytes``/``route_bw`` are this epoch's deltas; ``route_bw_ewma``
+    smooths bandwidth across epochs (the controller never trusts a single
+    sample — Caption's measurement-smoothing stage).  ``gauges`` carry
+    instantaneous readings published by the subsystems (writer
+    concurrency, fast-tier pressure, per-step throughput proxies).
+    """
+
+    epoch: int
+    seconds: float
+    route_bytes: dict[str, int]
+    route_bw: dict[str, float]
+    route_bw_ewma: dict[str, float]
+    counters: dict[str, float]  # per-epoch deltas of Telemetry.counters
+    gauges: dict[str, float]
+
+    def bytes_into(self, dst: str) -> int:
+        return sum(v for k, v in self.route_bytes.items()
+                   if k.endswith(f"->{dst}"))
+
+    def bytes_from(self, src: str) -> int:
+        return sum(v for k, v in self.route_bytes.items()
+                   if k.startswith(f"{src}->"))
+
+
+class EpochWindow:
+    """Windowed view over a :class:`Telemetry`: per-route epoch counters.
+
+    Usage::
+
+        win = EpochWindow(telemetry)
+        ... traffic happens ...
+        win.gauge("writer_concurrency", mover_writers)
+        sample = win.tick()          # closes the epoch, returns deltas
+    """
+
+    def __init__(self, telemetry: Telemetry = GLOBAL_TELEMETRY,
+                 *, ewma_alpha: float = 0.5):
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha in (0, 1]")
+        self.telemetry = telemetry
+        self.ewma_alpha = ewma_alpha
+        self.epoch = 0
+        self._gauges: dict[str, float] = {}
+        self._ewma: dict[str, float] = {}
+        self._t0 = time.perf_counter()
+        self._base = self._snapshot()
+
+    def _snapshot(self) -> dict:
+        snap = self.telemetry.snapshot()
+        return {
+            "routes": {k: v["bytes_moved"] for k, v in snap["routes"].items()},
+            "counters": dict(snap["counters"]),
+        }
+
+    def gauge(self, name: str, value: float) -> None:
+        """Publish an instantaneous gauge for the current epoch."""
+        self._gauges[name] = float(value)
+
+    def tick(self, seconds: Optional[float] = None) -> EpochCounters:
+        """Close the current epoch and start the next one."""
+        now = time.perf_counter()
+        dt = seconds if seconds is not None else max(now - self._t0, 1e-9)
+        cur = self._snapshot()
+        route_bytes = {}
+        for k, v in cur["routes"].items():
+            route_bytes[k] = v - self._base["routes"].get(k, 0)
+        route_bw = {k: v / dt for k, v in route_bytes.items()}
+        a = self.ewma_alpha
+        for k, bw in route_bw.items():
+            prev = self._ewma.get(k)
+            self._ewma[k] = bw if prev is None else a * bw + (1 - a) * prev
+        counters = {}
+        for k, v in cur["counters"].items():
+            counters[k] = v - self._base["counters"].get(k, 0.0)
+        sample = EpochCounters(
+            epoch=self.epoch,
+            seconds=dt,
+            route_bytes=route_bytes,
+            route_bw=route_bw,
+            route_bw_ewma=dict(self._ewma),
+            counters=counters,
+            gauges=dict(self._gauges),
+        )
+        self.epoch += 1
+        self._base = cur
+        self._t0 = now
+        self._gauges = {}
+        return sample
 
 
 class Timer:

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.launch import hlo_analysis, shardings as shmod, steps as steps_mod
-from repro.launch.mesh import chips as mesh_chips, make_production_mesh
+from repro.launch.mesh import (chips as mesh_chips, make_production_mesh,
+                               mesh_context)
 from repro.launch.shapes import SHAPES, ShapeSpec, applicable
 from repro.models.registry import ARCH_IDS, get as get_arch
 from repro.optim import adamw
@@ -88,7 +89,7 @@ def lower_cell(arch_id: str, shape: ShapeSpec, mesh, *, n_micro: int = 0,
     }
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             if offload:
                 # ZeRO-offload structure: the device program is ONE
@@ -149,6 +150,8 @@ def lower_cell(arch_id: str, shape: ShapeSpec, mesh, *, n_micro: int = 0,
         }
         record["fits_hbm"] = record["memory"]["peak_per_device"] <= HBM_PER_CHIP
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     record["cost_analysis"] = {
         "flops": float(ca.get("flops", -1)),
         "bytes_accessed": float(ca.get("bytes accessed", -1)),

@@ -2,20 +2,38 @@
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; Auto is the default there anyway.
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (roofline) or 2x16x16 multi-pod (dry run)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh with pjit-style auto sharding propagation."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+                         **_axis_kwargs(len(axes)))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available; the Mesh object itself is a
+    context manager on older jax (pjit-style), with the same scoping."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

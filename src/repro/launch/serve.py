@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.policy import MemPolicy
 from repro.core.tiers import tpu_v5e_topology
 from repro.models.registry import get as get_arch
@@ -28,6 +29,9 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--slow-fraction", type=float, default=0.0)
     ap.add_argument("--page-t", type=int, default=16)
+    ap.add_argument("--caption", action="store_true",
+                    help="dynamic re-tiering of KV pages between decode steps")
+    ap.add_argument("--caption-epoch-steps", type=int, default=8)
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -38,9 +42,17 @@ def main(argv=None):
         raise SystemExit("tiered serving demo targets uniform-attention archs")
     params = arch.module.init(cfg, jax.random.PRNGKey(0))
     policy = MemPolicy.from_slow_fraction("fast", "slow", args.slow_fraction)
+    topology = tpu_v5e_topology()
+    caption = None
+    if args.caption:
+        caption = CaptionController(
+            topology,
+            CaptionConfig(epoch_steps=args.caption_epoch_steps),
+            initial_fraction=args.slow_fraction)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-        policy=policy, topology=tpu_v5e_topology(), page_t=args.page_t)
+        policy=policy, topology=topology, page_t=args.page_t,
+        caption=caption)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for _ in range(args.requests):
@@ -55,6 +67,9 @@ def main(argv=None):
           f"p50={lats[len(lats)//2]*1e3:.1f}ms p99={p99*1e3:.1f}ms "
           f"modeled_p50={modeled[len(modeled)//2]*1e3:.3f}ms "
           f"slow_frac={engine.cache.slow_fraction():.2f}")
+    if caption is not None:
+        traj = " -> ".join(f"{f:.2f}" for _, f in engine.caption_trace[-8:])
+        print(f"caption: phase={caption.phase.value} trajectory {traj}")
     return done
 
 

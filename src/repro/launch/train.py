@@ -20,7 +20,9 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import tiers as tiers_mod
+from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.classifier import AccessProfile
+from repro.core.telemetry import EpochWindow
 from repro.core.planner import BufferReq, plan as plan_placement
 from repro.core.policy import BufferClass
 from repro.data.pipeline import DataConfig, TokenPipeline
@@ -51,6 +53,7 @@ def build(arch_id: str, *, tiny: bool, batch: int, seq: int, lr: float,
                       parallelism=1024, granularity=4 << 20,
                       compute_seconds=0.1),
     )
+    placement = None
     if offload_fraction is None:
         placement = plan_placement(
             [req], topo, compute_seconds=0.1,
@@ -62,7 +65,7 @@ def build(arch_id: str, *, tiny: bool, batch: int, seq: int, lr: float,
     else:
         opt = None
         opt_state = adamw.init_state(params)
-    return arch, opt_cfg, opt, params, opt_state, n_params
+    return arch, opt_cfg, opt, params, opt_state, n_params, placement, topo
 
 
 def main(argv=None):
@@ -78,15 +81,30 @@ def main(argv=None):
     ap.add_argument("--offload-fraction", type=float, default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--caption", action="store_true",
+                    help="dynamic re-tiering of opt-state between steps")
+    ap.add_argument("--caption-epoch-steps", type=int, default=8)
     args = ap.parse_args(argv)
 
-    arch, opt_cfg, opt, params, opt_state, n_params = build(
+    arch, opt_cfg, opt, params, opt_state, n_params, placement, topo = build(
         args.arch, tiny=args.tiny, batch=args.batch, seq=args.seq,
         lr=args.lr, total_steps=args.steps,
         offload_fraction=args.offload_fraction)
     cfg, mod = arch.cfg, arch.module
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
           f"tiered_opt={'on' if opt else 'off'}")
+
+    caption = None
+    caption_window = None
+    if args.caption and opt is not None:
+        ccfg = CaptionConfig(epoch_steps=args.caption_epoch_steps)
+        if placement is not None:
+            caption = CaptionController.from_plan(
+                placement, "opt_state", topo, ccfg)
+        else:
+            caption = CaptionController(
+                topo, ccfg, initial_fraction=opt.slow_fraction)
+        caption_window = EpochWindow(opt.telemetry)
 
     data = TokenPipeline(DataConfig(
         vocab=cfg.vocab_padded, batch=args.batch, seq=args.seq, seed=17))
@@ -135,6 +153,26 @@ def main(argv=None):
             loss, grads = loss_grad(params, batch)
             params, opt_state, m2 = opt.step(params, grads, opt_state)
             metrics = dict(m2, loss=loss)
+            if caption is not None and (step + 1) % caption.cfg.epoch_steps == 0:
+                # Caption epoch: modeled step time on the target tiers is
+                # the throughput signal; the window supplies write share
+                # (paged state streams both ways) and writer concurrency
+                # from the optimizer's actual route counters.
+                slow_b = opt.traffic_per_step_bytes(opt_state)
+                slow_s = slow_b / topo.slow.nt_store_bw if topo.slow else 0.0
+                modeled = max(0.1, slow_s)  # compute floor from the plan
+                fast_resident = (12 * n_params * (1 - caption.fraction)
+                                 + 6 * n_params)  # opt state + params/grads
+                decision = caption.observe_window(
+                    caption_window, 1.0 / modeled, mover=opt.mover,
+                    fast_pressure=min(
+                        1.0, fast_resident / topo.fast.capacity_bytes),
+                    slow_name=None if opt.mover is not None else "host")
+                if decision.changed:
+                    opt_state = opt.repartition(
+                        params, opt_state, decision.fraction)
+                    print(f"caption: slow_fraction -> "
+                          f"{decision.fraction:.2f} ({decision.reason})")
         losses.append(float(metrics["loss"]))
         if (step + 1) % args.log_every == 0:
             dt = (time.perf_counter() - t0) / args.log_every

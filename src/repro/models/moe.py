@@ -167,15 +167,20 @@ def moe_mlp_ep(x2d: jax.Array, p: dict, spec: MoESpec, act: str,
         dropped = jax.lax.pmean(jnp.mean(1.0 - keep.astype(jnp.float32)), dp)
         return y, lb, zl, dropped
 
-    y, lb, zl, dropped = jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(dp, None), P(None, None), {
-            k: P(dp, None, None) for k in p["experts"]
-        }),
-        out_specs=(P(dp, None), P(), P(), P()),
-        axis_names=set(dp),
-    )(x2d, p["router"], p["experts"])
+    in_specs = (P(dp, None), P(None, None), {
+        k: P(dp, None, None) for k in p["experts"]
+    })
+    out_specs = (P(dp, None), P(), P(), P())
+    if hasattr(jax, "shard_map"):
+        smap = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(dp))
+    else:  # jax 0.4.x: no partial-manual axes; every axis is manual, so
+        # outputs replicated over the unmentioned model axis need
+        # check_rep off (they are replicated by construction).
+        from jax.experimental.shard_map import shard_map as _shard_map
+        smap = _shard_map(local, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    y, lb, zl, dropped = smap(x2d, p["router"], p["experts"])
     if spec.n_shared:
         y = y + mlp_apply(x2d, p["shared"], act)
     return y, {"lb_loss": lb, "z_loss": zl, "dropped": dropped}

@@ -174,6 +174,111 @@ class TieredAdamW:
                     )
         return state
 
+    def repartition(self, params, state, new_fraction: float, *,
+                    mover: Optional[BulkMover] = None,
+                    fast_tier: Optional[str] = None,
+                    slow_tier: Optional[str] = None) -> dict:
+        """Re-tier optimizer state to ``new_fraction``, moving only the
+        leaves that actually transition (the Caption actuation path for
+        opt-state buffers).
+
+        Newly offloaded leaves serialize master+moments to host pages;
+        reclaimed leaves rebuild device moments from their pages.  Leaves
+        on the same side are untouched, so inter-tier traffic is exactly
+        the transitioned bytes (through the BulkMover when given, else
+        accounted to telemetry).  Returns the new state; ``params`` are
+        unchanged (the master pages were written from them and vice versa).
+        """
+        mover = mover if mover is not None else self.mover
+        if mover is not None:  # tier names must exist in the mover's topology
+            fast_tier = fast_tier or mover.topology.fast.name
+            slow = mover.topology.slow
+            slow_tier = slow_tier or (slow.name if slow else fast_tier)
+        else:
+            fast_tier = fast_tier or "hbm"
+            slow_tier = slow_tier or "host"
+        self.slow_fraction = new_fraction
+        new_paths = set(map(str, self.choose_offloaded(params)))
+        old_paths = set(state["slow"])
+        if new_paths == old_paths:
+            return state
+        mu_map = {str(p): x for p, x in jax.tree_util.tree_flatten_with_path(
+            state["fast"]["mu"], is_leaf=lambda x: x is None)[0]}
+        nu_map = {str(p): x for p, x in jax.tree_util.tree_flatten_with_path(
+            state["fast"]["nu"], is_leaf=lambda x: x is None)[0]}
+        slow: dict[str, OffloadedLeaf] = dict(state["slow"])
+        moved_down = moved_up = 0
+
+        for path, x in jax.tree_util.tree_leaves_with_path(params):
+            key = str(path)
+            if key in new_paths and key not in old_paths:
+                # fast -> slow: page out master (from params) + moments.
+                master, n_pages = _flat_pages(np.asarray(x, np.float32))
+                mu_flat, _ = _flat_pages(np.asarray(mu_map[key], np.float32))
+                nu_flat, _ = _flat_pages(np.asarray(nu_map[key], np.float32))
+                if self.quantize_moments:
+                    qmu, smu = _q_moments(jnp.asarray(mu_flat))
+                    qnu, snu = _q_moments(jnp.asarray(nu_flat),
+                                          sqrt_domain=True)
+                    slow[key] = OffloadedLeaf(
+                        shape=tuple(x.shape), dtype=np.dtype(str(x.dtype)),
+                        n_pages=n_pages, size=x.size, master=master,
+                        mu=np.asarray(qmu), nu=np.asarray(qnu),
+                        quantized=True, mu_scale=np.asarray(smu),
+                        nu_scale=np.asarray(snu))
+                else:
+                    slow[key] = OffloadedLeaf(
+                        shape=tuple(x.shape), dtype=np.dtype(str(x.dtype)),
+                        n_pages=n_pages, size=x.size, master=master,
+                        mu=mu_flat, nu=nu_flat)
+                mu_map[key] = nu_map[key] = None
+                nbytes = master.nbytes + slow[key].mu.nbytes + slow[key].nu.nbytes
+                moved_down += nbytes
+                self._record_move(fast_tier, slow_tier, nbytes, mover,
+                                  (jnp.asarray(master),
+                                   jnp.asarray(slow[key].mu),
+                                   jnp.asarray(slow[key].nu)))
+            elif key in old_paths and key not in new_paths:
+                # slow -> fast: rebuild device moments from the host pages.
+                leaf = slow.pop(key)
+                if leaf.quantized:
+                    mu_flat = np.asarray(_dq_moments(
+                        jnp.asarray(leaf.mu), jnp.asarray(leaf.mu_scale)))
+                    nu_flat = np.asarray(_dq_moments(
+                        jnp.asarray(leaf.nu), jnp.asarray(leaf.nu_scale),
+                        sqrt_domain=True))
+                else:
+                    mu_flat, nu_flat = leaf.mu, leaf.nu
+                mu_map[key] = jnp.asarray(
+                    mu_flat[: leaf.size].reshape(leaf.shape), jnp.float32)
+                nu_map[key] = jnp.asarray(
+                    nu_flat[: leaf.size].reshape(leaf.shape), jnp.float32)
+                nbytes = leaf.master.nbytes + leaf.mu.nbytes + leaf.nu.nbytes
+                moved_up += nbytes
+                self._record_move(slow_tier, fast_tier, nbytes, mover,
+                                  (jnp.asarray(leaf.master),
+                                   jnp.asarray(leaf.mu),
+                                   jnp.asarray(leaf.nu)))
+        if mover is not None and mover.asynchronous:
+            mover.wait_all()
+        self.telemetry.bump("caption.opt_repartitions")
+        self.telemetry.bump("caption.opt_bytes_down", moved_down)
+        self.telemetry.bump("caption.opt_bytes_up", moved_up)
+        fast_mu = jax.tree_util.tree_map_with_path(
+            lambda p, x: mu_map[str(p)], params)
+        fast_nu = jax.tree_util.tree_map_with_path(
+            lambda p, x: nu_map[str(p)], params)
+        return {"step": state["step"],
+                "fast": {"mu": fast_mu, "nu": fast_nu},
+                "slow": slow}
+
+    def _record_move(self, src: str, dst: str, nbytes: int,
+                     mover: Optional[BulkMover], payload) -> None:
+        if mover is not None:
+            mover.submit([Descriptor(src, dst, payload)])
+        else:
+            self.telemetry.record_move(src, dst, nbytes, 0.0)
+
     def host_bytes(self, state) -> int:
         return sum(
             leaf.master.nbytes + leaf.mu.nbytes + leaf.nu.nbytes
@@ -298,6 +403,13 @@ class TieredAdamW:
                 self.mover.wait_all()
             assembled = jnp.concatenate(out_pages)[: leaf.size]
             new_leaves[key] = assembled.reshape(leaf.shape).astype(p.dtype)
+
+        if self.mover is None and bytes_moved:
+            # No movement engine: still surface the paging traffic so an
+            # EpochWindow (Caption's sampler) sees real route counters.
+            # Half the bytes stream host->device (page reads), half back.
+            self.telemetry.record_move("host", "hbm", bytes_moved // 2, 0.0)
+            self.telemetry.record_move("hbm", "host", bytes_moved // 2, 0.0)
 
         new_params = tdef.unflatten([new_leaves[str(path)] for path, _ in flat])
         new_state = {

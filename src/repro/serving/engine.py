@@ -19,7 +19,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import perfmodel
+from repro.core.caption import CaptionController
 from repro.core.policy import MemPolicy
+from repro.core.telemetry import GLOBAL_TELEMETRY, EpochWindow
 from repro.core.tiers import OpClass, TierTopology
 from repro.serving.kv_cache import TieredKVCache, tiered_decode_step
 from repro.serving.sampler import sample_greedy
@@ -52,6 +54,9 @@ class ServingEngine:
         policy: Optional[MemPolicy] = None,
         topology: Optional[TierTopology] = None,
         page_t: int = 64,
+        caption: Optional[CaptionController] = None,
+        mover=None,
+        telemetry=GLOBAL_TELEMETRY,
     ):
         self.cfg = cfg
         self.params = params
@@ -69,6 +74,25 @@ class ServingEngine:
         self.done: list[Request] = []
         # modeled per-step seconds: per-tier KV streaming on the target HW
         self._step_model_cache: Optional[dict] = None
+        # Caption control loop: between decode steps the controller reads
+        # the epoch's modeled token throughput and re-tiers the KV pages.
+        self.caption = caption
+        self.mover = mover
+        self.telemetry = telemetry
+        self._steps = 0
+        self._epoch_tokens = 0
+        self._epoch_modeled_s = 0.0
+        self.caption_trace: list[tuple[int, float]] = []
+        # One tier namespace for traffic accounting and migration: the
+        # mover's topology names when a mover meters the moves, else the
+        # generic fast/slow labels the modeled path uses.
+        if mover is not None:
+            self._fast_name = mover.topology.fast.name
+            self._slow_name = (mover.topology.slow or mover.topology.fast).name
+        else:
+            self._fast_name, self._slow_name = "fast", "slow"
+        self._epoch_window = (EpochWindow(telemetry)
+                              if caption is not None else None)
 
     # -- request management ---------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
@@ -148,7 +172,56 @@ class ServingEngine:
                 self.done.append(req)
                 self.slots[i] = None
                 self._reset_slot(i)
+        self._steps += 1
+        self._epoch_tokens += len(active)
+        self._epoch_modeled_s += step_model_s
+        if (self.caption is not None
+                and self._steps % self.caption.cfg.epoch_steps == 0):
+            self._caption_epoch()
         return len(active)
+
+    # -- Caption control loop (§7): sample -> decide -> re-tier ---------------
+    def _caption_epoch(self) -> None:
+        # Surface this epoch's modeled KV traffic as route counters, then
+        # close the observation window: the controller reads EpochCounters
+        # (bandwidths, write share, gauges), not hand-rolled numbers.
+        n = self.caption.cfg.epoch_steps
+        rb = self.cache.read_bytes_per_step()
+        item = self.cache.k_fast.dtype.itemsize
+        L, B = self.cache.k_fast.shape[:2]
+        K, hd = self.cache.k_fast.shape[3:]
+        write_b = 2 * L * B * K * hd * item  # one appended token per slot
+        dt = max(self._epoch_modeled_s, 1e-9)
+        self.telemetry.record_move(self._fast_name, "engine",
+                                   rb["fast"] * n, dt)
+        w_slow = int(write_b * n * self.cache.slow_fraction())
+        self.telemetry.record_move("engine", self._fast_name,
+                                   write_b * n - w_slow, 0.0)
+        if rb["slow"]:
+            self.telemetry.record_move(self._slow_name, "engine",
+                                       rb["slow"] * n, dt)
+        if w_slow:
+            self.telemetry.record_move("engine", self._slow_name, w_slow, 0.0)
+        pressure = None
+        if self.topology is not None:
+            kv_fast_bytes = (self.cache.k_fast.size + self.cache.v_fast.size) * item
+            pressure = min(kv_fast_bytes / self.topology.fast.capacity_bytes,
+                           1.0)
+        before = self.caption.fraction
+        decision = self.caption.observe_window(
+            self._epoch_window, self._epoch_tokens / dt, mover=self.mover,
+            fast_pressure=pressure, slow_name=self._slow_name, seconds=dt)
+        self._epoch_tokens = 0
+        self._epoch_modeled_s = 0.0
+        if abs(decision.fraction - before) > 1e-9:
+            self.cache = self.cache.repartition_fraction(
+                decision.fraction, mover=self.mover,
+                telemetry=self.telemetry, fast_tier=self._fast_name,
+                slow_tier=self._slow_name)
+            # Page rounding may achieve less (or none) of the request: the
+            # controller must continue from the real operating point.
+            self.caption.actuated(self.cache.slow_fraction())
+        self.caption_trace.append((self._steps, self.caption.fraction))
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0

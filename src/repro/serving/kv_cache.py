@@ -20,9 +20,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.interleave import tier_page_map
 from repro.core.policy import MemPolicy
+from repro.core.telemetry import GLOBAL_TELEMETRY
 from repro.models import attention as attn
 from repro.models.common import apply_norm, dtype_of, mlp_apply
+
+
+def _kv_layout(assign, page_t: int):
+    """Physical layout for a page->tier map: local indices, part sizes
+    (fast part keeps at least one page), and per-slot global positions."""
+    assign01, page_local, counters = tier_page_map(assign)
+    pos_parts: list[list[int]] = [[], []]
+    for p, t in enumerate(assign01):
+        pos_parts[t].extend(range(p * page_t, (p + 1) * page_t))
+    Tf = max(counters[0] * page_t, page_t)  # at least one page fast
+    Ts = counters[1] * page_t
+    pos_fast = np.full(Tf, np.iinfo(np.int32).max, np.int32)
+    pos_fast[: len(pos_parts[0])] = pos_parts[0]
+    pos_slow = (np.asarray(pos_parts[1], np.int32) if Ts
+                else np.zeros(0, np.int32))
+    return assign01, page_local, Tf, Ts, pos_fast, pos_slow
 
 
 @jax.tree_util.register_pytree_node_class
@@ -60,20 +78,8 @@ class TieredKVCache:
         page_t = min(page_t, max_len)
         assert max_len % page_t == 0
         n_pages = max_len // page_t
-        assign = policy.page_is_slow(n_pages).astype(np.int8)
-        page_local = np.zeros(n_pages, np.int32)
-        counters = [0, 0]
-        pos_parts: list[list[int]] = [[], []]
-        for p in range(n_pages):
-            t = int(assign[p])
-            page_local[p] = counters[t]
-            counters[t] += 1
-            pos_parts[t].extend(range(p * page_t, (p + 1) * page_t))
-        Tf = max(counters[0] * page_t, page_t)  # at least one page fast
-        Ts = counters[1] * page_t
-        pos_fast = np.full(Tf, np.iinfo(np.int32).max, np.int32)
-        pos_fast[: len(pos_parts[0])] = pos_parts[0]
-        pos_slow = np.asarray(pos_parts[1], np.int32) if Ts else np.zeros(0, np.int32)
+        assign, page_local, Tf, Ts, pos_fast, pos_slow = _kv_layout(
+            policy.page_is_slow(n_pages), page_t)
         return cls(
             k_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
             v_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
@@ -130,6 +136,79 @@ class TieredKVCache:
             k_slow, v_slow = self.k_slow, self.v_slow
         return dataclasses.replace(
             self, k_fast=k_fast, v_fast=v_fast, k_slow=k_slow, v_slow=v_slow)
+
+    # -- dynamic re-tiering (Caption actuation path) ----------------------------
+    def repartition(self, policy: MemPolicy, *, mover=None,
+                    fast_tier: str = "fast", slow_tier: str = "slow",
+                    telemetry=GLOBAL_TELEMETRY) -> "TieredKVCache":
+        """Re-tier the KV pages under ``policy``, moving only delta pages.
+
+        Host-side (between decode steps).  Pages whose tier is unchanged
+        are sliced across; changed pages ship through the BulkMover (or
+        are accounted to telemetry), so inter-tier traffic is exactly
+        ``delta_pages * page_kv_bytes``.  Attention output is invariant:
+        the same (position, K, V) triples exist after the move, only
+        their owning tier changes.
+        """
+        n_pages = self.page_tier.shape[0]
+        old_assign = np.asarray(self.page_tier)
+        new_assign, new_local, Tf, Ts, pos_fast, pos_slow = _kv_layout(
+            policy.page_is_slow(n_pages), self.page_t)
+        delta = np.nonzero(new_assign != old_assign)[0]
+        if delta.size == 0:
+            return self
+
+        old_local = np.asarray(self.page_local)
+        k_parts = (np.asarray(self.k_fast), np.asarray(self.k_slow))
+        v_parts = (np.asarray(self.v_fast), np.asarray(self.v_slow))
+        pt = self.page_t
+
+        def old_slice(part: np.ndarray, p: int) -> np.ndarray:
+            l0 = old_local[p]
+            return part[:, :, l0 * pt:(l0 + 1) * pt]
+
+        L, B = self.k_fast.shape[:2]
+        K, hd = self.k_fast.shape[3:]
+        dt = self.k_fast.dtype
+        new_k = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
+        new_v = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
+        page_kv_bytes = 2 * L * B * pt * K * hd * dt.itemsize
+        descs = []
+        for p in range(n_pages):
+            t0, t1, l1 = int(old_assign[p]), int(new_assign[p]), new_local[p]
+            k_page = old_slice(k_parts[t0], p)
+            v_page = old_slice(v_parts[t0], p)
+            new_k[t1][:, :, l1 * pt:(l1 + 1) * pt] = k_page
+            new_v[t1][:, :, l1 * pt:(l1 + 1) * pt] = v_page
+            if t0 != t1:
+                src = slow_tier if t0 else fast_tier
+                dst = fast_tier if t0 else slow_tier
+                if mover is not None:
+                    from repro.core.mover import Descriptor
+                    descs.append(Descriptor(src, dst, (jnp.asarray(k_page),
+                                                       jnp.asarray(v_page))))
+                elif telemetry is not None:
+                    telemetry.record_move(src, dst, page_kv_bytes, 0.0)
+        if mover is not None:
+            mover.submit(descs)  # one submission: descriptors batch (§6)
+            if mover.asynchronous:
+                mover.wait_all()
+        return dataclasses.replace(
+            self,
+            k_fast=jnp.asarray(new_k[0]), v_fast=jnp.asarray(new_v[0]),
+            k_slow=jnp.asarray(new_k[1]), v_slow=jnp.asarray(new_v[1]),
+            page_tier=jnp.asarray(new_assign, jnp.int8),
+            page_local=jnp.asarray(new_local, jnp.int32),
+            pos_fast=jnp.asarray(pos_fast), pos_slow=jnp.asarray(pos_slow),
+        )
+
+    def repartition_fraction(self, fraction: float, **kwargs
+                             ) -> "TieredKVCache":
+        """Re-tier to ``fraction`` slow flipping the fewest KV pages."""
+        from repro.core.interleave import (_ExplicitAssignment,
+                                           minimal_delta_assignment)
+        assign = minimal_delta_assignment(np.asarray(self.page_tier), fraction)
+        return self.repartition(_ExplicitAssignment(assign), **kwargs)
 
     def partitions(self, layer: int):
         """[(k, v, valid)] per tier for decode attention (post-append)."""

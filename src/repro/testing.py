@@ -1,0 +1,98 @@
+"""Property-test compatibility layer.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given``/``settings``/``strategies``.  When it is not (minimal CI
+images, the bare container), a thin deterministic fallback keeps the
+property tests *running* instead of killing collection of the whole
+module: each ``@given`` test is executed over boundary values plus a
+fixed-seed random sample of the strategy space.  Weaker than hypothesis
+(no shrinking, no database), but the invariants still get exercised.
+
+Usage in tests::
+
+    from repro.testing import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is present
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, boundary, draw):
+            self._boundary = list(boundary)
+            self._draw = draw
+
+        def example(self, i: int, rng: np.random.Generator):
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                [min_value, max_value],
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                [min_value, max_value],
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy([False, True], lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(
+                elements[:1], lambda rng: elements[int(rng.integers(len(elements)))])
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Strategy):
+        """Run the test over boundary + fixed-seed random draws.
+
+        The drawn values fill the test's trailing parameters (hypothesis
+        semantics); leading parameters stay visible to pytest as fixtures.
+        """
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            keep = params[: len(params) - len(strats)]
+            drawn_names = [p.name for p in params[len(keep):]]
+
+            def runner(*args, **kwargs):
+                n = getattr(fn, "_prop_max_examples", _DEFAULT_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    # Bind drawn values by NAME: pytest passes fixtures as
+                    # kwargs, so positional appending would collide.
+                    drawn = {name: s.example(i, rng)
+                             for name, s in zip(drawn_names, strats)}
+                    fn(*args, **kwargs, **drawn)
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.__signature__ = sig.replace(parameters=keep)
+            return runner
+        return deco

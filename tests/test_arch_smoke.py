@@ -39,6 +39,7 @@ def test_forward_shapes_and_finite(arch_id, key):
     assert np.all(np.isfinite(np.asarray(logits, np.float32)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCHS)
 def test_one_train_step(arch_id, key):
     """Gradients are finite and a step changes the loss deterministically."""
@@ -59,6 +60,7 @@ def test_one_train_step(arch_id, key):
     assert float(loss1) < float(loss0)  # one step on the same batch improves
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCHS)
 def test_decode_matches_forward(arch_id, key):
     """KV-cache/recurrent decode replay is numerically identical to the

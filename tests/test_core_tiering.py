@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis, with fallback
 
 from repro.core import (
     AccessProfile, Boundedness, BufferClass, BufferReq, BulkMover,
@@ -34,6 +34,33 @@ def test_weighted_interleave_ratio(m, n_pages):
 def test_from_slow_fraction_roundtrip(f):
     pol = MemPolicy.from_slow_fraction("fast", "slow", f)
     assert abs(pol.slow_fraction("fast") - f) < 1 / 32
+
+
+def test_preferred_slow_fraction_capacity_aware():
+    """PREFERRED overflow lands on the fallback tier: the reported slow
+    fraction must account for how much actually fits the preferred tier."""
+    topo = tpu_v5e_topology()  # hbm 16 GiB fast, host slow
+    pol = MemPolicy.preferred("hbm", "host")
+    # optimistic answer without capacity info: nothing beyond fast
+    assert pol.slow_fraction("hbm") == 0.0
+    led = TierLedger(topo)
+    led.register("other", "hbm", 12 << 30)  # 4 GiB left on hbm
+    page = 2 << 20
+    n_pages = (8 << 30) // page  # an 8 GiB buffer: only half fits
+    f = pol.slow_fraction("hbm", n_pages=n_pages, page_bytes=page, ledger=led)
+    assert f == pytest.approx(0.5)
+    # preferring the slow tier: the fitting half is slow, overflow is fast
+    pol_rev = MemPolicy.preferred("host", "hbm")
+    assert pol_rev.slow_fraction("hbm") == 1.0
+    led2 = TierLedger(topo)
+    led2.register("other", "host", led2.free("host") - (4 << 30))
+    f_rev = pol_rev.slow_fraction("hbm", n_pages=n_pages, page_bytes=page,
+                                  ledger=led2)
+    assert f_rev == pytest.approx(0.5)
+    # everything fits -> the optimistic answer is exact
+    led3 = TierLedger(topo)
+    assert pol.slow_fraction("hbm", n_pages=16, page_bytes=page,
+                             ledger=led3) == 0.0
 
 
 def test_paper_ratios():

@@ -26,19 +26,18 @@ def test_ep_shard_map_matches_reference():
     """EP all_to_all dispatch == single-device routing (fwd, loss, grads)."""
     _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.models import registry
         from repro.models.common import activation_sharding
         from repro.launch import shardings as shmod
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh, mesh_context
+        mesh = make_mesh((4, 2), ("data", "model"))
         arch = registry.get("deepseek-moe-16b").tiny()
         cfg, mod = arch.cfg, arch.module
         key = jax.random.PRNGKey(0)
         params = mod.init(cfg, key)
         toks = jax.random.randint(key, (8, 16), 0, 200)
         ref = mod.forward(cfg, params, toks)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             with activation_sharding(shmod.activation_policy(mesh)):
                 out = jax.jit(lambda p, t: mod.forward(cfg, p, t))(params, toks)
         err = float(jnp.max(jnp.abs(out - ref)))
@@ -52,7 +51,7 @@ def test_sharded_train_step_matches_single_device():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch import shardings as shmod, steps as steps_mod
-        from repro.launch.mesh import make_mesh
+        from repro.launch.mesh import make_mesh, mesh_context
         from repro.launch.shapes import ShapeSpec
         from repro.models import registry
         from repro.optim import adamw
@@ -75,7 +74,7 @@ def test_sharded_train_step_matches_single_device():
         fn8 = steps_mod.make_train_step(arch, opt_cfg, n_micro=2,
                                         act_policy=act, mesh=mesh,
                                         grad_shardings=psh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             p8, o8, m8 = jax.jit(fn8, in_shardings=(psh, None, None),
                                  out_shardings=(psh, None, None))(
                 params, opt_state, batch)

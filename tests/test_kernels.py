@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis, with fallback
 
 from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
 from repro.kernels.embedding_reduce import ops as er_ops, ref as er_ref

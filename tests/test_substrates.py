@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis, with fallback
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.policy import MemPolicy

@@ -3,6 +3,7 @@ restart bit-exactly, and the tiered optimizer trains equivalently."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import registry
@@ -18,6 +19,7 @@ def _tiny_setup(arch_id="starcoder2-3b", seed=0, batch=4, seq=32):
     return cfg, mod, params, data
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg, mod, params, data = _tiny_setup()
     opt_cfg = adamw.AdamWConfig(lr=3e-3, schedule=schedules.constant(),
@@ -39,6 +41,7 @@ def test_training_reduces_loss():
     assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.3, losses[::10]
 
 
+@pytest.mark.slow
 def test_training_restart_is_bit_exact(tmp_path):
     """Kill at step 12, restore the step-10 checkpoint, finish at 20:
     identical params to the uninterrupted run (deterministic pipeline)."""
