@@ -4,7 +4,8 @@ Per (arch x shape) on the single-pod 16x16 mesh:
   compute term    = HLO_FLOPs_per_dev / 197 TF/s
   memory term     = HLO_bytes_per_dev / 819 GB/s
   collective term = ICI_wire/50 GB/s + DCN_wire/(12.5/8 GB/s per chip)
-  tier term       = host<->HBM staged bytes / 32 GB/s (PCIe) — the paper's
+  tier term       = host<->HBM staged bytes (paging + amortized Caption
+                    repartition migration) / 32 GB/s (PCIe) — the paper's
                     subject, reported alongside the required three
 plus MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (inference), the
 useful-compute ratio, the dominant term, and the roofline fraction
@@ -45,6 +46,9 @@ def terms(rec: dict) -> dict | None:
     ici = rec["hlo"]["ici_bytes_per_device"] * mult
     dcn = rec["hlo"]["dcn_bytes_per_device"] * mult
     tier_bytes = rec.get("offload_traffic_bytes_per_step_per_chip", 0.0)
+    # Caption repartition traffic (amortized page migration, recorded by
+    # the dry run): migration shares the same PCIe path as paging.
+    tier_bytes += rec.get("migration_bytes_per_step_per_chip", 0.0)
     if rec.get("offload_micro_step"):
         # bf16 grads stream host-ward every micro step
         tier_bytes += rec["params"] * 2 * mult / chips

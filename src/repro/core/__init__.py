@@ -5,6 +5,7 @@ tier characterization (tiers/perfmodel/memo), placement policies
 (policy/planner/classifier), page interleaving (interleave), bulk
 movement (mover), and capacity accounting (ledger).
 """
+from repro.core.arbiter import ArbiterConfig, CaptionArbiter
 from repro.core.caption import (
     CaptionConfig,
     CaptionController,
@@ -30,6 +31,7 @@ from repro.core.tiers import (
 )
 
 __all__ = [
+    "ArbiterConfig", "CaptionArbiter",
     "CaptionConfig", "CaptionController", "EpochMetrics",
     "AccessProfile", "Boundedness", "classify",
     "InterleavedTensor", "CapacityError", "TierLedger",

@@ -1,0 +1,242 @@
+"""CaptionArbiter — a fleet-level control plane over per-buffer Caption loops.
+
+The paper's contention findings (§3, Fig. 3) are about a *shared*
+resource: a handful of concurrent writers collapses the CXL controller,
+and per-link bandwidth is one pool that independent agents will
+oversubscribe.  After PR 2 every tiered buffer (weights, KV cache,
+optimizer state) ran its own :class:`~repro.core.caption.CaptionController`
+— N local optimizers, each blind to the traffic the others push onto the
+same slow tier.  ``CaptionArbiter`` turns those into one coordinated
+subsystem:
+
+  * it owns a **global slow-tier write-bandwidth budget** (bytes/s);
+  * every per-buffer controller **registers** with it, and each epoch the
+    arbiter collects that buffer's *billed* slow-tier traffic from the
+    :class:`~repro.core.telemetry.EpochWindow` source-attributed route
+    counters;
+  * it **grants** each buffer a bandwidth share — latency-bound buffers
+    are served first in full (Fig. 7: they should not be on the slow
+    tier at all, so what little floor-forced traffic they have has
+    absolute priority), the rest split the remainder proportionally to
+    ``share x demand`` with a **starvation floor** so no buffer is
+    squeezed to zero by a louder neighbor;
+  * growth steps are **gated** (a buffer at/over its grant cannot grow
+    its slow fraction) and over-budget operating points are **clipped**
+    (fraction scaled back toward its grant, never below the capacity
+    floor), so the *sum* of slow-tier writes converges under budget.
+
+The per-buffer controllers keep doing the §7 hill-climb; the arbiter
+only vetoes/clips — local search under a global constraint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.caption import (CaptionController, Decision, EpochMetrics,
+                                window_metrics)
+from repro.core.tiers import TierTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterConfig:
+    """Knobs of the global budget (documented in ROADMAP.md)."""
+
+    #: aggregate slow-tier write-bandwidth budget (bytes/s). The natural
+    #: setting is the slow tier's nt-store bandwidth (or the link bw).
+    slow_bw_budget: float
+    #: minimum share of the budget reserved for every registered
+    #: bandwidth-class buffer (starvation floor), in [0, 1/n_buffers].
+    starvation_floor: float = 0.05
+    #: relative overshoot of the aggregate budget tolerated before
+    #: operating points are clipped back toward their grants.
+    slack: float = 0.05
+    #: EWMA smoothing for per-buffer demand (one noisy window never clips).
+    ewma_alpha: float = 0.5
+
+    def __post_init__(self):
+        if self.slow_bw_budget <= 0:
+            raise ValueError("slow_bw_budget must be > 0")
+        if not 0.0 <= self.starvation_floor < 1.0:
+            raise ValueError("starvation_floor in [0, 1)")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha in (0, 1]")
+
+
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    controller: CaptionController
+    share: float = 1.0
+    demand_bw: float = 0.0  # EWMA of billed slow-tier write bandwidth
+    grant_bw: float = 0.0
+    epochs: int = 0
+
+
+class CaptionArbiter:
+    """Owns the slow-tier bandwidth budget; registers per-buffer loops."""
+
+    def __init__(self, topology: TierTopology,
+                 config: Optional[ArbiterConfig] = None):
+        if config is None:
+            slow = topology.slow or topology.fast
+            config = ArbiterConfig(slow_bw_budget=slow.nt_store_bw)
+        self.topology = topology
+        self.cfg = config
+        self._entries: dict[str, _Entry] = {}
+        self.history: list[dict] = []
+
+    # -- registration --------------------------------------------------------
+    def register(self, name: str, controller: CaptionController,
+                 *, share: float = 1.0) -> CaptionController:
+        """Register a per-buffer controller under the global budget.
+
+        Installs the growth gate on the controller and returns it (so
+        ``arbiter.register("kv", CaptionController(...))`` reads fluently).
+        """
+        if name in self._entries:
+            raise ValueError(f"buffer {name!r} already registered")
+        if share <= 0:
+            raise ValueError("share must be > 0")
+        entry = _Entry(name=name, controller=controller, share=share)
+        controller.set_growth_gate(self._gate(name))
+        self._entries[name] = entry
+        self._recompute_grants()
+        return controller
+
+    def controller(self, name: str) -> CaptionController:
+        return self._entries[name].controller
+
+    @property
+    def buffers(self) -> tuple[str, ...]:
+        return tuple(self._entries)
+
+    # -- accounting ----------------------------------------------------------
+    def aggregate_demand_bw(self) -> float:
+        return sum(e.demand_bw for e in self._entries.values())
+
+    def grants(self) -> dict[str, float]:
+        return {n: e.grant_bw for n, e in self._entries.items()}
+
+    def demands(self) -> dict[str, float]:
+        return {n: e.demand_bw for n, e in self._entries.items()}
+
+    def _bill(self, name: str, slow_bw: float) -> None:
+        e = self._entries[name]
+        a = self.cfg.ewma_alpha
+        e.demand_bw = (slow_bw if e.epochs == 0
+                       else a * slow_bw + (1 - a) * e.demand_bw)
+        e.epochs += 1
+        self._recompute_grants()
+
+    def _recompute_grants(self) -> None:
+        """Split the budget: latency-bound first in full, then the floor,
+        then proportional to ``share x demand`` (weighted max-min)."""
+        entries = list(self._entries.values())
+        if not entries:
+            return
+        budget = self.cfg.slow_bw_budget
+        lat = [e for e in entries if e.controller.latency_bound]
+        rest = [e for e in entries if not e.controller.latency_bound]
+        remaining = budget
+        for e in lat:  # absolute priority (Fig. 7)
+            e.grant_bw = min(e.demand_bw, remaining)
+            remaining -= e.grant_bw
+        if not rest:
+            return
+        floor = min(self.cfg.starvation_floor * budget,
+                    remaining / len(rest))
+        extra = remaining - floor * len(rest)
+        weights = [e.share * max(e.demand_bw, 1e-12) for e in rest]
+        total_w = sum(weights)
+        for e, w in zip(rest, weights):
+            e.grant_bw = floor + extra * w / total_w
+
+    # -- the gate + clip -----------------------------------------------------
+    def _gate(self, name: str):
+        def gate(ctl: CaptionController, metrics: EpochMetrics
+                 ) -> tuple[float, str]:
+            e = self._entries[name]
+            total = self.aggregate_demand_bw()
+            budget = self.cfg.slow_bw_budget
+            if total > budget:
+                return 0.0, (f"arbiter: fleet over budget "
+                             f"({total:.3g}>{budget:.3g} B/s)")
+            if e.grant_bw > 0 and e.demand_bw >= e.grant_bw:
+                return 0.0, (f"arbiter: at grant "
+                             f"({e.demand_bw:.3g}>={e.grant_bw:.3g} B/s)")
+            if e.grant_bw > 0:
+                # Taper growth as the buffer approaches its grant so the
+                # fleet glides into the budget instead of slamming it.
+                headroom = 1.0 - e.demand_bw / e.grant_bw
+                if headroom < 0.5:
+                    return 2 * headroom, f"arbiter: taper x{2*headroom:.2f}"
+            return 1.0, ""
+        return gate
+
+    def _clip(self, name: str, decision: Decision) -> Decision:
+        """Scale an over-budget buffer's operating point back toward its
+        grant (never below the capacity floor — the starvation guarantee
+        in fraction space)."""
+        e = self._entries[name]
+        total = self.aggregate_demand_bw()
+        budget = self.cfg.slow_bw_budget
+        if (total <= budget * (1.0 + self.cfg.slack)
+                or e.demand_bw <= e.grant_bw
+                or e.grant_bw <= 0):
+            return decision
+        ctl = e.controller
+        scale = e.grant_bw / e.demand_bw
+        target = max(ctl.min_fraction, decision.fraction * scale)
+        if target >= decision.fraction - 1e-12:
+            return decision
+        ctl.actuated(target)
+        return dataclasses.replace(
+            decision, fraction=target, changed=True,
+            reason=(decision.reason
+                    + f" [arbiter clip x{scale:.2f} -> {target:.3f}]"))
+
+    # -- the loop ------------------------------------------------------------
+    def observe(self, name: str, metrics: EpochMetrics, *,
+                slow_bw: Optional[float] = None) -> Decision:
+        """One epoch for buffer ``name``: bill its slow-tier bandwidth,
+        recompute grants, run its controller, clip if over budget."""
+        if slow_bw is not None:
+            self._bill(name, slow_bw)
+        decision = self._entries[name].controller.observe(metrics)
+        decision = self._clip(name, decision)
+        self.history.append({
+            "buffer": name, "fraction": decision.fraction,
+            "demand_bw": self._entries[name].demand_bw,
+            "grant_bw": self._entries[name].grant_bw,
+            "aggregate_bw": self.aggregate_demand_bw(),
+            "reason": decision.reason,
+        })
+        return decision
+
+    def observe_window(self, name: str, window, throughput: float, *,
+                       mover=None, fast_pressure: Optional[float] = None,
+                       slow_name: Optional[str] = None,
+                       seconds: Optional[float] = None) -> Decision:
+        """The EpochWindow glue, source-billed: closes ``window``, derives
+        the buffer's metrics (same shared glue as
+        ``CaptionController.observe_window``), and bills its slow-tier
+        writes from the source-attributed route counters.  Only when the
+        window saw NO attribution at all (single-buffer legacy telemetry)
+        do the raw route bytes stand in — a window with co-tenant
+        attribution must never bill a quiet buffer its neighbors' bytes."""
+        metrics, counters, slow_name = window_metrics(
+            window, throughput, mover=mover, fast_pressure=fast_pressure,
+            slow_name=slow_name, seconds=seconds)
+        billed = counters.bytes_into(slow_name, source=name)
+        if billed == 0 and not any(counters.source_route_bytes.values()):
+            # This window saw no attributed bytes at all (zero-delta keys
+            # from past epochs don't count): legacy single-buffer telemetry,
+            # bill the raw route bytes.
+            billed = counters.bytes_into(slow_name)
+        return self.observe(name, metrics,
+                            slow_bw=billed / max(counters.seconds, 1e-9))
+
+    def actuated(self, name: str, fraction: float) -> None:
+        """Feed back what the buffer's actuator actually achieved."""
+        self._entries[name].controller.actuated(fraction)

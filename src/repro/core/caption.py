@@ -118,6 +118,28 @@ class EpochMetrics:
         )
 
 
+def window_metrics(window, throughput: float, *, mover=None,
+                   fast_pressure: Optional[float] = None,
+                   slow_name: Optional[str] = None,
+                   seconds: Optional[float] = None):
+    """Close an EpochWindow into controller inputs — the one place the
+    gauge publication / tick / metric-derivation glue lives (shared by
+    CaptionController.observe_window and CaptionArbiter.observe_window,
+    so the two paths can never derive from different route keys).
+    Returns (metrics, counters, resolved slow tier name)."""
+    if fast_pressure is not None:
+        window.gauge("fast_pressure", fast_pressure)
+    if mover is not None:
+        window.gauge("writer_concurrency", mover.take_peak_writers())
+        if slow_name is None and mover.topology.slow is not None:
+            slow_name = mover.topology.slow.name
+    slow_name = slow_name or "slow"
+    counters = window.tick(seconds=seconds)
+    metrics = EpochMetrics.from_counters(
+        counters, throughput=throughput, slow_name=slow_name)
+    return metrics, counters, slow_name
+
+
 @dataclasses.dataclass(frozen=True)
 class Decision:
     """Outcome of one observed epoch."""
@@ -151,6 +173,7 @@ class CaptionController:
         # else probes toward the slow tier from its static prior.
         self._dir = -1.0 if self.latency_bound else 1.0
         self._step = self.cfg.step
+        self._growth_gate = None  # fleet-level gate (CaptionArbiter)
         self._ewma: Optional[float] = None
         self._epochs_here = 0
         self._prev: Optional[tuple[float, float]] = None  # (fraction, tput)
@@ -188,15 +211,21 @@ class CaptionController:
         """One epoch straight from an EpochWindow: publish the standard
         gauges, close the window, derive metrics, decide.  The shared
         glue for every integration point (serving engine, train driver)."""
-        if fast_pressure is not None:
-            window.gauge("fast_pressure", fast_pressure)
-        if mover is not None:
-            window.gauge("writer_concurrency", mover.take_peak_writers())
-            if slow_name is None and mover.topology.slow is not None:
-                slow_name = mover.topology.slow.name
-        counters = window.tick(seconds=seconds)
-        return self.observe(EpochMetrics.from_counters(
-            counters, throughput=throughput, slow_name=slow_name or "slow"))
+        metrics, _, _ = window_metrics(
+            window, throughput, mover=mover, fast_pressure=fast_pressure,
+            slow_name=slow_name, seconds=seconds)
+        return self.observe(metrics)
+
+    def set_growth_gate(self, gate) -> None:
+        """Install a fleet-level growth gate (see core/arbiter.py).
+
+        ``gate(controller, metrics) -> (scale, note)`` is consulted
+        whenever a positive slow-fraction step is about to be taken; the
+        returned multiplier in [0, 1] clips the step (0 freezes growth).
+        A single buffer optimizing locally cannot see the *other* writers
+        sharing the slow-tier link — the gate is where that global view
+        (the aggregate bandwidth budget) vetoes local greed."""
+        self._growth_gate = gate
 
     def actuated(self, fraction: float) -> None:
         """Feed back what the actuator actually achieved.
@@ -282,6 +311,11 @@ class CaptionController:
                 delta *= max(damp, 0.0)
                 if damp < 1.0:
                     notes.append(f"write-damped x{damp:.2f}")
+        if delta > 0 and self._growth_gate is not None:
+            scale, note = self._growth_gate(self, m)
+            delta *= min(max(scale, 0.0), 1.0)
+            if note:
+                notes.append(note)
         if delta < 0 and m.fast_pressure >= self.cfg.pressure_high:
             delta = 0.0
             notes.append(

@@ -228,6 +228,8 @@ class InterleavedTensor:
         fast_tier: str = "fast",
         slow_tier: str = "slow",
         telemetry: Telemetry = GLOBAL_TELEMETRY,
+        source: Optional[str] = None,
+        lane: Optional[int] = None,
     ) -> "InterleavedTensor":
         """Re-tier under ``policy``, migrating ONLY the delta pages.
 
@@ -263,13 +265,15 @@ class InterleavedTensor:
         moved: dict[int, Any] = {}
         page_bytes = self.page_rows * self.row_bytes
         if mover is not None:
-            from repro.core.mover import Descriptor
+            from repro.core.mover import LANE_BULK, Descriptor
             descs = [
                 Descriptor(
                     src_tier=slow_tier if old_assign[p] else fast_tier,
                     dst_tier=fast_tier if old_assign[p] else slow_tier,
                     payload=jnp.asarray(old_page(p)),
                     on_done=lambda r, p=int(p): moved.__setitem__(p, r),
+                    lane=LANE_BULK if lane is None else lane,
+                    source=source,
                 )
                 for p in delta
             ]
@@ -280,7 +284,7 @@ class InterleavedTensor:
             for p in delta:
                 src = slow_tier if old_assign[p] else fast_tier
                 dst = fast_tier if old_assign[p] else slow_tier
-                telemetry.record_move(src, dst, page_bytes, 0.0)
+                telemetry.record_move(src, dst, page_bytes, 0.0, source=source)
                 moved[int(p)] = old_page(p)
 
         new_assign, new_local, _ = tier_page_map(new_assign)

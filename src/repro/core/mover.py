@@ -12,10 +12,19 @@ The paper's guidelines (§6) for bulk data movement between tiers:
 backend, records telemetry, and (because this box has one memory) also
 reports *modeled* seconds from the calibrated perfmodel so benchmarks
 can reproduce the paper's tier behaviour.
+
+Movement drains through a pool of ``drain_workers`` threads (the DSA
+engine count), so the slow-tier writer semaphore and the
+``take_peak_writers`` watermark reflect *real* concurrency, not a
+synthetic gauge.  Submissions are scheduled route-aware — descriptors
+are batched per (src, dst, op) so one batch never mixes routes — and
+through two priority lanes: ``LANE_LATENCY`` descriptors (demand
+misses, SLO-pinned pages) jump ``LANE_BULK`` repartition traffic.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import queue
 import threading
 import time
@@ -28,6 +37,10 @@ from repro.core import perfmodel
 from repro.core.tiers import OpClass, TierSpec, TierTopology
 from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
 
+#: priority lanes — lower value drains first.
+LANE_LATENCY = 0  #: latency-critical (demand fills, SLO-pinned pages)
+LANE_BULK = 1  #: bulk background traffic (repartition, paging)
+
 
 @dataclasses.dataclass
 class Descriptor:
@@ -38,12 +51,20 @@ class Descriptor:
     payload: Any  # jax/numpy array (or pytree) to move
     op: OpClass = OpClass.NT_STORE  # cache-bypass by default (guideline 1)
     on_done: Optional[Callable[[Any], None]] = None
+    #: priority lane (LANE_LATENCY jumps LANE_BULK in the drain queue).
+    lane: int = LANE_BULK
+    #: buffer this traffic is billed to (arbiter attribution), if any.
+    source: Optional[str] = None
 
     @property
     def nbytes(self) -> int:
         return sum(
             x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(self.payload)
         )
+
+    @property
+    def route(self) -> tuple[str, str, OpClass]:
+        return (self.src_tier, self.dst_tier, self.op)
 
 
 @dataclasses.dataclass
@@ -62,7 +83,8 @@ def _execute_copy(payload):
 
 
 class BulkMover:
-    """Centralized movement engine with batching, asynchrony, writer limits."""
+    """Centralized movement engine: batching, asynchrony, writer limits,
+    a multi-worker drain pool, and priority-lane scheduling."""
 
     def __init__(
         self,
@@ -72,16 +94,20 @@ class BulkMover:
         asynchronous: bool = True,
         max_writers: int = 2,
         max_readers: int = 8,
+        drain_workers: int = 1,
         telemetry: Telemetry = GLOBAL_TELEMETRY,
         execute: Callable[[Any], Any] = _execute_copy,
     ):
         if batch_size < 1:
             raise ValueError("batch_size >= 1")
+        if drain_workers < 1:
+            raise ValueError("drain_workers >= 1")
         self.topology = topology
         self.batch_size = batch_size
         self.asynchronous = asynchronous
         self.max_writers = max_writers
         self.max_readers = max_readers
+        self.drain_workers = drain_workers
         self.telemetry = telemetry
         self._execute = execute
         self._write_sem = threading.Semaphore(max_writers)
@@ -91,14 +117,26 @@ class BulkMover:
         self._writer_lock = threading.Lock()
         self._active_writers = 0
         self.peak_writers = 0
-        self._queue: "queue.Queue[Optional[list[Descriptor]]]" = queue.Queue()
+        # Priority drain queue: entries are (lane, seq, batch); the seq
+        # tiebreaker keeps FIFO order within a lane.  None batch = shutdown.
+        self._queue: "queue.PriorityQueue[tuple[int, int, Optional[list[Descriptor]]]]" = (
+            queue.PriorityQueue())
+        self._seq = itertools.count()
         self._completions: "queue.Queue[Completion]" = queue.Queue()
         self._pending = 0
         self._pending_lock = threading.Lock()
-        self._worker: Optional[threading.Thread] = None
+        # Guards the closed flag vs queue puts: without it a submit racing
+        # close() could enqueue batches after the workers consumed their
+        # shutdown sentinels — work nobody drains, a silent wait_all hang.
+        self._lifecycle = threading.Lock()
+        self._closed = False
+        self._workers: list[threading.Thread] = []
         if asynchronous:
-            self._worker = threading.Thread(target=self._drain, daemon=True)
-            self._worker.start()
+            for i in range(drain_workers):
+                t = threading.Thread(target=self._drain, daemon=True,
+                                     name=f"bulkmover-drain-{i}")
+                t.start()
+                self._workers.append(t)
 
     # -- cost modeling -------------------------------------------------------
     def _tier(self, name: str) -> TierSpec:
@@ -109,7 +147,7 @@ class BulkMover:
         grouped per route; batching amortizes submission overhead."""
         routes: dict[tuple, list[Descriptor]] = {}
         for d in descs:
-            routes.setdefault((d.src_tier, d.dst_tier, d.op), []).append(d)
+            routes.setdefault(d.route, []).append(d)
         total = 0.0
         for (src, dst, op), group in routes.items():
             cost = perfmodel.bulk_move_cost(
@@ -124,6 +162,21 @@ class BulkMover:
             )
             total += cost.seconds
         return total
+
+    # -- scheduling ----------------------------------------------------------
+    def _schedule(self, descs: Sequence[Descriptor]) -> list[list[Descriptor]]:
+        """Route-aware batch formation: one batch never mixes (src, dst, op)
+        routes or lanes, so per-batch telemetry and the modeled DSA batch
+        cost attribute cleanly.  Latency-lane batches sort first."""
+        groups: dict[tuple, list[Descriptor]] = {}
+        for d in descs:
+            groups.setdefault((d.lane,) + d.route, []).append(d)
+        batches = []
+        for key in sorted(groups, key=lambda k: k[0]):
+            group = groups[key]
+            for i in range(0, len(group), self.batch_size):
+                batches.append(group[i : i + self.batch_size])
+        return batches
 
     # -- execution -----------------------------------------------------------
     def _run_batch(self, batch: list[Descriptor]) -> list[Completion]:
@@ -147,20 +200,23 @@ class BulkMover:
                             self._active_writers -= 1
                 dt = time.perf_counter() - t0
             self.telemetry.record_move(
-                d.src_tier, d.dst_tier, d.nbytes, dt, descriptors=1, batches=0
-            )
+                d.src_tier, d.dst_tier, d.nbytes, dt, descriptors=1,
+                batches=0, source=d.source)
             comp = Completion(d, result, dt, modeled / len(batch))
             if d.on_done is not None:
                 d.on_done(result)
             out.append(comp)
-        self.telemetry.record_move(
-            batch[0].src_tier, batch[0].dst_tier, 0, 0.0, descriptors=0, batches=1
-        )
+        # One batch record per route present (submission batches are
+        # route-pure, but sync callers may hand-build mixed batches; each
+        # route must still see its own batch count, not batch[0]'s).
+        for src, dst, _ in {d.route for d in batch}:
+            self.telemetry.record_move(src, dst, 0, 0.0,
+                                       descriptors=0, batches=1)
         return out
 
     def _drain(self):
         while True:
-            batch = self._queue.get()
+            _, _, batch = self._queue.get()
             if batch is None:
                 return
             for comp in self._run_batch(batch):
@@ -171,17 +227,26 @@ class BulkMover:
     def submit(self, descs: Sequence[Descriptor]) -> list[Completion]:
         """Submit descriptors; sync mode returns completions immediately."""
         descs = list(descs)
-        if not descs:
-            return []
         if not self.asynchronous:
+            if self._closed:
+                raise RuntimeError("BulkMover.submit() after close()")
+            if not descs:
+                return []
+            order = {id(d): i for i, d in enumerate(descs)}
             out = []
-            for i in range(0, len(descs), self.batch_size):
-                out.extend(self._run_batch(descs[i : i + self.batch_size]))
+            for b in self._schedule(descs):
+                out.extend(self._run_batch(b))
+            out.sort(key=lambda c: order[id(c.descriptor)])
             return out
-        with self._pending_lock:
-            self._pending += len(descs)
-        for i in range(0, len(descs), self.batch_size):
-            self._queue.put(descs[i : i + self.batch_size])
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError("BulkMover.submit() after close()")
+            if not descs:
+                return []
+            with self._pending_lock:
+                self._pending += len(descs)
+            for b in self._schedule(descs):
+                self._queue.put((b[0].lane, next(self._seq), b))
         return []
 
     def take_peak_writers(self) -> int:
@@ -213,10 +278,17 @@ class BulkMover:
             time.sleep(0.0005)
 
     def close(self):
-        if self._worker is not None:
-            self._queue.put(None)
-            self._worker.join(timeout=5)
-            self._worker = None
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
+            # Shutdown sentinels sort after every real lane: queued work
+            # drains first, and no submit can slip in behind them.
+            for _ in self._workers:
+                self._queue.put((1 << 30, next(self._seq), None))
+        for t in self._workers:
+            t.join(timeout=5)
+        self._workers = []
 
     def __enter__(self):
         return self

@@ -36,15 +36,21 @@ class Telemetry:
         self._lock = threading.Lock()
         self.routes: dict[tuple[str, str], RouteStats] = defaultdict(RouteStats)
         self.counters: dict[str, float] = defaultdict(float)
+        # Per-buffer attribution: (source, src, dst) -> bytes.  The arbiter
+        # bills shared slow-tier traffic to the buffer that caused it.
+        self.source_routes: dict[tuple[str, str, str], int] = defaultdict(int)
 
     def record_move(self, src: str, dst: str, nbytes: int, seconds: float,
-                    descriptors: int = 1, batches: int = 1) -> None:
+                    descriptors: int = 1, batches: int = 1,
+                    source: Optional[str] = None) -> None:
         with self._lock:
             r = self.routes[(src, dst)]
             r.bytes_moved += int(nbytes)
             r.descriptors += descriptors
             r.batches += batches
             r.seconds += seconds
+            if source is not None:
+                self.source_routes[(source, src, dst)] += int(nbytes)
 
     def bump(self, name: str, value: float = 1.0) -> None:
         with self._lock:
@@ -61,12 +67,17 @@ class Telemetry:
                     for (s, d), v in self.routes.items()
                 },
                 "counters": dict(self.counters),
+                "source_routes": {
+                    f"{src}|{s}->{d}": v
+                    for (src, s, d), v in self.source_routes.items()
+                },
             }
 
     def reset(self) -> None:
         with self._lock:
             self.routes.clear()
             self.counters.clear()
+            self.source_routes.clear()
 
 
 GLOBAL_TELEMETRY = Telemetry()
@@ -90,12 +101,21 @@ class EpochCounters:
     route_bw_ewma: dict[str, float]
     counters: dict[str, float]  # per-epoch deltas of Telemetry.counters
     gauges: dict[str, float]
+    #: per-source route deltas, keyed "source|src->dst" (arbiter billing).
+    source_route_bytes: dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
-    def bytes_into(self, dst: str) -> int:
+    def bytes_into(self, dst: str, source: Optional[str] = None) -> int:
+        if source is not None:
+            return sum(v for k, v in self.source_route_bytes.items()
+                       if k.startswith(f"{source}|") and k.endswith(f"->{dst}"))
         return sum(v for k, v in self.route_bytes.items()
                    if k.endswith(f"->{dst}"))
 
-    def bytes_from(self, src: str) -> int:
+    def bytes_from(self, src: str, source: Optional[str] = None) -> int:
+        if source is not None:
+            return sum(v for k, v in self.source_route_bytes.items()
+                       if k.startswith(f"{source}|{src}->"))
         return sum(v for k, v in self.route_bytes.items()
                    if k.startswith(f"{src}->"))
 
@@ -128,6 +148,7 @@ class EpochWindow:
         return {
             "routes": {k: v["bytes_moved"] for k, v in snap["routes"].items()},
             "counters": dict(snap["counters"]),
+            "source_routes": dict(snap.get("source_routes", {})),
         }
 
     def gauge(self, name: str, value: float) -> None:
@@ -150,6 +171,9 @@ class EpochWindow:
         counters = {}
         for k, v in cur["counters"].items():
             counters[k] = v - self._base["counters"].get(k, 0.0)
+        source_bytes = {}
+        for k, v in cur["source_routes"].items():
+            source_bytes[k] = v - self._base["source_routes"].get(k, 0)
         sample = EpochCounters(
             epoch=self.epoch,
             seconds=dt,
@@ -158,6 +182,7 @@ class EpochWindow:
             route_bw_ewma=dict(self._ewma),
             counters=counters,
             gauges=dict(self._gauges),
+            source_route_bytes=source_bytes,
         )
         self.epoch += 1
         self._base = cur

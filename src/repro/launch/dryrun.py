@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.caption import CaptionConfig
 from repro.launch import hlo_analysis, shardings as shmod, steps as steps_mod
 from repro.launch.mesh import (chips as mesh_chips, make_production_mesh,
                                mesh_context)
@@ -114,6 +115,16 @@ def lower_cell(arch_id: str, shape: ShapeSpec, mesh, *, n_micro: int = 0,
                 record["offload_host_bytes_per_host"] = per_host
                 record["offload_traffic_bytes_per_step_per_chip"] = (
                     cfg.param_count() * (12 + 12 + 2) / mesh_chips(mesh))
+                # Caption migration cost: during convergence the controller
+                # re-tiers one hill-climb step's worth of state every
+                # (epoch_steps x probe_epochs) app steps; amortized over
+                # steps this is repartition traffic the roofline must see
+                # (benchmarks/roofline.py folds it into the tier term).
+                ccfg = CaptionConfig()
+                record["migration_bytes_per_step_per_chip"] = (
+                    opt_bytes * ccfg.step
+                    / (ccfg.epoch_steps * ccfg.probe_epochs)
+                    / mesh_chips(mesh))
             else:
                 fn = steps_mod.make_train_step(
                     arch, opt_cfg, n_micro=n_micro, act_policy=act_policy,

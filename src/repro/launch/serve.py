@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core.arbiter import ArbiterConfig, CaptionArbiter
 from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.policy import MemPolicy
 from repro.core.tiers import tpu_v5e_topology
@@ -32,6 +33,12 @@ def main(argv=None):
     ap.add_argument("--caption", action="store_true",
                     help="dynamic re-tiering of KV pages between decode steps")
     ap.add_argument("--caption-epoch-steps", type=int, default=8)
+    ap.add_argument("--slow-budget", type=float, default=0.0,
+                    help="aggregate slow-tier write budget in bytes/s for "
+                         "the CaptionArbiter (0 = slow tier's nt-store bw)")
+    ap.add_argument("--latency-every", type=int, default=0,
+                    help="every Nth request is latency-SLO class (pins its "
+                         "KV pages fast); 0 = all batch-class")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -44,20 +51,28 @@ def main(argv=None):
     policy = MemPolicy.from_slow_fraction("fast", "slow", args.slow_fraction)
     topology = tpu_v5e_topology()
     caption = None
+    arbiter = None
     if args.caption:
         caption = CaptionController(
             topology,
             CaptionConfig(epoch_steps=args.caption_epoch_steps),
             initial_fraction=args.slow_fraction)
+        # One arbiter owns the slow-tier write budget; the engine registers
+        # its KV controller under it (more buffers would share the pool).
+        acfg = (ArbiterConfig(slow_bw_budget=args.slow_budget)
+                if args.slow_budget > 0 else None)
+        arbiter = CaptionArbiter(topology, acfg)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         policy=policy, topology=topology, page_t=args.page_t,
-        caption=caption)
+        caption=caption, arbiter=arbiter)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for _ in range(args.requests):
+    for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_padded, size=4).tolist()
-        engine.submit(prompt, max_new_tokens=args.new_tokens)
+        slo = ("latency" if args.latency_every
+               and i % args.latency_every == 0 else "batch")
+        engine.submit(prompt, max_new_tokens=args.new_tokens, slo=slo)
     done = engine.run_until_drained()
     wall = time.perf_counter() - t0
     lats = sorted(r.latency for r in done)
@@ -70,6 +85,10 @@ def main(argv=None):
     if caption is not None:
         traj = " -> ".join(f"{f:.2f}" for _, f in engine.caption_trace[-8:])
         print(f"caption: phase={caption.phase.value} trajectory {traj}")
+    if arbiter is not None:
+        print(f"arbiter: budget={arbiter.cfg.slow_bw_budget:.3g} B/s "
+              f"demand={arbiter.aggregate_demand_bw():.3g} B/s "
+              f"grants={ {k: f'{v:.3g}' for k, v in arbiter.grants().items()} }")
     return done
 
 

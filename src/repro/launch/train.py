@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import tiers as tiers_mod
+from repro.core.arbiter import ArbiterConfig, CaptionArbiter
 from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.classifier import AccessProfile
 from repro.core.telemetry import EpochWindow
@@ -84,6 +85,9 @@ def main(argv=None):
     ap.add_argument("--caption", action="store_true",
                     help="dynamic re-tiering of opt-state between steps")
     ap.add_argument("--caption-epoch-steps", type=int, default=8)
+    ap.add_argument("--slow-budget", type=float, default=0.0,
+                    help="aggregate slow-tier write budget in bytes/s for "
+                         "the CaptionArbiter (0 = slow tier's nt-store bw)")
     args = ap.parse_args(argv)
 
     arch, opt_cfg, opt, params, opt_state, n_params, placement, topo = build(
@@ -96,6 +100,7 @@ def main(argv=None):
 
     caption = None
     caption_window = None
+    arbiter = None
     if args.caption and opt is not None:
         ccfg = CaptionConfig(epoch_steps=args.caption_epoch_steps)
         if placement is not None:
@@ -104,6 +109,13 @@ def main(argv=None):
         else:
             caption = CaptionController(
                 topo, ccfg, initial_fraction=opt.slow_fraction)
+        # One arbiter spans every tiered buffer in this process; training
+        # currently registers opt_state (a colocated serving engine or
+        # tiered weights would register under the same budget).
+        acfg = (ArbiterConfig(slow_bw_budget=args.slow_budget)
+                if args.slow_budget > 0 else None)
+        arbiter = CaptionArbiter(topo, acfg)
+        arbiter.register("opt_state", caption)
         caption_window = EpochWindow(opt.telemetry)
 
     data = TokenPipeline(DataConfig(
@@ -163,8 +175,9 @@ def main(argv=None):
                 modeled = max(0.1, slow_s)  # compute floor from the plan
                 fast_resident = (12 * n_params * (1 - caption.fraction)
                                  + 6 * n_params)  # opt state + params/grads
-                decision = caption.observe_window(
-                    caption_window, 1.0 / modeled, mover=opt.mover,
+                decision = arbiter.observe_window(
+                    "opt_state", caption_window, 1.0 / modeled,
+                    mover=opt.mover,
                     fast_pressure=min(
                         1.0, fast_resident / topo.fast.capacity_bytes),
                     slow_name=None if opt.mover is not None else "host")

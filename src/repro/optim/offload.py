@@ -106,6 +106,7 @@ class TieredAdamW:
         min_offload_bytes: int = 1 << 20,
         quantize_moments: bool = False,
         telemetry=GLOBAL_TELEMETRY,
+        source: str = "opt_state",
     ):
         self.cfg = cfg
         self.slow_fraction = slow_fraction
@@ -113,6 +114,9 @@ class TieredAdamW:
         self.min_offload_bytes = min_offload_bytes
         self.quantize_moments = quantize_moments
         self.telemetry = telemetry
+        # Buffer name this optimizer's slow-tier traffic is billed to
+        # (CaptionArbiter source attribution).
+        self.source = source
 
     # -- placement ----------------------------------------------------------
     def choose_offloaded(self, params) -> list[tuple]:
@@ -275,9 +279,10 @@ class TieredAdamW:
     def _record_move(self, src: str, dst: str, nbytes: int,
                      mover: Optional[BulkMover], payload) -> None:
         if mover is not None:
-            mover.submit([Descriptor(src, dst, payload)])
+            mover.submit([Descriptor(src, dst, payload, source=self.source)])
         else:
-            self.telemetry.record_move(src, dst, nbytes, 0.0)
+            self.telemetry.record_move(src, dst, nbytes, 0.0,
+                                       source=self.source)
 
     def host_bytes(self, state) -> int:
         return sum(
@@ -383,7 +388,7 @@ class TieredAdamW:
                             "hbm", self.mover.topology.slow.name
                             if self.mover.topology.slow else "hbm",
                             (np.asarray(ms2), np.asarray(qmu), np.asarray(qnu)),
-                            on_done=commit_q)])
+                            on_done=commit_q, source=self.source)])
                     else:
                         commit_q()
                 else:
@@ -394,7 +399,7 @@ class TieredAdamW:
                         self.mover.submit([Descriptor(
                             "hbm", self.mover.topology.slow.name
                             if self.mover.topology.slow else "hbm",
-                            writeback, on_done=commit)])
+                            writeback, on_done=commit, source=self.source)])
                     else:
                         leaf.master[sl], leaf.mu[sl], leaf.nu[sl] = writeback
                 out_pages[i] = ms2
@@ -408,8 +413,10 @@ class TieredAdamW:
             # No movement engine: still surface the paging traffic so an
             # EpochWindow (Caption's sampler) sees real route counters.
             # Half the bytes stream host->device (page reads), half back.
-            self.telemetry.record_move("host", "hbm", bytes_moved // 2, 0.0)
-            self.telemetry.record_move("hbm", "host", bytes_moved // 2, 0.0)
+            self.telemetry.record_move("host", "hbm", bytes_moved // 2, 0.0,
+                                       source=self.source)
+            self.telemetry.record_move("hbm", "host", bytes_moved // 2, 0.0,
+                                       source=self.source)
 
         new_params = tdef.unflatten([new_leaves[str(path)] for path, _ in flat])
         new_state = {

@@ -32,11 +32,18 @@ class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int
+    #: SLO class — "latency" requests pin their KV pages fast (their slots
+    #: leave the Caption repartition population); "batch" tolerate slow.
+    slo: str = "batch"
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     generated: list[int] = dataclasses.field(default_factory=list)
     modeled_seconds: float = 0.0
+
+    def __post_init__(self):
+        if self.slo not in ("latency", "batch"):
+            raise ValueError(f"slo must be 'latency' or 'batch': {self.slo!r}")
 
     @property
     def latency(self) -> float:
@@ -55,6 +62,8 @@ class ServingEngine:
         topology: Optional[TierTopology] = None,
         page_t: int = 64,
         caption: Optional[CaptionController] = None,
+        arbiter=None,
+        buffer_name: str = "kv",
         mover=None,
         telemetry=GLOBAL_TELEMETRY,
     ):
@@ -69,6 +78,9 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, c, t: tiered_decode_step(cfg, p, c, t))
         self.slots: list[Optional[Request]] = [None] * max_batch
+        # Latency-SLO slots (request policy lives here, not in the cache):
+        # excluded from Caption repartitions while their request is active.
+        self.pinned_slots: set[int] = set()
         self.queue: list[Request] = []
         self._next_rid = 0
         self.done: list[Request] = []
@@ -76,7 +88,14 @@ class ServingEngine:
         self._step_model_cache: Optional[dict] = None
         # Caption control loop: between decode steps the controller reads
         # the epoch's modeled token throughput and re-tiers the KV pages.
+        # When an arbiter spans several buffers, epochs route through it:
+        # this engine's slow-tier traffic is billed to ``buffer_name`` and
+        # growth is granted/clipped against the fleet budget.
         self.caption = caption
+        self.arbiter = arbiter
+        self.buffer_name = buffer_name
+        if arbiter is not None and caption is not None:
+            arbiter.register(buffer_name, caption)
         self.mover = mover
         self.telemetry = telemetry
         self._steps = 0
@@ -95,10 +114,11 @@ class ServingEngine:
                               if caption is not None else None)
 
     # -- request management ---------------------------------------------------
-    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               slo: str = "batch") -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_new_tokens,
+        self.queue.append(Request(rid, list(prompt), max_new_tokens, slo=slo,
                                   submitted_at=time.perf_counter()))
         return rid
 
@@ -107,6 +127,14 @@ class ServingEngine:
             if s is None and self.queue:
                 req = self.queue.pop(0)
                 self.slots[i] = req
+                # Latency-SLO admission: pin the slot's pages fast before
+                # prefill (migration rides the mover's latency lane).
+                if req.slo == "latency":
+                    self.cache = self.cache.pin_slot(
+                        i, mover=self.mover, telemetry=self.telemetry,
+                        fast_tier=self._fast_name, slow_tier=self._slow_name,
+                        source=self.buffer_name)
+                    self.pinned_slots.add(i)
                 # prefill by decode-replay into this slot (exact; slot-local)
                 self._reset_slot(i)
                 for tok in req.prompt[:-1]:
@@ -172,6 +200,8 @@ class ServingEngine:
                 self.done.append(req)
                 self.slots[i] = None
                 self._reset_slot(i)
+                # slot rejoins the batch-class repartition population
+                self.pinned_slots.discard(i)
         self._steps += 1
         self._epoch_tokens += len(active)
         self._epoch_modeled_s += step_model_s
@@ -190,37 +220,57 @@ class ServingEngine:
         item = self.cache.k_fast.dtype.itemsize
         L, B = self.cache.k_fast.shape[:2]
         K, hd = self.cache.k_fast.shape[3:]
-        write_b = 2 * L * B * K * hd * item  # one appended token per slot
+        write_slot_b = 2 * L * K * hd * item  # one appended token, one slot
+        write_b = write_slot_b * B
+        # Only unpinned slots write to the slow tier: slow_fraction() is
+        # the unpinned population's operating point, so bill it against
+        # the unpinned slot count, not all B slots.
+        n_unpinned = B - len(self.pinned_slots)
         dt = max(self._epoch_modeled_s, 1e-9)
+        src = self.buffer_name
         self.telemetry.record_move(self._fast_name, "engine",
-                                   rb["fast"] * n, dt)
-        w_slow = int(write_b * n * self.cache.slow_fraction())
+                                   rb["fast"] * n, dt, source=src)
+        w_slow = int(write_slot_b * n_unpinned * n
+                     * self.cache.slow_fraction(self.pinned_slots))
         self.telemetry.record_move("engine", self._fast_name,
-                                   write_b * n - w_slow, 0.0)
+                                   write_b * n - w_slow, 0.0, source=src)
         if rb["slow"]:
             self.telemetry.record_move(self._slow_name, "engine",
-                                       rb["slow"] * n, dt)
+                                       rb["slow"] * n, dt, source=src)
         if w_slow:
-            self.telemetry.record_move("engine", self._slow_name, w_slow, 0.0)
+            self.telemetry.record_move("engine", self._slow_name, w_slow, 0.0,
+                                       source=src)
         pressure = None
         if self.topology is not None:
             kv_fast_bytes = (self.cache.k_fast.size + self.cache.v_fast.size) * item
             pressure = min(kv_fast_bytes / self.topology.fast.capacity_bytes,
                            1.0)
         before = self.caption.fraction
-        decision = self.caption.observe_window(
-            self._epoch_window, self._epoch_tokens / dt, mover=self.mover,
-            fast_pressure=pressure, slow_name=self._slow_name, seconds=dt)
+        tput = self._epoch_tokens / dt
+        if self.arbiter is not None:
+            decision = self.arbiter.observe_window(
+                src, self._epoch_window, tput, mover=self.mover,
+                fast_pressure=pressure, slow_name=self._slow_name, seconds=dt)
+        else:
+            decision = self.caption.observe_window(
+                self._epoch_window, tput, mover=self.mover,
+                fast_pressure=pressure, slow_name=self._slow_name, seconds=dt)
         self._epoch_tokens = 0
         self._epoch_modeled_s = 0.0
         if abs(decision.fraction - before) > 1e-9:
             self.cache = self.cache.repartition_fraction(
-                decision.fraction, mover=self.mover,
+                decision.fraction, pinned_slots=self.pinned_slots,
+                mover=self.mover,
                 telemetry=self.telemetry, fast_tier=self._fast_name,
-                slow_tier=self._slow_name)
+                slow_tier=self._slow_name, source=src)
             # Page rounding may achieve less (or none) of the request: the
-            # controller must continue from the real operating point.
-            self.caption.actuated(self.cache.slow_fraction())
+            # controller must continue from the real operating point.  With
+            # zero tunable slots (everything SLO-pinned) there IS no
+            # operating point to read back — feeding 0.0 would corrupt the
+            # walk, so the decision stands until slots unpin.
+            if n_unpinned > 0:
+                self.caption.actuated(
+                    self.cache.slow_fraction(self.pinned_slots))
         self.caption_trace.append((self._steps, self.caption.fraction))
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:

@@ -7,6 +7,12 @@ log-sum-exp (attention.merge_partials); per-step per-tier byte counts
 feed the perfmodel so benchmarks reproduce the paper's p99/QPS curves
 on this CPU-only box.
 
+Placement is **per slot**: each batch slot carries its own page->tier
+map, so a latency-SLO request can pin its pages fast (Fig. 7: any CXL
+fraction hurts a µs-SLO app) while batch-class neighbors tolerate slow
+pages.  Pinned slots are excluded from ``repartition_fraction`` — the
+Caption loop only tunes the batch-class population.
+
 Applies to the uniform-attention (dense/vlm/moe-attention) families;
 recurrent state (rwkv/rglru) is latency-bound and planner-pinned fast.
 """
@@ -20,27 +26,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.interleave import tier_page_map
+from repro.core.interleave import minimal_delta_assignment, tier_page_map
+from repro.core.mover import LANE_BULK, LANE_LATENCY
 from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY
 from repro.models import attention as attn
 from repro.models.common import apply_norm, dtype_of, mlp_apply
 
+_INT32_MAX = np.iinfo(np.int32).max
 
-def _kv_layout(assign, page_t: int):
-    """Physical layout for a page->tier map: local indices, part sizes
-    (fast part keeps at least one page), and per-slot global positions."""
-    assign01, page_local, counters = tier_page_map(assign)
-    pos_parts: list[list[int]] = [[], []]
-    for p, t in enumerate(assign01):
-        pos_parts[t].extend(range(p * page_t, (p + 1) * page_t))
-    Tf = max(counters[0] * page_t, page_t)  # at least one page fast
-    Ts = counters[1] * page_t
-    pos_fast = np.full(Tf, np.iinfo(np.int32).max, np.int32)
-    pos_fast[: len(pos_parts[0])] = pos_parts[0]
-    pos_slow = (np.asarray(pos_parts[1], np.int32) if Ts
-                else np.zeros(0, np.int32))
-    return assign01, page_local, Tf, Ts, pos_fast, pos_slow
+
+def _kv_layout_rows(assign: np.ndarray, page_t: int):
+    """Per-slot physical layout for a (B, n_pages) page->tier map: local
+    indices, shared part sizes, and per-slot per-part global positions
+    (INT32_MAX pads never validate in the attention masks).
+
+    The fast part is sized for ALL pages (the fast tier is the home tier)
+    so pinning a slot fast or shifting the interleave never reallocates
+    it — repartition and SLO admission only rewrite index maps and the
+    slow part, keeping the jitted decode step's shapes stable."""
+    assign = np.asarray(assign)
+    B, P = assign.shape
+    assign01 = np.minimum(assign, 1).astype(np.int8)
+    local = np.zeros((B, P), np.int32)
+    n_slow = np.zeros(B, np.int64)
+    for b in range(B):
+        _, loc, counters = tier_page_map(assign01[b])
+        local[b] = loc
+        n_slow[b] = counters[1]
+    Tf = P * page_t
+    Ts = int(n_slow.max()) * page_t
+    pos_fast = np.full((B, Tf), _INT32_MAX, np.int32)
+    pos_slow = (np.full((B, Ts), _INT32_MAX, np.int32) if Ts
+                else np.zeros((B, 0), np.int32))
+    for b in range(B):
+        fpos: list[int] = []
+        spos: list[int] = []
+        for p in range(P):
+            (spos if assign01[b, p] else fpos).extend(
+                range(p * page_t, (p + 1) * page_t))
+        pos_fast[b, : len(fpos)] = fpos
+        if Ts and spos:
+            pos_slow[b, : len(spos)] = spos
+    return assign01, local, Tf, Ts, pos_fast, pos_slow
 
 
 @jax.tree_util.register_pytree_node_class
@@ -51,11 +79,11 @@ class TieredKVCache:
     k_slow: jax.Array  # (L, B, Ts, K, hd)
     v_slow: jax.Array
     lengths: jax.Array  # (B,)
-    # static addressing (from the policy's page assignment)
-    page_tier: jax.Array  # (n_pages,) int8
-    page_local: jax.Array  # (n_pages,)
-    pos_fast: jax.Array  # (Tf,) global position held by each fast slot
-    pos_slow: jax.Array  # (Ts,)
+    # static addressing (per-slot page assignment)
+    page_tier: jax.Array  # (B, n_pages) int8
+    page_local: jax.Array  # (B, n_pages)
+    pos_fast: jax.Array  # (B, Tf) global position held by each fast slot
+    pos_slow: jax.Array  # (B, Ts)
     page_t: int
 
     def tree_flatten(self):
@@ -78,8 +106,10 @@ class TieredKVCache:
         page_t = min(page_t, max_len)
         assert max_len % page_t == 0
         n_pages = max_len // page_t
-        assign, page_local, Tf, Ts, pos_fast, pos_slow = _kv_layout(
-            policy.page_is_slow(n_pages), page_t)
+        rows = np.broadcast_to(
+            policy.page_is_slow(n_pages).astype(np.int8), (batch, n_pages))
+        assign, page_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
+            rows, page_t)
         return cls(
             k_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
             v_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
@@ -96,23 +126,38 @@ class TieredKVCache:
     # -- addressing -------------------------------------------------------------
     def _route(self, pos: jax.Array):
         page = pos // self.page_t
-        page = jnp.minimum(page, self.page_tier.shape[0] - 1)
-        tier = jnp.take(self.page_tier, page).astype(bool)
-        local = jnp.take(self.page_local, page) * self.page_t + pos % self.page_t
-        return tier, local
+        page = jnp.minimum(page, self.page_tier.shape[1] - 1)[:, None]
+        tier = jnp.take_along_axis(self.page_tier, page, axis=1)[:, 0]
+        local = jnp.take_along_axis(self.page_local, page, axis=1)[:, 0]
+        return tier.astype(bool), local * self.page_t + pos % self.page_t
 
-    def slow_fraction(self) -> float:
-        return float(np.asarray(self.page_tier, np.float32).mean())
+    def slow_fraction(self, pinned_slots=()) -> float:
+        """Slow-page share of the *tunable* slots (all slots minus
+        ``pinned_slots``) — the operating point the Caption actuation
+        feedback must report.  Pin state lives with the engine (request
+        SLO policy), not in this data structure."""
+        tiers = np.asarray(self.page_tier, np.float32)
+        pinned = set(pinned_slots)
+        unpinned = [b for b in range(tiers.shape[0]) if b not in pinned]
+        if not unpinned:
+            return 0.0
+        return float(tiers[unpinned].mean())
 
     # -- per-step traffic (drives the latency/QPS simulation) ------------------
     def read_bytes_per_step(self) -> dict[str, int]:
-        """Bytes streamed per decode step per tier (both K and V)."""
+        """Bytes streamed per decode step per tier (both K and V), from the
+        per-slot page placement (pinned slots bill fast-only)."""
         item = self.k_fast.dtype.itemsize
-        L, B, Tf, K, hd = self.k_fast.shape
-        Ts = self.k_slow.shape[2]
+        L = self.k_fast.shape[0]
+        K, hd = self.k_fast.shape[3:]
+        tiers = np.asarray(self.page_tier)
+        n_pages = tiers.shape[1]
+        slow_pages = tiers.sum(axis=1)
+        fast_rows = int(np.maximum((n_pages - slow_pages), 1).sum()) * self.page_t
+        slow_rows = int(slow_pages.sum()) * self.page_t
         return {
-            "fast": 2 * L * B * Tf * K * hd * item,
-            "slow": 2 * L * B * Ts * K * hd * item,
+            "fast": 2 * L * fast_rows * K * hd * item,
+            "slow": 2 * L * slow_rows * K * hd * item,
         }
 
     # -- append + attend --------------------------------------------------------
@@ -137,58 +182,104 @@ class TieredKVCache:
         return dataclasses.replace(
             self, k_fast=k_fast, v_fast=v_fast, k_slow=k_slow, v_slow=v_slow)
 
+    # -- SLO pinning (per-request latency class) --------------------------------
+    def pin_slot(self, i: int, **kwargs) -> "TieredKVCache":
+        """Move slot ``i``'s pages all-fast (latency-SLO admission) on the
+        mover's latency lane.  The *exclusion* from future repartitions is
+        the engine's job: it tracks the pinned-slot set (request policy)
+        and passes it as ``pinned_slots`` — keeping SLO state out of this
+        data structure keeps the jitted decode treedef stable."""
+        new_assign = np.asarray(self.page_tier).copy()
+        new_assign[i] = 0
+        return self._retile(new_assign, lane=LANE_LATENCY, **kwargs)
+
     # -- dynamic re-tiering (Caption actuation path) ----------------------------
-    def repartition(self, policy: MemPolicy, *, mover=None,
-                    fast_tier: str = "fast", slow_tier: str = "slow",
-                    telemetry=GLOBAL_TELEMETRY) -> "TieredKVCache":
-        """Re-tier the KV pages under ``policy``, moving only delta pages.
+    def repartition(self, policy: MemPolicy, pinned_slots=(), **kwargs
+                    ) -> "TieredKVCache":
+        """Re-tier every unpinned slot's KV pages under ``policy``, moving
+        only delta pages.
 
         Host-side (between decode steps).  Pages whose tier is unchanged
         are sliced across; changed pages ship through the BulkMover (or
         are accounted to telemetry), so inter-tier traffic is exactly
         ``delta_pages * page_kv_bytes``.  Attention output is invariant:
         the same (position, K, V) triples exist after the move, only
-        their owning tier changes.
+        their owning tier changes.  Slots in ``pinned_slots``
+        (latency-SLO) keep their all-fast rows.
         """
-        n_pages = self.page_tier.shape[0]
-        old_assign = np.asarray(self.page_tier)
-        new_assign, new_local, Tf, Ts, pos_fast, pos_slow = _kv_layout(
-            policy.page_is_slow(n_pages), self.page_t)
-        delta = np.nonzero(new_assign != old_assign)[0]
-        if delta.size == 0:
-            return self
+        n_pages = self.page_tier.shape[1]
+        row = policy.page_is_slow(n_pages).astype(np.int8)
+        pinned = set(pinned_slots)
+        new_assign = np.asarray(self.page_tier).copy()
+        for b in range(new_assign.shape[0]):
+            if b not in pinned:
+                new_assign[b] = row
+        return self._retile(new_assign, **kwargs)
 
+    def repartition_fraction(self, fraction: float, pinned_slots=(),
+                             **kwargs) -> "TieredKVCache":
+        """Re-tier unpinned slots to ``fraction`` slow flipping the fewest
+        KV pages per slot."""
+        pinned = set(pinned_slots)
+        new_assign = np.asarray(self.page_tier).copy()
+        for b in range(new_assign.shape[0]):
+            if b not in pinned:
+                new_assign[b] = minimal_delta_assignment(
+                    new_assign[b], fraction)
+        return self._retile(new_assign, **kwargs)
+
+    def _retile(self, new_assign: np.ndarray, *, mover=None,
+                fast_tier: str = "fast", slow_tier: str = "slow",
+                telemetry=GLOBAL_TELEMETRY, source: Optional[str] = None,
+                lane: int = LANE_BULK) -> "TieredKVCache":
+        old_assign = np.asarray(self.page_tier)
+        if np.array_equal(new_assign, old_assign):
+            return self
+        pt = self.page_t
+        new01, new_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
+            new_assign, pt)
         old_local = np.asarray(self.page_local)
         k_parts = (np.asarray(self.k_fast), np.asarray(self.k_slow))
         v_parts = (np.asarray(self.v_fast), np.asarray(self.v_slow))
-        pt = self.page_t
-
-        def old_slice(part: np.ndarray, p: int) -> np.ndarray:
-            l0 = old_local[p]
-            return part[:, :, l0 * pt:(l0 + 1) * pt]
 
         L, B = self.k_fast.shape[:2]
+        P = old_assign.shape[1]
         K, hd = self.k_fast.shape[3:]
         dt = self.k_fast.dtype
         new_k = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
         new_v = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
-        page_kv_bytes = 2 * L * B * pt * K * hd * dt.itemsize
+        page_kv_bytes = 2 * L * pt * K * hd * dt.itemsize  # one slot-page
+        # Slots sharing a (old row, new row) pair — the whole batch-class
+        # population after a repartition — copy as ONE batched slice per
+        # page instead of per-slot (locals are a function of the row, so
+        # equal rows imply equal layouts).
+        groups: dict[bytes, list[int]] = {}
+        for b in range(B):
+            key = old_assign[b].tobytes() + new01[b].tobytes()
+            groups.setdefault(key, []).append(b)
         descs = []
-        for p in range(n_pages):
-            t0, t1, l1 = int(old_assign[p]), int(new_assign[p]), new_local[p]
-            k_page = old_slice(k_parts[t0], p)
-            v_page = old_slice(v_parts[t0], p)
-            new_k[t1][:, :, l1 * pt:(l1 + 1) * pt] = k_page
-            new_v[t1][:, :, l1 * pt:(l1 + 1) * pt] = v_page
-            if t0 != t1:
-                src = slow_tier if t0 else fast_tier
-                dst = fast_tier if t0 else slow_tier
-                if mover is not None:
-                    from repro.core.mover import Descriptor
-                    descs.append(Descriptor(src, dst, (jnp.asarray(k_page),
-                                                       jnp.asarray(v_page))))
-                elif telemetry is not None:
-                    telemetry.record_move(src, dst, page_kv_bytes, 0.0)
+        for slots in groups.values():
+            b0, sl = slots[0], np.asarray(slots)
+            for p in range(P):
+                t0, t1 = int(old_assign[b0, p]), int(new01[b0, p])
+                l0, l1 = old_local[b0, p], new_local[b0, p]
+                k_page = k_parts[t0][:, sl, l0 * pt:(l0 + 1) * pt]
+                v_page = v_parts[t0][:, sl, l0 * pt:(l0 + 1) * pt]
+                new_k[t1][:, sl, l1 * pt:(l1 + 1) * pt] = k_page
+                new_v[t1][:, sl, l1 * pt:(l1 + 1) * pt] = v_page
+                if t0 != t1:
+                    src = slow_tier if t0 else fast_tier
+                    dst = fast_tier if t0 else slow_tier
+                    if mover is not None:
+                        from repro.core.mover import Descriptor
+                        descs.append(Descriptor(
+                            src, dst, (jnp.asarray(k_page),
+                                       jnp.asarray(v_page)),
+                            lane=lane, source=source))
+                    elif telemetry is not None:
+                        telemetry.record_move(
+                            src, dst, page_kv_bytes * len(slots), 0.0,
+                            source=source)
         if mover is not None:
             mover.submit(descs)  # one submission: descriptors batch (§6)
             if mover.asynchronous:
@@ -197,27 +288,19 @@ class TieredKVCache:
             self,
             k_fast=jnp.asarray(new_k[0]), v_fast=jnp.asarray(new_v[0]),
             k_slow=jnp.asarray(new_k[1]), v_slow=jnp.asarray(new_v[1]),
-            page_tier=jnp.asarray(new_assign, jnp.int8),
+            page_tier=jnp.asarray(new01, jnp.int8),
             page_local=jnp.asarray(new_local, jnp.int32),
             pos_fast=jnp.asarray(pos_fast), pos_slow=jnp.asarray(pos_slow),
         )
-
-    def repartition_fraction(self, fraction: float, **kwargs
-                             ) -> "TieredKVCache":
-        """Re-tier to ``fraction`` slow flipping the fewest KV pages."""
-        from repro.core.interleave import (_ExplicitAssignment,
-                                           minimal_delta_assignment)
-        assign = minimal_delta_assignment(np.asarray(self.page_tier), fraction)
-        return self.repartition(_ExplicitAssignment(assign), **kwargs)
 
     def partitions(self, layer: int):
         """[(k, v, valid)] per tier for decode attention (post-append)."""
         upto = self.lengths[:, None] + 1
         parts = [(self.k_fast[layer], self.v_fast[layer],
-                  self.pos_fast[None, :] < upto)]
+                  self.pos_fast < upto)]
         if self.k_slow.shape[2]:
             parts.append((self.k_slow[layer], self.v_slow[layer],
-                          self.pos_slow[None, :] < upto))
+                          self.pos_slow < upto))
         return parts
 
 

@@ -1,0 +1,328 @@
+"""Multi-worker BulkMover + CaptionArbiter tests: real writer concurrency
+(the §6 semaphore exercised live, not synthetically), priority lanes,
+lifecycle bugs (submit-after-close, mixed-route telemetry), the global
+slow-tier bandwidth budget (convergence, latency priority, starvation
+floor, capacity-floor clipping, per-source billing), and the serving
+engine's per-request SLO classes."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.arbiter import ArbiterConfig, CaptionArbiter
+from repro.core.caption import (CaptionConfig, CaptionController,
+                                EpochMetrics)
+from repro.core.classifier import Boundedness
+from repro.core.mover import (LANE_BULK, LANE_LATENCY, BulkMover,
+                              Descriptor)
+from repro.core.policy import MemPolicy
+from repro.core.telemetry import EpochWindow, Telemetry
+from repro.core.tiers import tpu_v5e_topology
+
+
+# -- multi-worker drain pool ---------------------------------------------------
+def test_drain_pool_real_writer_concurrency():
+    """With drain_workers=4 a barrier-based execute forces >= 2 descriptors
+    in flight into the slow tier at once, so take_peak_writers() reports
+    REAL concurrency — and the §6 writer-limit guardrail then freezes
+    slow-fraction growth on those real (not synthetic) metrics."""
+    topo = tpu_v5e_topology()
+    barrier = threading.Barrier(2)
+
+    def rendezvous(payload):
+        barrier.wait(timeout=10)  # needs a second concurrent writer
+        return payload
+
+    tel = Telemetry()
+    win = EpochWindow(tel)
+    with BulkMover(topo, asynchronous=True, batch_size=1, max_writers=4,
+                   drain_workers=4, telemetry=tel,
+                   execute=rendezvous) as mover:
+        descs = [Descriptor("hbm", "host", jnp.zeros((16,)))
+                 for _ in range(8)]
+        mover.submit(descs)
+        mover.wait_all()
+        peak = mover.peak_writers
+        assert peak >= 2, peak
+
+        # The guardrail fires from the mover's own watermark: growth of the
+        # slow fraction is frozen while writers exceed the limit.
+        ctl = CaptionController(
+            topo, CaptionConfig(probe_epochs=1, step=0.1, writer_limit=1))
+        d = ctl.observe_window(win, throughput=1.0, mover=mover)
+        assert ctl.fraction == 0.0
+        assert "writers" in d.reason, d.reason
+
+
+def test_drain_pool_single_worker_serializes():
+    """Control: one drain worker can never exceed one concurrent writer."""
+    topo = tpu_v5e_topology()
+    with BulkMover(topo, asynchronous=True, batch_size=2,
+                   drain_workers=1) as mover:
+        mover.submit([Descriptor("hbm", "host", jnp.zeros((64,)))
+                      for _ in range(8)])
+        mover.wait_all()
+        assert mover.take_peak_writers() == 1
+
+
+def test_priority_lane_jumps_bulk_traffic():
+    """A latency-lane descriptor submitted after bulk traffic drains before
+    the queued bulk batches (the lane is a real scheduling property)."""
+    topo = tpu_v5e_topology()
+    release = threading.Event()
+    started = threading.Event()
+    order = []
+
+    def execute(payload):
+        if not started.is_set():  # the first descriptor blocks the worker
+            started.set()
+            release.wait(timeout=10)
+        return payload
+
+    mover = BulkMover(topo, asynchronous=True, batch_size=1,
+                      drain_workers=1, telemetry=Telemetry(),
+                      execute=execute)
+    try:
+        # Occupy the single worker, then queue bulk, then a latency jumper.
+        mover.submit([Descriptor("hbm", "host", jnp.zeros((8,)))])
+        started.wait(timeout=10)
+        mover.submit([Descriptor(
+            "hbm", "host", jnp.zeros((8,)), lane=LANE_BULK,
+            on_done=lambda r: order.append("bulk")) for _ in range(3)])
+        mover.submit([Descriptor(
+            "hbm", "host", jnp.zeros((8,)), lane=LANE_LATENCY,
+            on_done=lambda r: order.append("latency"))])
+        release.set()
+        mover.wait_all()
+    finally:
+        release.set()
+        mover.close()
+    assert order[0] == "latency", order
+
+
+def test_submit_after_close_raises():
+    topo = tpu_v5e_topology()
+    mover = BulkMover(topo, asynchronous=True)
+    mover.close()
+    with pytest.raises(RuntimeError, match="close"):
+        mover.submit([Descriptor("hbm", "host", jnp.zeros((4,)))])
+
+
+def test_mixed_route_batches_attribute_per_route():
+    """Each route in one submission sees its own batch count — the old
+    code billed every batch to batch[0]'s route."""
+    topo = tpu_v5e_topology()
+    tel = Telemetry()
+    with BulkMover(topo, asynchronous=False, batch_size=8,
+                   telemetry=tel) as mover:
+        mover.submit(
+            [Descriptor("hbm", "host", jnp.zeros((4,))) for _ in range(2)]
+            + [Descriptor("host", "hbm", jnp.zeros((4,))) for _ in range(2)])
+    assert tel.route("hbm", "host").batches == 1
+    assert tel.route("host", "hbm").batches == 1
+    assert tel.route("hbm", "host").descriptors == 2
+    assert tel.route("host", "hbm").descriptors == 2
+
+
+def test_sync_submit_preserves_submission_order():
+    topo = tpu_v5e_topology()
+    payloads = [jnp.full((8,), i, jnp.float32) for i in range(6)]
+    routes = [("hbm", "host"), ("host", "hbm")] * 3  # interleaved routes
+    with BulkMover(topo, asynchronous=False, batch_size=2,
+                   telemetry=Telemetry()) as mover:
+        comps = mover.submit([Descriptor(s, d, p)
+                              for (s, d), p in zip(routes, payloads)])
+    for p, c in zip(payloads, comps):
+        assert np.allclose(p, c.result)
+
+
+# -- arbiter: the global slow-tier bandwidth budget ----------------------------
+def _greedy_metrics(ctl):
+    """A workload whose modeled throughput always improves with more slow
+    pages — an uncoordinated controller would climb forever."""
+    return EpochMetrics(throughput=1.0 + ctl.fraction)
+
+
+def test_arbiter_keeps_fleet_under_budget():
+    topo = tpu_v5e_topology()
+    budget = 10e9
+    bw_per_fraction = 40e9  # each buffer's slow traffic scales with fraction
+    arb = CaptionArbiter(topo, ArbiterConfig(slow_bw_budget=budget))
+    ctls = [arb.register(f"buf{i}", CaptionController(
+        topo, CaptionConfig(probe_epochs=1, step=0.1))) for i in range(3)]
+    for _ in range(24):
+        for i, c in enumerate(ctls):
+            arb.observe(f"buf{i}", _greedy_metrics(c),
+                        slow_bw=c.fraction * bw_per_fraction)
+    assert arb.aggregate_demand_bw() <= budget * 1.05
+    # ... and no controller was starved to zero: everyone got slow pages.
+    assert all(c.fraction > 0 for c in ctls), [c.fraction for c in ctls]
+    assert sum(arb.grants().values()) <= budget * 1.001
+
+
+def test_arbiter_latency_bound_priority_and_floor():
+    """Latency-bound demand is served first in full (Fig. 7); bandwidth
+    buffers split the remainder but a quiet buffer keeps the floor share."""
+    topo = tpu_v5e_topology()
+    budget = 10e9
+    arb = CaptionArbiter(topo, ArbiterConfig(slow_bw_budget=budget,
+                                             starvation_floor=0.1))
+    lat = arb.register("lat", CaptionController(
+        topo, CaptionConfig(probe_epochs=1), initial_fraction=0.2,
+        min_fraction=0.2, boundedness=Boundedness.LATENCY_BOUND))
+    arb.register("loud", CaptionController(topo, CaptionConfig(probe_epochs=1)))
+    arb.register("quiet", CaptionController(topo, CaptionConfig(probe_epochs=1)))
+    arb.observe("lat", EpochMetrics(throughput=1.0), slow_bw=2e9)
+    arb.observe("loud", EpochMetrics(throughput=1.0), slow_bw=50e9)
+    arb.observe("quiet", EpochMetrics(throughput=1.0), slow_bw=0.1e9)
+    g = arb.grants()
+    assert g["lat"] == pytest.approx(2e9)  # served first, in full
+    assert g["quiet"] >= 0.1 * budget * 0.999  # starvation floor
+    assert g["loud"] + g["quiet"] <= budget - 2e9 + 1e-6
+    assert g["loud"] > g["quiet"]  # proportional beyond the floor
+
+
+def test_arbiter_clip_never_below_capacity_floor():
+    """An over-budget buffer is clipped toward its grant but never below
+    the planner's capacity floor (the spill minimum must stay resident)."""
+    topo = tpu_v5e_topology()
+    arb = CaptionArbiter(topo, ArbiterConfig(slow_bw_budget=1e9,
+                                             starvation_floor=0.0))
+    ctl = arb.register("opt", CaptionController(
+        topo, CaptionConfig(probe_epochs=1), initial_fraction=0.5,
+        min_fraction=0.4))
+    arb.register("other", CaptionController(topo, CaptionConfig(probe_epochs=1)))
+    arb.observe("other", EpochMetrics(throughput=1.0), slow_bw=0.9e9)
+    for _ in range(8):  # way over budget: would clip to ~0 without the floor
+        arb.observe("opt", EpochMetrics(throughput=1.0), slow_bw=20e9)
+    assert ctl.fraction >= 0.4 - 1e-9
+    assert ctl.fraction < 0.5  # but it WAS clipped
+
+
+def test_arbiter_source_billing_from_window():
+    """observe_window bills only the caller's source-attributed slow-tier
+    bytes, so co-tenant traffic in a shared Telemetry is not double-billed."""
+    topo = tpu_v5e_topology()
+    tel = Telemetry()
+    arb = CaptionArbiter(topo, ArbiterConfig(slow_bw_budget=10e9))
+    arb.register("a", CaptionController(topo, CaptionConfig(probe_epochs=1)))
+    arb.register("b", CaptionController(topo, CaptionConfig(probe_epochs=1)))
+    arb.register("quiet", CaptionController(topo,
+                                            CaptionConfig(probe_epochs=1)))
+    win_a, win_b = EpochWindow(tel), EpochWindow(tel)
+    win_q = EpochWindow(tel)
+    tel.record_move("engine", "host", 3_000, 0.0, source="a")
+    tel.record_move("engine", "host", 1_000, 0.0, source="b")
+    arb.observe_window("a", win_a, throughput=1.0, slow_name="host",
+                       seconds=1.0)
+    arb.observe_window("b", win_b, throughput=1.0, slow_name="host",
+                       seconds=1.0)
+    # A buffer with no attributed traffic in a window that DID see others'
+    # attribution must be billed zero, not its co-tenants' total.
+    arb.observe_window("quiet", win_q, throughput=1.0, slow_name="host",
+                       seconds=1.0)
+    d = arb.demands()
+    assert d["a"] == pytest.approx(3_000.0)
+    assert d["b"] == pytest.approx(1_000.0)
+    assert d["quiet"] == pytest.approx(0.0)
+
+
+def test_arbiter_legacy_fallback_ignores_stale_source_keys():
+    """Unattributed traffic still bills via the raw-route fallback even
+    after some PAST window carried attribution (zero-delta source keys
+    must not disable the legacy path)."""
+    topo = tpu_v5e_topology()
+    tel = Telemetry()
+    arb = CaptionArbiter(topo, ArbiterConfig(slow_bw_budget=10e9))
+    arb.register("legacy", CaptionController(topo,
+                                             CaptionConfig(probe_epochs=1)))
+    win = EpochWindow(tel)
+    tel.record_move("engine", "host", 500, 0.0, source="other")
+    win.tick(seconds=1.0)  # the attributed epoch closes
+    tel.record_move("engine", "host", 2_000, 0.0)  # no source attribution
+    arb.observe_window("legacy", win, throughput=1.0, slow_name="host",
+                       seconds=1.0)
+    assert arb.demands()["legacy"] == pytest.approx(2_000.0)
+
+
+def test_arbiter_register_rejects_duplicates():
+    topo = tpu_v5e_topology()
+    arb = CaptionArbiter(topo)
+    arb.register("kv", CaptionController(topo))
+    with pytest.raises(ValueError, match="registered"):
+        arb.register("kv", CaptionController(topo))
+
+
+# -- serving engine SLO classes ------------------------------------------------
+def test_kv_cache_pin_slot_excluded_from_repartition():
+    from repro.models import registry
+    from repro.serving.kv_cache import TieredKVCache
+    arch = registry.get("internvl2-2b").tiny()
+    cache = TieredKVCache.create(arch.cfg, 4, 32, MemPolicy.membind("fast"),
+                                 page_t=8)
+    shape_before = cache.k_fast.shape
+    cache = cache.pin_slot(1, telemetry=Telemetry())
+    # pinning rewrites index maps, never the fast part's shape (no jit
+    # retrace / reallocation on the latency admission path)
+    assert cache.k_fast.shape == shape_before
+    cache = cache.repartition_fraction(0.5, pinned_slots={1},
+                                       telemetry=Telemetry())
+    tiers = np.asarray(cache.page_tier)
+    assert tiers[1].sum() == 0  # pinned slot stays all-fast
+    for b in (0, 2, 3):
+        assert tiers[b].mean() == pytest.approx(0.5)
+    # the reported operating point covers only the tunable population
+    assert cache.slow_fraction(pinned_slots={1}) == pytest.approx(0.5)
+    # unpinned again: the slot rejoins the repartition population
+    cache = cache.repartition_fraction(0.5, telemetry=Telemetry())
+    assert np.asarray(cache.page_tier)[1].mean() == pytest.approx(0.5)
+
+
+def test_kv_cache_pin_slot_preserves_decode(key):
+    """Pinning a slot mid-sequence is numerically a no-op for attention."""
+    from repro.models import registry
+    from repro.serving.kv_cache import TieredKVCache, tiered_decode_step
+    arch = registry.get("internvl2-2b").tiny()
+    cfg = arch.cfg
+    params = arch.module.init(cfg, key)
+    cache = TieredKVCache.create(
+        cfg, 2, 32, MemPolicy.from_slow_fraction("fast", "slow", 0.5),
+        page_t=8)
+    cache_b = cache
+    toks = jnp.asarray([3, 9], jnp.int32)
+    for t in range(6):
+        la, cache = tiered_decode_step(cfg, params, cache, toks)
+        lb, cache_b = tiered_decode_step(cfg, params, cache_b, toks)
+        if t == 2:
+            cache_b = cache_b.pin_slot(1, telemetry=Telemetry())
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-4)
+    assert np.asarray(cache_b.page_tier)[1].sum() == 0
+
+
+def test_engine_latency_slo_pins_and_batch_tolerates_slow(key):
+    from repro.models import registry
+    from repro.serving.engine import ServingEngine
+    arch = registry.get("internvl2-2b").tiny()
+    params = arch.module.init(arch.cfg, key)
+    eng = ServingEngine(arch.cfg, params, max_batch=2, max_len=32,
+                        policy=MemPolicy.from_slow_fraction(
+                            "fast", "slow", 0.5),
+                        topology=tpu_v5e_topology(), page_t=8,
+                        telemetry=Telemetry())
+    eng.submit([5, 6, 7], max_new_tokens=6, slo="latency")
+    eng.submit([5, 6, 7], max_new_tokens=6, slo="batch")
+    eng.step()
+    tiers = np.asarray(eng.cache.page_tier)
+    assert eng.pinned_slots == {0}
+    assert tiers[0].sum() == 0  # latency slot pinned fast
+    assert tiers[1].sum() > 0  # batch slot keeps slow pages
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert not eng.pinned_slots  # unpinned on completion
+
+
+def test_engine_rejects_unknown_slo():
+    from repro.serving.engine import Request
+    with pytest.raises(ValueError, match="slo"):
+        Request(0, [1], 4, slo="best-effort")
