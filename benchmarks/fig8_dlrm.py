@@ -37,18 +37,33 @@ def throughput(fast, slow, f_slow: float, threads: int) -> float:
     each tier's random-access channel.  Captures both paper regimes:
     interleaving HURTS while the fast tier has headroom (latency adds),
     and HELPS once the fast tier saturates (extra parallel channel)."""
+    return throughput_nd(fast, (slow,), (f_slow,), threads)
+
+
+def throughput_nd(fast, devs, weights, threads: int) -> float:
+    """N-device form: the table interleaved across ``fast`` + ``devs``
+    with per-device page shares ``weights`` (the Fig. 10 device-mix
+    model).  Each device is an independent parallel channel: per-
+    inference latency sums the per-device shares, and every device caps
+    throughput at its own random-access bandwidth over its share."""
+    f_slow = sum(weights)
     sbw_f = perfmodel.random_block_bandwidth(fast, OpClass.LOAD, GATHER_B, 1)
-    sbw_s = perfmodel.random_block_bandwidth(slow, OpClass.LOAD, GATHER_B, 1)
-    r = ((1 - f_slow) * BYTES_PER_INFER / sbw_f
-         + f_slow * BYTES_PER_INFER / sbw_s + COMPUTE_NS * 1e-9)
+    r = (1 - f_slow) * BYTES_PER_INFER / sbw_f + COMPUTE_NS * 1e-9
+    for dev, w in zip(devs, weights):
+        if w <= 0:
+            continue
+        sbw = perfmodel.random_block_bandwidth(dev, OpClass.LOAD, GATHER_B, 1)
+        r += w * BYTES_PER_INFER / sbw
     x = threads / r
     cap_f = perfmodel.random_block_bandwidth(fast, OpClass.LOAD, BURST_B, threads) \
         / max((1 - f_slow) * BYTES_PER_INFER, 1e-9)
     x = min(x, cap_f)
-    if f_slow:
-        cap_s = perfmodel.random_block_bandwidth(slow, OpClass.LOAD, BURST_B, threads) \
-            / (f_slow * BYTES_PER_INFER)
-        x = min(x, cap_s)
+    for dev, w in zip(devs, weights):
+        if w <= 0:
+            continue
+        cap = perfmodel.random_block_bandwidth(dev, OpClass.LOAD, BURST_B, threads) \
+            / (w * BYTES_PER_INFER)
+        x = min(x, cap)
     return x
 
 

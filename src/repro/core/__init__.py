@@ -18,15 +18,21 @@ from repro.core.mover import BulkMover, Descriptor, double_buffer
 from repro.core.planner import BufferReq, Decision, Plan, plan
 from repro.core.policy import BufferClass, MemPolicy, PolicyKind
 from repro.core.tiers import (
+    CXL_A,
     CXL_AGILEX,
+    CXL_B,
+    CXL_C,
     DDR5_L8,
     DDR5_R1,
+    DEVICE_REGISTRY,
     HBM_V5E,
     HOST_V5E,
     OpClass,
     TierSpec,
     TierTopology,
+    paper_three_device_topology,
     paper_topology,
+    topology_from_spec,
     tpu_v5e_topology,
 )
 
@@ -39,6 +45,8 @@ __all__ = [
     "BufferReq", "Decision", "Plan", "plan",
     "BufferClass", "MemPolicy", "PolicyKind",
     "OpClass", "TierSpec", "TierTopology",
-    "CXL_AGILEX", "DDR5_L8", "DDR5_R1", "HBM_V5E", "HOST_V5E",
-    "paper_topology", "tpu_v5e_topology",
+    "CXL_A", "CXL_AGILEX", "CXL_B", "CXL_C",
+    "DDR5_L8", "DDR5_R1", "DEVICE_REGISTRY", "HBM_V5E", "HOST_V5E",
+    "paper_three_device_topology", "paper_topology", "topology_from_spec",
+    "tpu_v5e_topology",
 ]

@@ -43,7 +43,8 @@ class ArbiterConfig:
     """Knobs of the global budget (documented in ROADMAP.md)."""
 
     #: aggregate slow-tier write-bandwidth budget (bytes/s). The natural
-    #: setting is the slow tier's nt-store bandwidth (or the link bw).
+    #: setting is the sum of the slow devices' nt-store bandwidths (or
+    #: their link bandwidths).
     slow_bw_budget: float
     #: minimum share of the budget reserved for every registered
     #: bandwidth-class buffer (starvation floor), in [0, 1/n_buffers].
@@ -53,6 +54,11 @@ class ArbiterConfig:
     slack: float = 0.05
     #: EWMA smoothing for per-buffer demand (one noisy window never clips).
     ewma_alpha: float = 0.5
+    #: per-slow-device write-bandwidth budgets (bytes/s, by tier name).
+    #: The paper's devices collapse independently (Fig. 3 is per
+    #: controller), so each device carries its own ceiling; None keeps the
+    #: single aggregate pool of the two-device era.
+    device_budgets: Optional[dict[str, float]] = None
 
     def __post_init__(self):
         if self.slow_bw_budget <= 0:
@@ -61,6 +67,28 @@ class ArbiterConfig:
             raise ValueError("starvation_floor in [0, 1)")
         if not 0.0 < self.ewma_alpha <= 1.0:
             raise ValueError("ewma_alpha in (0, 1]")
+        if self.device_budgets is not None:
+            if any(v <= 0 for v in self.device_budgets.values()):
+                raise ValueError("device budgets must be > 0")
+
+
+def budgeted_config(topology: TierTopology,
+                    slow_budget: float) -> Optional[ArbiterConfig]:
+    """ArbiterConfig for an explicit scalar budget (the drivers'
+    ``--slow-budget``): on a multi-device topology the per-device
+    ceilings survive, scaled nt-store-proportionally so they sum to the
+    given budget — a scalar budget must not silently disable per-device
+    enforcement.  Returns None (the defaults) for a non-positive budget."""
+    if slow_budget <= 0:
+        return None
+    if topology.n_slow > 1:
+        nts = {t.name: t.nt_store_bw for t in topology.slows}
+        total = sum(nts.values())
+        return ArbiterConfig(
+            slow_bw_budget=slow_budget,
+            device_budgets={k: v / total * slow_budget
+                            for k, v in nts.items()})
+    return ArbiterConfig(slow_bw_budget=slow_budget)
 
 
 @dataclasses.dataclass
@@ -71,16 +99,21 @@ class _Entry:
     demand_bw: float = 0.0  # EWMA of billed slow-tier write bandwidth
     grant_bw: float = 0.0
     epochs: int = 0
+    #: EWMA of billed write bandwidth per slow device (by tier name).
+    demand_dev: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class CaptionArbiter:
-    """Owns the slow-tier bandwidth budget; registers per-buffer loops."""
+    """Owns the slow-tier bandwidth budgets; registers per-buffer loops."""
 
     def __init__(self, topology: TierTopology,
                  config: Optional[ArbiterConfig] = None):
         if config is None:
-            slow = topology.slow or topology.fast
-            config = ArbiterConfig(slow_bw_budget=slow.nt_store_bw)
+            slows = topology.slows or (topology.fast,)
+            budgets = {t.name: t.nt_store_bw for t in slows}
+            config = ArbiterConfig(
+                slow_bw_budget=sum(budgets.values()),
+                device_budgets=budgets if len(budgets) > 1 else None)
         self.topology = topology
         self.cfg = config
         self._entries: dict[str, _Entry] = {}
@@ -121,11 +154,25 @@ class CaptionArbiter:
     def demands(self) -> dict[str, float]:
         return {n: e.demand_bw for n, e in self._entries.items()}
 
-    def _bill(self, name: str, slow_bw: float) -> None:
+    def device_demands(self) -> dict[str, float]:
+        """Aggregate billed write bandwidth per slow device (all buffers)."""
+        out: dict[str, float] = {}
+        for e in self._entries.values():
+            for dev, bw in e.demand_dev.items():
+                out[dev] = out.get(dev, 0.0) + bw
+        return out
+
+    def _bill(self, name: str, slow_bw: float,
+              device_bw: Optional[dict[str, float]] = None) -> None:
         e = self._entries[name]
         a = self.cfg.ewma_alpha
         e.demand_bw = (slow_bw if e.epochs == 0
                        else a * slow_bw + (1 - a) * e.demand_bw)
+        if device_bw is not None:
+            for dev, bw in device_bw.items():
+                prev = e.demand_dev.get(dev)
+                e.demand_dev[dev] = (bw if prev is None or e.epochs == 0
+                                     else a * bw + (1 - a) * prev)
         e.epochs += 1
         self._recompute_grants()
 
@@ -159,6 +206,18 @@ class CaptionArbiter:
             e = self._entries[name]
             total = self.aggregate_demand_bw()
             budget = self.cfg.slow_bw_budget
+            # Per-device enforcement: the device whose share the controller
+            # is about to grow must itself have headroom — a quiet CXL-B
+            # cannot excuse pushing more writers onto a saturated CXL-A.
+            dev = getattr(ctl, "active_slow_device", None)
+            if dev is not None and self.cfg.device_budgets:
+                dev_budget = self.cfg.device_budgets.get(dev)
+                if dev_budget:
+                    dev_total = self.device_demands().get(dev, 0.0)
+                    if dev_total >= dev_budget:
+                        return 0.0, (f"arbiter: device {dev} at budget "
+                                     f"({dev_total:.3g}>="
+                                     f"{dev_budget:.3g} B/s)")
             if total > budget:
                 return 0.0, (f"arbiter: fleet over budget "
                              f"({total:.3g}>{budget:.3g} B/s)")
@@ -184,25 +243,66 @@ class CaptionArbiter:
         if (total <= budget * (1.0 + self.cfg.slack)
                 or e.demand_bw <= e.grant_bw
                 or e.grant_bw <= 0):
-            return decision
+            return self._clip_devices(name, decision)
         ctl = e.controller
         scale = e.grant_bw / e.demand_bw
         target = max(ctl.min_fraction, decision.fraction * scale)
         if target >= decision.fraction - 1e-12:
-            return decision
+            return self._clip_devices(name, decision)
         ctl.actuated(target)
-        return dataclasses.replace(
+        return self._clip_devices(name, dataclasses.replace(
             decision, fraction=target, changed=True,
+            weights=tuple(ctl.weights),
             reason=(decision.reason
-                    + f" [arbiter clip x{scale:.2f} -> {target:.3f}]"))
+                    + f" [arbiter clip x{scale:.2f} -> {target:.3f}]")))
+
+    def _clip_devices(self, name: str, decision: Decision) -> Decision:
+        """Per-device over-budget clip: scale this buffer's share of a
+        saturated device back toward that device's budget, leaving its
+        shares on devices with headroom untouched (never dropping the
+        total below the capacity floor)."""
+        if not self.cfg.device_budgets:
+            return decision
+        e = self._entries[name]
+        ctl = e.controller
+        names = self.topology.slow_names
+        weights = list(decision.weights)
+        if len(weights) != len(names) or not weights:
+            return decision
+        dev_totals = self.device_demands()
+        clipped = []
+        for i, dev in enumerate(names):
+            dev_budget = self.cfg.device_budgets.get(dev)
+            if not dev_budget or weights[i] <= 0:
+                continue
+            dev_total = dev_totals.get(dev, 0.0)
+            mine = e.demand_dev.get(dev, 0.0)
+            if dev_total <= dev_budget * (1.0 + self.cfg.slack) or mine <= 0:
+                continue
+            scale = dev_budget / dev_total
+            floor_slack = sum(weights) - ctl.min_fraction
+            cut = min(weights[i] * (1.0 - scale), max(floor_slack, 0.0))
+            if cut <= 1e-12:
+                continue
+            weights[i] -= cut
+            clipped.append(f"{dev} x{scale:.2f}")
+        if not clipped:
+            return decision
+        ctl.actuated_weights(weights)
+        return dataclasses.replace(
+            decision, fraction=sum(weights), weights=tuple(weights),
+            changed=True,
+            reason=decision.reason + f" [device clip {', '.join(clipped)}]")
 
     # -- the loop ------------------------------------------------------------
     def observe(self, name: str, metrics: EpochMetrics, *,
-                slow_bw: Optional[float] = None) -> Decision:
-        """One epoch for buffer ``name``: bill its slow-tier bandwidth,
-        recompute grants, run its controller, clip if over budget."""
+                slow_bw: Optional[float] = None,
+                device_bw: Optional[dict[str, float]] = None) -> Decision:
+        """One epoch for buffer ``name``: bill its slow-tier bandwidth
+        (aggregate and per device), recompute grants, run its controller,
+        clip if over budget."""
         if slow_bw is not None:
-            self._bill(name, slow_bw)
+            self._bill(name, slow_bw, device_bw)
         decision = self._entries[name].controller.observe(metrics)
         decision = self._clip(name, decision)
         self.history.append({
@@ -216,26 +316,37 @@ class CaptionArbiter:
 
     def observe_window(self, name: str, window, throughput: float, *,
                        mover=None, fast_pressure: Optional[float] = None,
-                       slow_name: Optional[str] = None,
+                       slow_name=None,
                        seconds: Optional[float] = None) -> Decision:
         """The EpochWindow glue, source-billed: closes ``window``, derives
         the buffer's metrics (same shared glue as
         ``CaptionController.observe_window``), and bills its slow-tier
-        writes from the source-attributed route counters.  Only when the
-        window saw NO attribution at all (single-buffer legacy telemetry)
-        do the raw route bytes stand in — a window with co-tenant
-        attribution must never bill a quiet buffer its neighbors' bytes."""
+        writes — per device — from the source-attributed route counters.
+        Only when the window saw NO attribution at all (single-buffer
+        legacy telemetry) do the raw route bytes stand in — a window with
+        co-tenant attribution must never bill a quiet buffer its
+        neighbors' bytes."""
         metrics, counters, slow_name = window_metrics(
             window, throughput, mover=mover, fast_pressure=fast_pressure,
             slow_name=slow_name, seconds=seconds)
-        billed = counters.bytes_into(slow_name, source=name)
+        names = ((slow_name,) if isinstance(slow_name, str)
+                 else tuple(slow_name))
+        dt = max(counters.seconds, 1e-9)
+        per_dev = {n: counters.bytes_into(n, source=name) for n in names}
+        billed = sum(per_dev.values())
         if billed == 0 and not any(counters.source_route_bytes.values()):
             # This window saw no attributed bytes at all (zero-delta keys
             # from past epochs don't count): legacy single-buffer telemetry,
             # bill the raw route bytes.
-            billed = counters.bytes_into(slow_name)
-        return self.observe(name, metrics,
-                            slow_bw=billed / max(counters.seconds, 1e-9))
+            per_dev = {n: counters.bytes_into(n) for n in names}
+            billed = sum(per_dev.values())
+        # The drift signal must also be THIS buffer's traffic: raw route
+        # bytes would let a co-tenant's ramp-up spuriously re-open a quiet
+        # buffer's converged walk.
+        metrics = dataclasses.replace(metrics, slow_bw=billed / dt)
+        return self.observe(
+            name, metrics, slow_bw=billed / dt,
+            device_bw={n: b / dt for n, b in per_dev.items()})
 
     def actuated(self, name: str, fraction: float) -> None:
         """Feed back what the buffer's actuator actually achieved."""

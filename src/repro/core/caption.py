@@ -7,26 +7,41 @@ bandwidth-bound apps, Fig. 11).  ``CaptionController`` is that loop as
 a small state machine over :class:`~repro.core.telemetry.EpochCounters`
 style samples:
 
-  PROBE    perturb the slow-tier fraction by one hill-climbing step;
+  PROBE    perturb the slow-tier weight vector by one hill-climbing
+           step on the active device's coordinate;
   MEASURE  hold the candidate for ``probe_epochs`` windows, smoothing
            the throughput signal with an EWMA (Caption's measurement
            module — one noisy PMU window never decides anything);
   ADJUST   compare against the previous operating point with a
            hysteresis band: keep climbing on improvement, back off and
-           halve the step on regression, declare convergence when the
-           step underflows.
+           halve the step on regression, declare the coordinate done
+           when the step underflows.
 
-The §6 guardrails are first-class:
+On an N-slow-device topology (the paper's CXL-A/B/C pool) the
+controller walks the weight vector on the simplex by round-robin
+coordinate descent: each device's share is hill-climbed in turn with
+the same machinery, and the loop converges once a full pass over every
+device moves nothing.  With one slow device this degenerates exactly to
+the scalar ``slow_fraction`` walk.
+
+The §6 guardrails are first-class (applied per active device):
   * latency-bound profiles never gain slow-tier pages (Fig. 7: any CXL
     fraction hurts a µs-SLO app) — the controller only walks toward the
     fast tier;
-  * write-heavy epochs damp the step toward the slow tier by the
-    store/load bandwidth ratio (RFO doubles temporal-store traffic);
+  * write-heavy epochs damp the step toward a slow device by THAT
+    device's store/load bandwidth ratio (RFO doubles temporal-store
+    traffic, and the three devices RFO differently);
   * epochs that exceed the writer limit freeze growth of the slow
-    fraction (concurrent writers collapse the CXL controller, Fig. 3);
+    share (concurrent writers collapse the CXL controller, Fig. 3);
   * the capacity floor from the static plan is a hard lower bound — the
     controller can tune *how much more* than the spill minimum lives on
     the slow tier, never less than fits.
+
+Workload shifts re-open a converged loop: while ``CONVERGED`` the
+controller tracks the EWMA slow-route bandwidth, and a relative drift
+beyond ``CaptionConfig.drift_threshold`` resets the walk (fresh step,
+fresh baseline) — the counters said the workload changed, so the old
+operating point is no longer evidence.
 
 The static planner supplies the *initial* state (``from_plan``), so the
 one-shot §6 plan is the cold-start prior, not the final answer.
@@ -35,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Optional, Sequence
 
 from repro.core.classifier import Boundedness
 from repro.core.tiers import TierTopology
@@ -67,7 +82,7 @@ class CaptionConfig:
     hysteresis: float = 0.02
     #: EWMA smoothing factor for the throughput signal.
     ewma_alpha: float = 0.5
-    #: hard ceiling on the slow-tier fraction.
+    #: hard ceiling on the total slow-tier fraction (sum of weights).
     max_fraction: float = 0.95
     #: writer-concurrency limit; above it the slow fraction cannot grow.
     writer_limit: int = 2
@@ -75,6 +90,9 @@ class CaptionConfig:
     pressure_high: float = 0.95
     #: damp growth steps by write share (RFO/store-bandwidth guardrail).
     write_damp: bool = True
+    #: relative EWMA slow-route bandwidth drift that re-opens a CONVERGED
+    #: walk (workload-shift re-probing); 0 disables.
+    drift_threshold: float = 0.35
 
     def __post_init__(self):
         if self.epoch_steps < 1:
@@ -87,6 +105,8 @@ class CaptionConfig:
             raise ValueError("ewma_alpha must be in (0, 1]")
         if not 0.0 <= self.max_fraction <= 1.0:
             raise ValueError("max_fraction must be in [0, 1]")
+        if self.drift_threshold < 0.0:
+            raise ValueError("drift_threshold must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,13 +121,21 @@ class EpochMetrics:
     writer_concurrency: int = 0
     #: fast-tier occupancy in [0, 1].
     fast_pressure: float = 0.0
+    #: observed slow-route bandwidth this epoch (bytes/s, both directions)
+    #: — the workload-shift drift signal.
+    slow_bw: float = 0.0
 
     @staticmethod
     def from_counters(counters, *, throughput: float,
-                      slow_name: str = "slow") -> "EpochMetrics":
-        """Derive the guardrail inputs from an EpochCounters window."""
-        into_slow = counters.bytes_into(slow_name)
-        from_slow = counters.bytes_from(slow_name)
+                      slow_name="slow") -> "EpochMetrics":
+        """Derive the guardrail inputs from an EpochCounters window.
+
+        ``slow_name`` is one tier name or a sequence of them (multi-device
+        topologies bill every slow device into the same guardrails)."""
+        names = ((slow_name,) if isinstance(slow_name, str)
+                 else tuple(slow_name))
+        into_slow = sum(counters.bytes_into(n) for n in names)
+        from_slow = sum(counters.bytes_from(n) for n in names)
         total = into_slow + from_slow
         return EpochMetrics(
             throughput=throughput,
@@ -115,25 +143,33 @@ class EpochMetrics:
             writer_concurrency=int(
                 counters.gauges.get("writer_concurrency", 0)),
             fast_pressure=float(counters.gauges.get("fast_pressure", 0.0)),
+            slow_bw=total / max(counters.seconds, 1e-9),
         )
 
 
 def window_metrics(window, throughput: float, *, mover=None,
                    fast_pressure: Optional[float] = None,
-                   slow_name: Optional[str] = None,
-                   seconds: Optional[float] = None):
+                   slow_name=None, seconds: Optional[float] = None):
     """Close an EpochWindow into controller inputs — the one place the
     gauge publication / tick / metric-derivation glue lives (shared by
     CaptionController.observe_window and CaptionArbiter.observe_window,
     so the two paths can never derive from different route keys).
-    Returns (metrics, counters, resolved slow tier name)."""
+    Returns (metrics, counters, resolved slow tier name(s))."""
     if fast_pressure is not None:
         window.gauge("fast_pressure", fast_pressure)
     if mover is not None:
-        window.gauge("writer_concurrency", mover.take_peak_writers())
-        if slow_name is None and mover.topology.slow is not None:
-            slow_name = mover.topology.slow.name
-    slow_name = slow_name or "slow"
+        names = mover.topology.slow_names
+        if len(names) > 1:
+            # The §6 writer limit is per controller (Fig. 3 collapse is
+            # per device): one writer on each of three devices is fine,
+            # so gauge the WORST single device, not the pool total.
+            peak = max(mover.take_peak_writers(n) for n in names)
+        else:
+            peak = mover.take_peak_writers()
+        window.gauge("writer_concurrency", peak)
+        if slow_name is None and names:
+            slow_name = names[0] if len(names) == 1 else names
+    slow_name = slow_name if slow_name is not None else "slow"
     counters = window.tick(seconds=seconds)
     metrics = EpochMetrics.from_counters(
         counters, throughput=throughput, slow_name=slow_name)
@@ -148,10 +184,16 @@ class Decision:
     changed: bool
     phase: Phase
     reason: str
+    #: per-slow-device target shares (sum == fraction); single-element on
+    #: a two-device topology.
+    weights: tuple[float, ...] = ()
 
 
 class CaptionController:
-    """Hill-climbing slow-fraction controller with hysteresis (§7)."""
+    """Hill-climbing slow-share controller with hysteresis (§7).
+
+    Scalar on a two-device topology; round-robin coordinate descent over
+    the per-device weight vector on an N-device pool."""
 
     def __init__(
         self,
@@ -161,25 +203,70 @@ class CaptionController:
         initial_fraction: float = 0.0,
         min_fraction: float = 0.0,
         boundedness: Boundedness = Boundedness.BANDWIDTH_BOUND,
+        initial_weights: Optional[Sequence[float]] = None,
+        min_weights: Optional[Sequence[float]] = None,
     ):
         self.topology = topology
         self.cfg = config or CaptionConfig()
         self.boundedness = boundedness
+        self.n_slow = max(topology.n_slow, 1)
         self.min_fraction = min(max(min_fraction, 0.0), self.cfg.max_fraction)
-        self.fraction = min(max(initial_fraction, self.min_fraction),
-                            self.cfg.max_fraction)
+        if initial_weights is None:
+            f = min(max(initial_fraction, self.min_fraction),
+                    self.cfg.max_fraction)
+            initial_weights = self._spread(f)
+        if len(initial_weights) != self.n_slow:
+            raise ValueError(
+                f"initial_weights needs {self.n_slow} entries")
+        self.min_weights = tuple(
+            min(max(w, 0.0), 1.0)
+            for w in (min_weights or (0.0,) * self.n_slow))
+        self.weights = [max(float(w), mw) for w, mw
+                        in zip(initial_weights, self.min_weights)]
+        # Explicit weight vectors honor the same hard ceiling the scalar
+        # prior always did (a full capacity spill can seed at 1.0).
+        total = sum(self.weights)
+        if total > self.cfg.max_fraction:
+            scale = (self.cfg.max_fraction / total
+                     if self.cfg.max_fraction > 0 else 0.0)
+            self.weights = [w * scale for w in self.weights]
         self.phase = Phase.WARMUP
         # Latency-bound state starts walking home to the fast tier; anything
         # else probes toward the slow tier from its static prior.
         self._dir = -1.0 if self.latency_bound else 1.0
         self._step = self.cfg.step
+        #: step each coordinate walk restarts from; halves every full pass
+        #: over the devices (annealing), so late passes probe gently and
+        #: the stale test below can see the walk has stopped making
+        #: progress.
+        self._restart_step = self.cfg.step
         self._growth_gate = None  # fleet-level gate (CaptionArbiter)
         self._ewma: Optional[float] = None
         self._epochs_here = 0
-        self._prev: Optional[tuple[float, float]] = None  # (fraction, tput)
+        #: last operating point: (weights tuple, smoothed throughput).
+        self._prev: Optional[tuple[tuple[float, ...], float]] = None
+        self._coord = 0  # active slow device (coordinate descent)
+        self._coord_start = self.weights[0]
+        self._stale = 0  # consecutive coords that converged without moving
+        self._hold_bw: Optional[float] = None  # drift reference (CONVERGED)
         self.history: list[Decision] = []
 
+    def _spread(self, fraction: float) -> tuple[float, ...]:
+        """Distribute a scalar fraction across the slow devices,
+        bandwidth-proportionally (the Fig. 10 best-static-ratio prior)."""
+        if self.n_slow == 1:
+            return (fraction,)
+        bw = self.topology.bandwidth_weights()
+        if len(bw) != self.n_slow:
+            bw = (1.0 / self.n_slow,) * self.n_slow
+        return tuple(fraction * b for b in bw)
+
     # -- derived -------------------------------------------------------------
+    @property
+    def fraction(self) -> float:
+        """Total slow-tier share (sum of the per-device weights)."""
+        return float(sum(self.weights))
+
     @property
     def latency_bound(self) -> bool:
         return self.boundedness == Boundedness.LATENCY_BOUND
@@ -188,25 +275,38 @@ class CaptionController:
     def converged(self) -> bool:
         return self.phase == Phase.CONVERGED
 
+    @property
+    def active_slow_device(self) -> Optional[str]:
+        """Name of the device whose share is being probed (arbiter gating)."""
+        if self.topology.slows:
+            return self.topology.slows[self._coord].name
+        return None
+
     @classmethod
     def from_plan(cls, plan: "Plan", buffer: str, topology: TierTopology,
                   config: Optional[CaptionConfig] = None
                   ) -> "CaptionController":
         """Seed the loop with the static planner's decision for ``buffer``:
-        its fraction is the cold-start prior, its capacity spill is the
-        floor, and its boundedness selects the latency guardrail."""
+        its per-device fractions are the cold-start prior, its capacity
+        spill is the floor, and its boundedness selects the latency
+        guardrail."""
         d = plan.decisions[buffer]
+        weights = None
+        if topology.slows and d.device_fractions:
+            weights = tuple(d.device_fractions.get(t.name, 0.0)
+                            for t in topology.slows)
         return cls(
             topology, config,
             initial_fraction=d.slow_fraction,
             min_fraction=d.min_slow_fraction,
             boundedness=d.boundedness,
+            initial_weights=weights,
         )
 
     # -- the loop ------------------------------------------------------------
     def observe_window(self, window, throughput: float, *,
                        mover=None, fast_pressure: Optional[float] = None,
-                       slow_name: Optional[str] = None,
+                       slow_name=None,
                        seconds: Optional[float] = None) -> Decision:
         """One epoch straight from an EpochWindow: publish the standard
         gauges, close the window, derive metrics, decide.  The shared
@@ -220,51 +320,106 @@ class CaptionController:
         """Install a fleet-level growth gate (see core/arbiter.py).
 
         ``gate(controller, metrics) -> (scale, note)`` is consulted
-        whenever a positive slow-fraction step is about to be taken; the
+        whenever a positive slow-share step is about to be taken; the
         returned multiplier in [0, 1] clips the step (0 freezes growth).
         A single buffer optimizing locally cannot see the *other* writers
-        sharing the slow-tier link — the gate is where that global view
-        (the aggregate bandwidth budget) vetoes local greed."""
+        sharing the slow-tier links — the gate is where that global view
+        (the per-device bandwidth budgets) vetoes local greed."""
         self._growth_gate = gate
 
     def actuated(self, fraction: float) -> None:
-        """Feed back what the actuator actually achieved.
+        """Feed back what the actuator actually achieved (scalar form).
 
         Page-granular actuation rounds the requested fraction (a step
         smaller than one page moves nothing); the walk must continue from
         the real operating point, not the phantom request, or throughput
-        measurements get attributed to fractions the system never ran."""
-        self.fraction = float(fraction)
+        measurements get attributed to fractions the system never ran.
+        The scalar is redistributed over the devices in the current
+        proportions (use :meth:`actuated_weights` when the actuator knows
+        the per-device outcome)."""
+        f = float(fraction)
+        total = self.fraction
+        if total > 1e-12:
+            self.weights = [w * f / total for w in self.weights]
+        else:
+            self.weights = list(self._spread(f))
+
+    def actuated_weights(self, weights: Sequence[float]) -> None:
+        """Feed back the per-device shares the actuator actually achieved."""
+        if len(weights) != self.n_slow:
+            raise ValueError(f"need {self.n_slow} weights")
+        self.weights = [float(w) for w in weights]
 
     def observe(self, metrics: EpochMetrics) -> Decision:
-        """Feed one epoch; returns the (possibly updated) target fraction."""
+        """Feed one epoch; returns the (possibly updated) target weights."""
         a = self.cfg.ewma_alpha
         self._ewma = (metrics.throughput if self._ewma is None
                       else a * metrics.throughput + (1 - a) * self._ewma)
         self._epochs_here += 1
         if self.phase == Phase.CONVERGED:
+            drifted = self._check_drift(metrics)
+            if drifted is not None:
+                return drifted
             return self._emit(False, "converged; holding")
         if self._epochs_here < self.cfg.probe_epochs:
             return self._emit(False, "measuring", phase=Phase.MEASURE)
         return self._adjust(metrics)
 
+    # -- workload-shift re-probing -------------------------------------------
+    def _check_drift(self, metrics: EpochMetrics) -> Optional[Decision]:
+        """While CONVERGED, watch the EWMA slow-route bandwidth; a drift
+        beyond ``drift_threshold`` re-opens the walk (the §7 follow-up:
+        Caption must notice the workload changed under it)."""
+        if self.cfg.drift_threshold <= 0:
+            return None
+        bw = metrics.slow_bw
+        if self._hold_bw is None:
+            self._hold_bw = bw
+            return None
+        rel = abs(bw - self._hold_bw) / max(self._hold_bw, 1.0)
+        if rel <= self.cfg.drift_threshold:
+            a = self.cfg.ewma_alpha
+            self._hold_bw = a * bw + (1 - a) * self._hold_bw
+            return None
+        self._reopen()
+        return self._emit(
+            False,
+            f"route-bw drift {rel*100:+.0f}%: workload shift, re-probing",
+            phase=Phase.MEASURE)
+
+    def _reopen(self) -> None:
+        """Reset the walk state for a fresh convergence run."""
+        self._step = self.cfg.step
+        self._restart_step = self.cfg.step
+        self._dir = -1.0 if self.latency_bound else 1.0
+        self._prev = None
+        self._ewma = None
+        self._epochs_here = 0
+        self._stale = 0
+        self._coord = 0
+        self._coord_start = self.weights[0]
+        self._hold_bw = None
+
+    # -- the hill-climb ------------------------------------------------------
     def _adjust(self, metrics: EpochMetrics) -> Decision:
         cur_t = float(self._ewma)
+        c = self._coord
         reason = ""
         if self._prev is not None:
-            prev_f, prev_t = self._prev
+            prev_w, prev_t = self._prev
             rel = (cur_t - prev_t) / max(abs(prev_t), 1e-12)
             if rel < -self.cfg.hysteresis:
                 # Regression: back off to the better point, reverse, shrink.
                 # A latency-bound buffer may only ever revert DOWNWARD (the
                 # monotone guardrail beats the hill-climber's memory).
                 self._dir, self._step = -self._dir, self._step / 2
-                back = (min(prev_f, self.fraction) if self.latency_bound
-                        else prev_f)
+                back = (tuple(min(p, w) for p, w
+                              in zip(prev_w, self.weights))
+                        if self.latency_bound else prev_w)
                 if self._step < self.cfg.min_step:
-                    return self._move_to(back, Phase.CONVERGED,
-                                         "regressed; step underflow -> hold "
-                                         f"at {back:.3f}")
+                    return self._finish_coord(
+                        back, "regressed; step underflow -> hold at "
+                        f"{sum(back):.3f}")
                 return self._move_to(back, Phase.ADJUST,
                                      f"regressed {rel*100:+.1f}%; revert + "
                                      "reverse")
@@ -272,8 +427,8 @@ class CaptionController:
                 # Flat within hysteresis: the gradient is gone; shrink.
                 self._step /= 2
                 if self._step < self.cfg.min_step:
-                    return self._move_to(self.fraction, Phase.CONVERGED,
-                                         "flat; converged")
+                    return self._finish_coord(tuple(self.weights),
+                                              "flat; coordinate done")
                 reason = f"flat ({rel*100:+.1f}%); refining"
             else:
                 reason = f"improved {rel*100:+.1f}%; continue"
@@ -282,16 +437,27 @@ class CaptionController:
 
         delta = self._dir * self._step
         delta, guard = self._guardrails(delta, metrics)
-        target = min(max(self.fraction + delta, self.min_fraction),
-                     self.cfg.max_fraction)
+        target = list(self.weights)
+        target[c] = self._clamp_coord(c, self.weights[c] + delta)
         if guard:
             reason = f"{reason} [{guard}]"
-        if target == self.fraction:
+        if abs(target[c] - self.weights[c]) <= 1e-12:
             # Pinned against a bound or frozen by a guardrail; if the walk
-            # cannot move it is done.
-            phase = Phase.CONVERGED if self._at_bound() else Phase.ADJUST
-            return self._move_to(target, phase, reason + "; immovable")
-        return self._move_to(target, Phase.ADJUST, reason)
+            # cannot move this coordinate it is done here.
+            if self._at_bound():
+                return self._finish_coord(tuple(self.weights),
+                                          reason + "; immovable")
+            return self._move_to(tuple(target), Phase.ADJUST,
+                                 reason + "; immovable")
+        return self._move_to(tuple(target), Phase.ADJUST, reason)
+
+    def _clamp_coord(self, c: int, value: float) -> float:
+        """Clamp one coordinate to its floor, the simplex ceiling, and the
+        total-fraction floor (the capacity spill must stay placed)."""
+        others = self.fraction - self.weights[c]
+        lo = max(self.min_weights[c], self.min_fraction - others)
+        hi = max(lo, self.cfg.max_fraction - others)
+        return min(max(value, lo), hi)
 
     def _guardrails(self, delta: float, m: EpochMetrics) -> tuple[float, str]:
         notes = []
@@ -305,9 +471,9 @@ class CaptionController:
             notes.append(
                 f"writers {m.writer_concurrency} > {self.cfg.writer_limit}")
         if delta > 0 and self.cfg.write_damp and m.write_ratio > 0:
-            slow = self.topology.slow
-            if slow is not None:
-                damp = 1.0 - m.write_ratio * (1.0 - slow.store_bw / slow.load_bw)
+            dev = self._active_spec()
+            if dev is not None:
+                damp = 1.0 - m.write_ratio * (1.0 - dev.store_bw / dev.load_bw)
                 delta *= max(damp, 0.0)
                 if damp < 1.0:
                     notes.append(f"write-damped x{damp:.2f}")
@@ -322,24 +488,67 @@ class CaptionController:
                 f"fast pressure {m.fast_pressure:.2f}: shrink frozen")
         return delta, "; ".join(notes)
 
-    def _at_bound(self) -> bool:
-        lo, hi = self.min_fraction, self.cfg.max_fraction
-        return ((self.fraction <= lo and self._dir < 0)
-                or (self.fraction >= hi and self._dir > 0))
+    def _active_spec(self):
+        """TierSpec of the device whose coordinate is being walked."""
+        if self.topology.slows:
+            return self.topology.slows[min(self._coord,
+                                           len(self.topology.slows) - 1)]
+        return self.topology.slow
 
-    def _move_to(self, target: float, phase: Phase, reason: str) -> Decision:
-        changed = abs(target - self.fraction) > 1e-12
-        self._prev = (self.fraction, float(self._ewma))
-        self.fraction = target
+    def _at_bound(self) -> bool:
+        c = self._coord
+        w = self.weights[c]
+        lo = max(self.min_weights[c],
+                 self.min_fraction - (self.fraction - w))
+        hi = self.cfg.max_fraction - (self.fraction - w)
+        return (w <= lo + 1e-12 and self._dir < 0) or (
+            w >= hi - 1e-12 and self._dir > 0)
+
+    def _finish_coord(self, weights: tuple[float, ...], reason: str
+                      ) -> Decision:
+        """This coordinate's walk ended: converge (single device or a full
+        stale pass) or hand the walk to the next device."""
+        if self.n_slow == 1:
+            return self._move_to(weights, Phase.CONVERGED, reason)
+        # "Moved" means net progress beyond the walk's own probe
+        # granularity — the excursion-and-revert dance around an optimum
+        # displaces by up to half the restart step without meaning it.
+        moved = (abs(weights[self._coord] - self._coord_start)
+                 > max(self.cfg.min_step, self._restart_step / 2) + 1e-12)
+        self._stale = 0 if moved else self._stale + 1
+        if self._stale >= self.n_slow:
+            return self._move_to(weights, Phase.CONVERGED,
+                                 reason + "; all devices stale")
+        out = self._move_to(weights, Phase.ADJUST,
+                            reason + "; next device")
+        self._coord = (self._coord + 1) % self.n_slow
+        if self._coord == 0:  # a full pass ended: anneal the probe step
+            self._restart_step = max(2 * self.cfg.min_step,
+                                     self._restart_step / 2)
+        self._coord_start = self.weights[self._coord]
+        self._step = self._restart_step
+        self._dir = -1.0 if self.latency_bound else 1.0
+        self._prev = None  # fresh baseline for the new coordinate
+        return out
+
+    def _move_to(self, weights: tuple[float, ...], phase: Phase,
+                 reason: str) -> Decision:
+        changed = any(abs(a - b) > 1e-12
+                      for a, b in zip(weights, self.weights))
+        self._prev = (tuple(self.weights), float(self._ewma))
+        self.weights = list(weights)
         self.phase = phase
         self._ewma = None
         self._epochs_here = 0
+        if phase == Phase.CONVERGED:
+            self._hold_bw = None  # fresh drift reference at the hold point
         return self._emit(changed, reason, phase=phase)
 
     def _emit(self, changed: bool, reason: str,
               phase: Optional[Phase] = None) -> Decision:
         if phase is not None:
             self.phase = phase
-        d = Decision(self.fraction, changed, self.phase, reason)
+        d = Decision(self.fraction, changed, self.phase, reason,
+                     weights=tuple(self.weights))
         self.history.append(d)
         return d

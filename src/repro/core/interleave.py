@@ -2,73 +2,171 @@
 
 ``InterleavedTensor`` is the framework object behind the paper's
 weighted-interleave experiments: a logical ``(rows, *feature)`` array
-whose pages are distributed across a fast and a slow tier according to a
-:class:`~repro.core.policy.MemPolicy`.  Reads and writes are routed to
-the owning tier; embedding-bag reduction (the paper's DLRM §5.2
-workload) runs a reduce on each part and sums — numerically identical to
-the un-tiered reduce (see tests/property tests).
+whose pages are distributed across a fast tier and N slow devices
+according to a :class:`~repro.core.policy.MemPolicy` (the paper's
+testbed exposes three CXL devices from different manufacturers at
+once, §4/Table 1).  The tensor holds one page shard per device plus a
+page->device map; reads and writes are routed to the owning device,
+and embedding-bag reduction (the paper's DLRM §5.2 workload) runs a
+reduce per shard and sums — numerically identical to the un-tiered
+reduce (see tests/property tests).
 
-On the CPU dry-run backend both parts are plain device arrays and the
+On the CPU dry-run backend every shard is a plain device array and the
 tier split is accounting (ledger + telemetry + perfmodel); on a TPU
-runtime the slow part carries a ``pinned_host`` sharding (backend
-``memory_kind``) or is staged by the BulkMover (backend ``staged``).
+runtime the slow shards carry a ``pinned_host`` sharding (backend
+``memory_kind``) or are staged by the BulkMover (backend ``staged``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ledger import TierLedger
-from repro.core.policy import MemPolicy
+from repro.core.policy import MemPolicy, largest_remainder_split
 from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
 
 
-def tier_page_map(assign: np.ndarray) -> tuple[np.ndarray, np.ndarray, list[int]]:
-    """(assign01, local index within owning tier, per-tier page counts).
+def device_page_map(assign: np.ndarray, n_devices: int
+                    ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+    """(device ordinals, local index within owning device, per-device counts).
 
-    The one place the page->tier bookkeeping lives: tiers beyond the
-    second collapse onto slow for storage, and each page's local index
-    is its arrival order within its tier.  Shared by construction and
-    repartition here and by the tiered KV cache.
-    """
+    The one place the page->device bookkeeping lives: each page's local
+    index is its arrival order within its device.  Shared by construction
+    and repartition here and by the tiered KV cache."""
+    dev = np.asarray(assign, np.int8)
+    if dev.size and int(dev.max()) >= n_devices:
+        raise ValueError(
+            f"page assigned to device {int(dev.max())} >= {n_devices}")
+    local = np.zeros(len(dev), np.int32)
+    counters = [0] * n_devices
+    for p, d in enumerate(dev):
+        local[p] = counters[d]
+        counters[d] += 1
+    return dev, local, counters
+
+
+def tier_page_map(assign: np.ndarray) -> tuple[np.ndarray, np.ndarray, list[int]]:
+    """Two-part storage view: devices beyond the second collapse onto the
+    slow part, and each page's local index is its arrival order within its
+    storage tier (the KV cache's shape-stable fast/slow pools)."""
     assign01 = np.minimum(np.asarray(assign), 1).astype(np.int8)
-    local = np.zeros(len(assign01), np.int32)
-    counters = [0, 0]
-    for p, t in enumerate(assign01):
-        local[p] = counters[t]
-        counters[t] += 1
-    return assign01, local, counters
+    return device_page_map(assign01, 2)
+
+
+def _policy_device_map(policy, n_pages: int
+                       ) -> tuple[np.ndarray, tuple[str, ...]]:
+    """Resolve a policy to (page->device ordinals, canonical device names).
+
+    Canonical order is fast first, then the policy's slow tiers in
+    declaration order — so ``membind("slow")`` lands every page on device
+    1 and a three-device weighted policy yields ordinals 0..3.  The fast
+    tier is the first well-known fast name, else — for multi-tier
+    policies — the FIRST tier (``from_tier_fractions`` always puts the
+    fast home first, and registry fast tiers like ``ddr5-r1`` are not on
+    the whitelist)."""
+    assign = np.asarray(policy.assign_pages(n_pages))
+    tiers = tuple(policy.tiers)
+    fast_names = MemPolicy._FAST_NAMES
+    fast_tier = next((t for t in tiers if t.lower() in fast_names), None)
+    if fast_tier is None and len(tiers) > 1:
+        fast_tier = tiers[0]
+    if fast_tier is None and len(tiers) == 1:
+        # membind on a registry device: infer fast-vs-slow from its KIND
+        # (local DRAM/HBM is a fast home; CXL/host/remote are far tiers),
+        # so membind('ddr5-r1') is not silently treated as 100% slow when
+        # the operator made it the fast tier... and membind('cxl-a') still
+        # correctly lands every page on the slow side.
+        from repro.core.tiers import DEVICE_REGISTRY
+        spec = DEVICE_REGISTRY.get(tiers[0].lower())
+        if spec is not None and spec.kind in ("hbm", "ddr_local"):
+            fast_tier = tiers[0]
+
+    def is_fast(t: str) -> bool:
+        return t == fast_tier or t.lower() in fast_names
+
+    slow_tiers: list[str] = []
+    for t in tiers:
+        if not is_fast(t) and t not in slow_tiers:
+            slow_tiers.append(t)
+    names = (fast_tier or "fast",) + (tuple(slow_tiers) or ("slow",))
+    dev_of = np.asarray(
+        [0 if is_fast(t) else 1 + slow_tiers.index(t) for t in tiers],
+        np.int8)
+    dev = dev_of[np.minimum(assign, len(tiers) - 1)]
+    return dev, names
+
+
+def resolve_device_names(existing: Sequence[str], n_devices: int,
+                         policy_names: Optional[Sequence[str]] = None,
+                         fast_tier: Optional[str] = None,
+                         slow_tier: Optional[str] = None) -> tuple[str, ...]:
+    """Resolve device-ordinal route labels: a policy's names, widened
+    with the EXISTING names for higher ordinals (a narrower policy must
+    not rename a pinned page's real device), padded with placeholders,
+    with the legacy fast/slow overrides on the first two (the two-device
+    compatibility path).  Shared by InterleavedTensor and TieredKVCache
+    so the two actuation paths can never resolve names differently."""
+    names = list(policy_names or existing)
+    for n in tuple(existing)[len(names):]:
+        names.append(n)
+    while len(names) < n_devices:
+        names.append(f"slow{len(names)}")
+    if fast_tier is not None:
+        names[0] = fast_tier
+    if slow_tier is not None and len(names) > 1:
+        names[1] = slow_tier
+    return tuple(names)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class InterleavedTensor:
-    """A logical array paged across (fast, slow) tiers along axis 0."""
+    """A logical array paged across (fast, slow devices...) along axis 0."""
 
-    fast: jax.Array  # (n_fast_pages * page_rows, *feature)
-    slow: jax.Array  # (n_slow_pages * page_rows, *feature)
-    page_tier: jax.Array  # (n_pages,) int8: 0 = fast, 1 = slow
-    page_local: jax.Array  # (n_pages,) int32: page index within its tier
+    #: per-device page shards; ``parts[0]`` is the fast tier's.
+    parts: tuple[jax.Array, ...]
+    page_device: jax.Array  # (n_pages,) int8: 0 = fast, i >= 1 = slow dev i-1
+    page_local: jax.Array  # (n_pages,) int32: page index within its device
     page_rows: int
     rows: int  # logical row count (may be < n_pages * page_rows)
+    #: route labels per device ordinal (telemetry/mover tier names).
+    device_names: tuple[str, ...] = ("fast", "slow")
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
-        children = (self.fast, self.slow, self.page_tier, self.page_local)
-        aux = (self.page_rows, self.rows)
+        children = (tuple(self.parts), self.page_device, self.page_local)
+        aux = (self.page_rows, self.rows, self.device_names)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        fast, slow, page_tier, page_local = children
-        page_rows, rows = aux
-        return cls(fast, slow, page_tier, page_local, page_rows, rows)
+        parts, page_device, page_local = children
+        page_rows, rows, device_names = aux
+        return cls(tuple(parts), page_device, page_local, page_rows, rows,
+                   device_names)
+
+    # -- two-device compatibility views --------------------------------------
+    @property
+    def fast(self) -> jax.Array:
+        return self.parts[0]
+
+    @property
+    def slow(self) -> jax.Array:
+        """The single slow shard (two-device path); ambiguous beyond that."""
+        if len(self.parts) > 2:
+            raise AttributeError(
+                "tensor has multiple slow devices; index .parts directly")
+        return self.parts[1]
+
+    @property
+    def page_tier(self) -> jax.Array:
+        """(n_pages,) int8 0/1 fast-vs-slow view of the device map."""
+        return jnp.minimum(self.page_device, 1).astype(jnp.int8)
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -83,98 +181,119 @@ class InterleavedTensor:
     ) -> "InterleavedTensor":
         rows = array.shape[0]
         n_pages = max(1, math.ceil(rows / page_rows))
-        assign01, page_local, _ = tier_page_map(policy.page_is_slow(n_pages))
+        assign, names = _policy_device_map(policy, n_pages)
+        dev, page_local, counts = device_page_map(assign, len(names))
         pad_rows = n_pages * page_rows - rows
         feature = array.shape[1:]
         padded = jnp.concatenate(
             [array, jnp.zeros((pad_rows,) + feature, array.dtype)], axis=0
         ) if pad_rows else array
         paged = padded.reshape((n_pages, page_rows) + feature)
-        fast_ids = np.nonzero(assign01 == 0)[0]
-        slow_ids = np.nonzero(assign01 == 1)[0]
+
         def take_pages(ids):
             if len(ids) == 0:
                 return jnp.zeros((0, page_rows) + feature, array.dtype)
             return paged[np.asarray(ids)]
-        fast = take_pages(fast_ids).reshape((-1,) + feature)
-        slow = take_pages(slow_ids).reshape((-1,) + feature)
+
+        parts = tuple(
+            take_pages(np.nonzero(dev == i)[0]).reshape((-1,) + feature)
+            for i in range(len(names)))
         out = cls(
-            fast=fast,
-            slow=slow,
-            page_tier=jnp.asarray(assign01, jnp.int8),
+            parts=parts,
+            page_device=jnp.asarray(dev, jnp.int8),
             page_local=jnp.asarray(page_local, jnp.int32),
             page_rows=page_rows,
             rows=rows,
+            device_names=names,
         )
         if ledger is not None:
-            fast_tier = policy.tiers[0]
-            slow_tier = policy.tiers[1] if len(policy.tiers) > 1 else policy.tiers[0]
-            ledger.register(name, fast_tier, out.fast.size * out.fast.dtype.itemsize)
-            if out.slow.size:
-                ledger.register(name, slow_tier, out.slow.size * out.slow.dtype.itemsize)
+            for i, part in enumerate(parts):
+                if part.size:
+                    ledger.register(name, names[i],
+                                    part.size * part.dtype.itemsize)
         return out
 
     # -- derived -------------------------------------------------------------
     @property
     def n_pages(self) -> int:
-        return self.page_tier.shape[0]
+        return self.page_device.shape[0]
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.parts)
 
     @property
     def row_bytes(self) -> int:
-        feat = int(np.prod(self.fast.shape[1:])) if self.fast.ndim > 1 else 1
-        return feat * self.fast.dtype.itemsize
+        f = self.parts[0]
+        feat = int(np.prod(f.shape[1:])) if f.ndim > 1 else 1
+        return feat * f.dtype.itemsize
 
     def slow_fraction(self) -> float:
-        return float(np.asarray(self.page_tier, np.float32).mean())
+        return float((np.asarray(self.page_device) >= 1).mean())
+
+    def device_fractions(self) -> dict[str, float]:
+        """Per-device page share, keyed by device name."""
+        dev = np.asarray(self.page_device)
+        return {n: float((dev == i).mean())
+                for i, n in enumerate(self.device_names)}
+
+    def weights(self) -> tuple[float, ...]:
+        """Per-slow-device page shares (the Caption weight vector)."""
+        dev = np.asarray(self.page_device)
+        return tuple(float((dev == i).mean())
+                     for i in range(1, len(self.parts)))
 
     # -- addressing ----------------------------------------------------------
     def _route(self, idx: jax.Array):
-        """row idx -> (is_slow mask, local flat row index in owning part)."""
+        """row idx -> (owning device ordinal, local flat row index)."""
         page = idx // self.page_rows
         offset = idx % self.page_rows
-        tier = jnp.take(self.page_tier, page, mode="clip")
+        dev = jnp.take(self.page_device, page, mode="clip")
         local_page = jnp.take(self.page_local, page, mode="clip")
         local = local_page * self.page_rows + offset
-        return tier.astype(bool), local
+        return dev, local
 
     # -- access --------------------------------------------------------------
     def gather_rows(self, idx: jax.Array) -> jax.Array:
-        """rows[idx] — routed gather across both tiers."""
-        is_slow, local = self._route(idx)
-        if self.fast.shape[0] == 0:  # everything slow (membind-slow / f=1.0)
-            return jnp.take(self.slow, local, axis=0, mode="clip")
-        from_fast = jnp.take(self.fast, local, axis=0, mode="clip")
-        if self.slow.shape[0] == 0:
-            return from_fast
-        from_slow = jnp.take(self.slow, local, axis=0, mode="clip")
-        mask = is_slow.reshape(is_slow.shape + (1,) * (from_fast.ndim - is_slow.ndim))
-        return jnp.where(mask, from_slow, from_fast)
+        """rows[idx] — routed gather across every device shard."""
+        dev, local = self._route(idx)
+        out = None
+        for i, part in enumerate(self.parts):
+            if part.shape[0] == 0:
+                continue
+            got = jnp.take(part, local, axis=0, mode="clip")
+            if out is None:
+                out = got
+            else:
+                mask = (dev == i)
+                mask = mask.reshape(mask.shape + (1,) * (got.ndim - mask.ndim))
+                out = jnp.where(mask, got, out)
+        if out is None:  # zero-page tensor
+            feat = self.parts[0].shape[1:]
+            out = jnp.zeros(idx.shape + feat, self.parts[0].dtype)
+        return out
+
+    def _scatter(self, idx: jax.Array, values: jax.Array, op: str
+                 ) -> "InterleavedTensor":
+        dev, local = self._route(idx)
+        parts = []
+        for i, part in enumerate(self.parts):
+            if part.shape[0] == 0:
+                parts.append(part)
+                continue
+            # Out-of-device indices are pushed out of bounds and dropped.
+            p_idx = jnp.where(dev == i, local, part.shape[0])
+            ref = part.at[p_idx]
+            parts.append(ref.set(values, mode="drop") if op == "set"
+                         else ref.add(values, mode="drop"))
+        return dataclasses.replace(self, parts=tuple(parts))
 
     def update_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
         """Functional scatter-set of ``values`` at row ``idx``."""
-        is_slow, local = self._route(idx)
-        # Out-of-part indices are pushed out of bounds and dropped.
-        fast_idx = jnp.where(is_slow, self.fast.shape[0], local)
-        slow_idx = jnp.where(is_slow, local, self.slow.shape[0])
-        fast = self.fast.at[fast_idx].set(values, mode="drop")
-        slow = (
-            self.slow.at[slow_idx].set(values, mode="drop")
-            if self.slow.shape[0]
-            else self.slow
-        )
-        return dataclasses.replace(self, fast=fast, slow=slow)
+        return self._scatter(idx, values, "set")
 
     def add_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
-        is_slow, local = self._route(idx)
-        fast_idx = jnp.where(is_slow, self.fast.shape[0], local)
-        slow_idx = jnp.where(is_slow, local, self.slow.shape[0])
-        fast = self.fast.at[fast_idx].add(values, mode="drop")
-        slow = (
-            self.slow.at[slow_idx].add(values, mode="drop")
-            if self.slow.shape[0]
-            else self.slow
-        )
-        return dataclasses.replace(self, fast=fast, slow=slow)
+        return self._scatter(idx, values, "add")
 
     def bag_reduce(
         self,
@@ -182,40 +301,38 @@ class InterleavedTensor:
         weights: Optional[jax.Array] = None,  # (batch, bag)
         reduce_fn: Optional[Callable] = None,
     ) -> jax.Array:
-        """Embedding-bag sum over both tiers (DLRM §5.2 reduction).
+        """Embedding-bag sum across all device shards (DLRM §5.2 reduction).
 
         ``reduce_fn(table, indices, weights) -> (batch, feature)`` lets the
         Pallas ``embedding_reduce`` kernel slot in; default is pure jnp.
-        Rows owned by the other tier contribute weight 0 to each part, so
-        fast-part + slow-part equals the un-tiered reduction exactly.
+        Rows owned by another device contribute weight 0 to each shard, so
+        the per-shard partials sum to the un-tiered reduction exactly.
         """
         if weights is None:
-            weights = jnp.ones(indices.shape, self.fast.dtype)
-        is_slow, local = self._route(indices)
+            weights = jnp.ones(indices.shape, self.parts[0].dtype)
+        dev, local = self._route(indices)
         if reduce_fn is None:
             reduce_fn = _jnp_bag_reduce
         out = None
-        if self.fast.shape[0]:
-            w_fast = jnp.where(is_slow, 0, weights).astype(self.fast.dtype)
-            local_fast = jnp.minimum(local, self.fast.shape[0] - 1)
-            out = reduce_fn(self.fast, local_fast, w_fast)
-        if self.slow.shape[0]:
-            w_slow = jnp.where(is_slow, weights, 0).astype(self.slow.dtype)
-            local_slow = jnp.minimum(local, self.slow.shape[0] - 1)
-            part = reduce_fn(self.slow, local_slow, w_slow)
-            out = part if out is None else out + part
+        for i, part in enumerate(self.parts):
+            if part.shape[0] == 0:
+                continue
+            w_i = jnp.where(dev == i, weights, 0).astype(part.dtype)
+            local_i = jnp.minimum(local, part.shape[0] - 1)
+            partial = reduce_fn(part, local_i, w_i)
+            out = partial if out is None else out + partial
         if out is None:  # zero-row tensor
-            feat = self.fast.shape[1:]
-            out = jnp.zeros((indices.shape[0],) + feat, self.fast.dtype)
+            feat = self.parts[0].shape[1:]
+            out = jnp.zeros((indices.shape[0],) + feat, self.parts[0].dtype)
         return out
 
     # -- migration (TPP-style page moves; used by elastic re-planning) -------
     def migrate_pages(self, page_ids: np.ndarray, to_slow: bool) -> "InterleavedTensor":
         """Move whole pages between tiers (host-side; not jit-traceable)."""
         dense = np.asarray(self.to_array())
-        tier = np.asarray(self.page_tier).copy()
-        tier[np.asarray(page_ids)] = 1 if to_slow else 0
-        policy_like = _ExplicitAssignment(tier)
+        dev = np.asarray(self.page_device).copy()
+        dev[np.asarray(page_ids)] = 1 if to_slow else 0
+        policy_like = _ExplicitAssignment(dev, self.device_names)
         return InterleavedTensor.from_array(
             jnp.asarray(dense), policy_like, self.page_rows
         )
@@ -225,8 +342,8 @@ class InterleavedTensor:
         policy: MemPolicy,
         *,
         mover=None,  # Optional[BulkMover]
-        fast_tier: str = "fast",
-        slow_tier: str = "slow",
+        fast_tier: Optional[str] = None,
+        slow_tier: Optional[str] = None,
         telemetry: Telemetry = GLOBAL_TELEMETRY,
         source: Optional[str] = None,
         lane: Optional[int] = None,
@@ -234,42 +351,66 @@ class InterleavedTensor:
         """Re-tier under ``policy``, migrating ONLY the delta pages.
 
         The Caption controller's actuation path: diff the current
-        page->tier map against the policy's and ship just the changed
-        pages between tiers — through the
+        page->device map against the policy's and ship just the changed
+        pages between devices — through the
         :class:`~repro.core.mover.BulkMover` when one is given (batched,
         cache-bypass descriptors, writer-limited), else accounted directly
         to telemetry.  Unchanged pages are recompacted within their own
-        tier and never cross the interconnect, so inter-tier traffic
+        device and never cross the interconnect, so inter-device traffic
         equals ``delta_pages * page_bytes`` exactly (asserted by
-        benchmarks/fig11_caption.py).
+        benchmarks/fig11_caption.py).  Every move is billed to its real
+        ``(src_device, dst_device)`` route — a page hopping between two
+        slow devices is the paper's C2C traffic, not fast-tier churn.
+
+        ``fast_tier``/``slow_tier`` override the first two route labels
+        (the two-device compatibility path, e.g. hbm/host on v5e).
 
         Numerically a no-op: ``to_array()`` before == after.
         """
         n = self.n_pages
-        new_assign = np.asarray(policy.page_is_slow(n), np.int8)
-        old_assign = np.asarray(self.page_tier)
-        delta = np.nonzero(new_assign != old_assign)[0]
-        if delta.size == 0:
+        new_dev, names = _policy_device_map(policy, n)
+        # Widen with the tensor's EXISTING names: a narrower policy on a
+        # wider tensor must keep billing the higher ordinals' real
+        # devices, not rename them to placeholders.
+        names = resolve_device_names(
+            self.device_names, max(len(names), len(self.parts)), names,
+            fast_tier, slow_tier)
+        return self._reassign(new_dev, names, mover=mover,
+                              telemetry=telemetry, source=source, lane=lane)
+
+    def _reassign(self, new_dev: np.ndarray, names: tuple[str, ...], *,
+                  mover=None, telemetry: Telemetry = GLOBAL_TELEMETRY,
+                  source: Optional[str] = None,
+                  lane: Optional[int] = None) -> "InterleavedTensor":
+        n = self.n_pages
+        new_dev = np.asarray(new_dev, np.int8)
+        old_dev = np.asarray(self.page_device)
+        n_devices = max(len(names), len(self.parts),
+                        int(new_dev.max(initial=0)) + 1)
+        delta = np.nonzero(new_dev != old_dev)[0]
+        if delta.size == 0 and n_devices == len(self.parts):
             return self
 
-        feature = self.fast.shape[1:]
+        feature = self.parts[0].shape[1:]
         old_local = np.asarray(self.page_local)
-        fast_paged = np.asarray(self.fast).reshape((-1, self.page_rows) + feature)
-        slow_paged = np.asarray(self.slow).reshape((-1, self.page_rows) + feature)
+        paged = [np.asarray(p).reshape((-1, self.page_rows) + feature)
+                 for p in self.parts]
 
         def old_page(p: int) -> np.ndarray:
-            part = slow_paged if old_assign[p] else fast_paged
-            return part[old_local[p]]
+            return paged[old_dev[p]][old_local[p]]
+
+        def route_name(d: int) -> str:
+            return names[d] if d < len(names) else f"dev{d}"
 
         # Ship only the delta through the movement engine.
         moved: dict[int, Any] = {}
         page_bytes = self.page_rows * self.row_bytes
-        if mover is not None:
+        if mover is not None and delta.size:
             from repro.core.mover import LANE_BULK, Descriptor
             descs = [
                 Descriptor(
-                    src_tier=slow_tier if old_assign[p] else fast_tier,
-                    dst_tier=fast_tier if old_assign[p] else slow_tier,
+                    src_tier=route_name(int(old_dev[p])),
+                    dst_tier=route_name(int(new_dev[p])),
                     payload=jnp.asarray(old_page(p)),
                     on_done=lambda r, p=int(p): moved.__setitem__(p, r),
                     lane=LANE_BULK if lane is None else lane,
@@ -282,43 +423,66 @@ class InterleavedTensor:
                 mover.wait_all()
         else:
             for p in delta:
-                src = slow_tier if old_assign[p] else fast_tier
-                dst = fast_tier if old_assign[p] else slow_tier
-                telemetry.record_move(src, dst, page_bytes, 0.0, source=source)
+                telemetry.record_move(
+                    route_name(int(old_dev[p])), route_name(int(new_dev[p])),
+                    page_bytes, 0.0, source=source)
                 moved[int(p)] = old_page(p)
 
-        new_assign, new_local, _ = tier_page_map(new_assign)
-        parts: list[list[np.ndarray]] = [[], []]
+        new_dev, new_local, _ = device_page_map(new_dev, n_devices)
+        groups: list[list[np.ndarray]] = [[] for _ in range(n_devices)]
         for p in range(n):
-            parts[int(new_assign[p])].append(
+            groups[int(new_dev[p])].append(
                 np.asarray(moved[p]) if p in moved else old_page(p))
 
         def stack(pages: list[np.ndarray]) -> jax.Array:
             if not pages:
-                return jnp.zeros((0,) + feature, self.fast.dtype)
+                return jnp.zeros((0,) + feature, self.parts[0].dtype)
             return jnp.asarray(
-                np.stack(pages).reshape((-1,) + feature), self.fast.dtype)
+                np.stack(pages).reshape((-1,) + feature),
+                self.parts[0].dtype)
 
         return dataclasses.replace(
             self,
-            fast=stack(parts[0]),
-            slow=stack(parts[1]),
-            page_tier=jnp.asarray(new_assign, jnp.int8),
+            parts=tuple(stack(g) for g in groups),
+            page_device=jnp.asarray(new_dev, jnp.int8),
             page_local=jnp.asarray(new_local, jnp.int32),
+            device_names=tuple(
+                route_name(d) for d in range(n_devices)),
         )
 
     def repartition_fraction(self, fraction: float, **kwargs
                              ) -> "InterleavedTensor":
-        """Re-tier to ``fraction`` slow with the minimal page delta.
+        """Re-tier to ``fraction`` slow with the minimal page delta
+        (two-device path: the single slow device absorbs the fraction)."""
+        return self.repartition_weights((float(fraction),), **kwargs)
 
-        Unlike ``repartition(MemPolicy.from_slow_fraction(...))`` — whose
-        N:M pattern can disagree with the current map on many pages — this
-        flips exactly ``|target - current|`` pages (evenly spread), so the
-        controller's small adjustments stay cheap.
-        """
-        assign = minimal_delta_assignment(
-            np.asarray(self.page_tier), fraction)
-        return self.repartition(_ExplicitAssignment(assign), **kwargs)
+    def repartition_weights(self, weights: Sequence[float], *,
+                            mover=None, fast_tier: Optional[str] = None,
+                            slow_tier: Optional[str] = None,
+                            device_names: Optional[Sequence[str]] = None,
+                            telemetry: Telemetry = GLOBAL_TELEMETRY,
+                            source: Optional[str] = None,
+                            lane: Optional[int] = None
+                            ) -> "InterleavedTensor":
+        """Re-tier to a per-slow-device weight vector with minimal moves.
+
+        ``weights[i]`` is the target page share of slow device ``i``; the
+        fast tier keeps the remainder.  Unlike building an N:M policy —
+        whose round-robin pattern can disagree with the current map on far
+        more pages than the share delta — this flips exactly the surplus/
+        deficit page counts (evenly spread), so the controller's small
+        weight-vector adjustments stay cheap.  A weight vector that rounds
+        to the current per-device page counts is a true no-op: the same
+        object is returned and no mover work is enqueued."""
+        n_devices = max(len(self.parts), len(weights) + 1)
+        new_dev = minimal_delta_weights(
+            np.asarray(self.page_device), tuple(weights), n_devices)
+        if new_dev is None:  # rounds to the current assignment: no-op
+            return self
+        names = resolve_device_names(self.device_names, n_devices,
+                                     device_names, fast_tier, slow_tier)
+        return self._reassign(new_dev, names, mover=mover,
+                              telemetry=telemetry, source=source, lane=lane)
 
     def to_array(self) -> jax.Array:
         """Materialize the logical array (tests / checkpointing)."""
@@ -327,30 +491,33 @@ class InterleavedTensor:
 
     # -- accounting -----------------------------------------------------------
     def traffic_bytes(self, idx: np.ndarray) -> dict[str, int]:
-        """Bytes touched per tier for a concrete index batch (host-side)."""
+        """Bytes touched per device for a concrete index batch (host-side)."""
         page = np.asarray(idx).ravel() // self.page_rows
-        tier = np.asarray(self.page_tier)[np.minimum(page, self.n_pages - 1)]
-        slow_rows = int((tier == 1).sum())
-        fast_rows = int(tier.size - slow_rows)
-        return {
-            "fast": fast_rows * self.row_bytes,
-            "slow": slow_rows * self.row_bytes,
-        }
+        dev = np.asarray(self.page_device)[np.minimum(page, self.n_pages - 1)]
+        out = {}
+        for i, name in enumerate(self.device_names):
+            out[name] = int((dev == i).sum()) * self.row_bytes
+        # two-device compatibility keys
+        out.setdefault("fast", out.get(self.device_names[0], 0))
+        out.setdefault("slow", sum(
+            int((dev == i).sum()) * self.row_bytes
+            for i in range(1, len(self.parts))))
+        return out
 
     def record_gather(self, idx: np.ndarray, seconds: float,
                       telemetry: Telemetry = GLOBAL_TELEMETRY) -> None:
         t = self.traffic_bytes(idx)
-        telemetry.record_move("fast", "engine", t["fast"], seconds)
-        telemetry.record_move("slow", "engine", t["slow"], seconds)
+        for i, name in enumerate(self.device_names):
+            telemetry.record_move(name, "engine", t.get(name, 0), seconds)
 
 
 class _ExplicitAssignment:
-    """Adapter: a fixed page->tier map with the MemPolicy interface."""
+    """Adapter: a fixed page->device map with the MemPolicy interface."""
 
-    tiers = ("fast", "slow")
-
-    def __init__(self, assignment: np.ndarray):
-        self._assignment = assignment.astype(np.int8)
+    def __init__(self, assignment: np.ndarray,
+                 tiers: Sequence[str] = ("fast", "slow")):
+        self._assignment = np.asarray(assignment).astype(np.int8)
+        self.tiers = tuple(tiers)
 
     def assign_pages(self, n_pages: int) -> np.ndarray:
         if n_pages != len(self._assignment):
@@ -358,36 +525,81 @@ class _ExplicitAssignment:
         return self._assignment
 
     def page_is_slow(self, n_pages: int) -> np.ndarray:
-        return self.assign_pages(n_pages).astype(bool)
+        return self.assign_pages(n_pages) >= 1
+
+
+def _round_targets(weights: tuple[float, ...], n_pages: int) -> list[int]:
+    """Per-slow-device page targets by largest-remainder rounding.
+
+    The total slow count is ``round(sum(weights) * n)`` — identical to the
+    scalar path's rounding — then split so the per-device counts sum to it
+    exactly (plain per-device rounding can create or destroy pages)."""
+    w = [min(max(float(x), 0.0), 1.0) for x in weights]
+    total = min(sum(w), 1.0)
+    want = int(round(total * n_pages))
+    base, _ = largest_remainder_split([x * n_pages for x in w], want)
+    return base
+
+
+def minimal_delta_weights(current: np.ndarray, weights: tuple[float, ...],
+                          n_devices: int) -> Optional[np.ndarray]:
+    """New page->device map hitting ``weights`` with the FEWEST moves.
+
+    Returns ``None`` when the targets round to the current per-device
+    counts (the no-op guarantee: callers must not churn page ids or
+    enqueue empty-delta mover work).  Surplus pages are released evenly
+    spread from their device and deficits filled round-robin, keeping the
+    interleave discipline (clustered pages would serialize one device on
+    strided access)."""
+    cur = np.asarray(current, np.int8)
+    n = len(cur)
+    targets = _round_targets(tuple(weights), n)
+    targets += [0] * (n_devices - 1 - len(targets))
+    counts = np.bincount(cur, minlength=n_devices)
+    target_all = [n - sum(targets)] + list(targets)
+    if all(int(counts[d]) == target_all[d] for d in range(n_devices)):
+        return None
+    out = cur.copy()
+    # Release surplus pages (evenly spread within each surplus device)...
+    pool: list[int] = []
+    for d in range(n_devices):
+        surplus = int(counts[d]) - target_all[d]
+        if surplus <= 0:
+            continue
+        cands = np.nonzero(cur == d)[0]
+        pick = cands[(np.arange(surplus) * len(cands)) // surplus]
+        pool.extend(int(p) for p in pick)
+    # ... and deal them to deficit devices, round-robin so each deficit
+    # device's new pages stay spread across the address range.
+    pool.sort()
+    deficits = [(d, target_all[d] - int(counts[d]))
+                for d in range(n_devices) if target_all[d] > int(counts[d])]
+    k = nxt = 0
+    while nxt < len(pool):
+        d, need = deficits[k % len(deficits)]
+        if need > 0:
+            out[pool[nxt]] = d
+            nxt += 1
+            deficits[k % len(deficits)] = (d, need - 1)
+        else:
+            deficits.pop(k % len(deficits))
+            continue
+        k += 1
+    return out
 
 
 def minimal_delta_assignment(current: np.ndarray, fraction: float) -> np.ndarray:
-    """New page->tier map hitting ``fraction`` slow with the FEWEST flips.
+    """Two-device view of :func:`minimal_delta_weights`.
 
     The Caption actuation helper: two N:M interleave patterns at nearby
     ratios can disagree on far more pages than the ratio delta, so the
     controller flips exactly ``|target - current|`` pages instead,
-    spreading the flipped pages evenly (interleave discipline: clustered
-    slow pages would serialize on one tier for strided access).
-    """
+    spreading the flipped pages evenly.  When ``fraction`` rounds to the
+    current slow-page count the current assignment is returned unchanged
+    (no phantom page-id churn)."""
     cur = np.asarray(current, np.int8)
-    n = len(cur)
-    target = int(round(min(max(fraction, 0.0), 1.0) * n))
-    cur_slow = int(cur.sum())
-    if target == cur_slow:
-        return cur.copy()
-    out = cur.copy()
-    if target > cur_slow:
-        cands = np.nonzero(cur == 0)[0]
-        k = target - cur_slow
-        new_tier = 1
-    else:
-        cands = np.nonzero(cur == 1)[0]
-        k = cur_slow - target
-        new_tier = 0
-    pick = cands[(np.arange(k) * len(cands)) // k]  # even spread, distinct
-    out[pick] = new_tier
-    return out
+    out = minimal_delta_weights(np.minimum(cur, 1), (float(fraction),), 2)
+    return cur.copy() if out is None else out
 
 
 def _jnp_bag_reduce(table: jax.Array, indices: jax.Array, weights: jax.Array):

@@ -110,13 +110,20 @@ class BulkMover:
         self.drain_workers = drain_workers
         self.telemetry = telemetry
         self._execute = execute
-        self._write_sem = threading.Semaphore(max_writers)
+        # One writer semaphore PER slow device: the §6 writer limit is a
+        # property of each device's controller (Fig. 3 collapse is per
+        # controller), so concurrent writers into CXL-A must not throttle
+        # CXL-B.  Created lazily per destination tier name.
+        self._write_sems: dict[str, threading.Semaphore] = {}
         self._read_sem = threading.Semaphore(max_readers)
-        # Writer-concurrency watermark: the §6 "limit concurrent writers"
-        # signal a controller (core/caption.py) reads each epoch.
+        # Writer-concurrency watermarks (global + per device): the §6
+        # "limit concurrent writers" signal a controller (core/caption.py)
+        # reads each epoch.
         self._writer_lock = threading.Lock()
         self._active_writers = 0
         self.peak_writers = 0
+        self._active_by_dev: dict[str, int] = {}
+        self.peak_by_dev: dict[str, int] = {}
         # Priority drain queue: entries are (lane, seq, batch); the seq
         # tiebreaker keeps FIFO order within a lane.  None batch = shutdown.
         self._queue: "queue.PriorityQueue[tuple[int, int, Optional[list[Descriptor]]]]" = (
@@ -178,19 +185,34 @@ class BulkMover:
                 batches.append(group[i : i + self.batch_size])
         return batches
 
+    def _write_sem_for(self, dst: str) -> threading.Semaphore:
+        with self._writer_lock:
+            sem = self._write_sems.get(dst)
+            if sem is None:
+                sem = self._write_sems[dst] = threading.Semaphore(
+                    self.max_writers)
+            return sem
+
     # -- execution -----------------------------------------------------------
     def _run_batch(self, batch: list[Descriptor]) -> list[Completion]:
         out = []
         modeled = self.modeled_cost(batch)
         for d in batch:
             writes_slow = self._tier(d.dst_tier).link_bw is not None
-            sem = self._write_sem if writes_slow else self._read_sem
+            sem = (self._write_sem_for(d.dst_tier) if writes_slow
+                   else self._read_sem)
             with _acquired(sem):
                 if writes_slow:
                     with self._writer_lock:
                         self._active_writers += 1
                         self.peak_writers = max(self.peak_writers,
                                                 self._active_writers)
+                        dev = d.dst_tier
+                        self._active_by_dev[dev] = (
+                            self._active_by_dev.get(dev, 0) + 1)
+                        self.peak_by_dev[dev] = max(
+                            self.peak_by_dev.get(dev, 0),
+                            self._active_by_dev[dev])
                 t0 = time.perf_counter()
                 try:
                     result = self._execute(d.payload)
@@ -198,6 +220,7 @@ class BulkMover:
                     if writes_slow:
                         with self._writer_lock:
                             self._active_writers -= 1
+                            self._active_by_dev[d.dst_tier] -= 1
                 dt = time.perf_counter() - t0
             self.telemetry.record_move(
                 d.src_tier, d.dst_tier, d.nbytes, dt, descriptors=1,
@@ -249,9 +272,17 @@ class BulkMover:
                 self._queue.put((b[0].lane, next(self._seq), b))
         return []
 
-    def take_peak_writers(self) -> int:
-        """Peak concurrent slow-tier writers since last call (then reset)."""
+    def take_peak_writers(self, device: Optional[str] = None) -> int:
+        """Peak concurrent slow-tier writers since last call (then reset).
+
+        With ``device`` (a slow tier name), the per-device watermark — the
+        Fig. 3 collapse is per controller, so an N-device Caption loop
+        reads each device's own writer pressure."""
         with self._writer_lock:
+            if device is not None:
+                peak = self.peak_by_dev.get(device, 0)
+                self.peak_by_dev[device] = self._active_by_dev.get(device, 0)
+                return peak
             peak, self.peak_writers = self.peak_writers, self._active_writers
             return peak
 

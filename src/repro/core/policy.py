@@ -15,6 +15,46 @@ from typing import Sequence
 import numpy as np
 
 
+def largest_remainder_split(quotas: Sequence[float], units: int,
+                            caps: Sequence[int] | None = None
+                            ) -> tuple[list[int], int]:
+    """Split ``units`` integer slots across buckets with real quotas.
+
+    Floor each quota, then deal the remaining slots one at a time in
+    descending fractional-remainder order (cycling), skipping buckets at
+    their ``caps``.  The one rounding discipline shared by the N:M policy
+    builder, the planner's capacity-aware quantizer, and the minimal-move
+    page targets — three hand-rolled copies WILL drift apart.  Returns
+    ``(counts, shortfall)``; shortfall > 0 only when every bucket is
+    capped."""
+    n = len(quotas)
+    if n == 0 or units <= 0:
+        return [0] * n, max(units, 0)
+    base = [int(q) for q in quotas]
+    if sum(base) > units:
+        # Quotas over-promise (e.g. clamped inputs): rebase proportionally.
+        total_q = sum(quotas) or 1.0
+        quotas = [q * units / total_q for q in quotas]
+        base = [int(q) for q in quotas]
+    if caps is not None:
+        base = [min(b, c) for b, c in zip(base, caps)]
+    order = sorted(range(n), key=lambda i: quotas[i] - base[i], reverse=True)
+    need = units - sum(base)
+    while need > 0:
+        progressed = False
+        for i in order:
+            if need <= 0:
+                break
+            if caps is not None and base[i] + 1 > caps[i]:
+                continue
+            base[i] += 1
+            need -= 1
+            progressed = True
+        if not progressed:
+            break
+    return base, need
+
+
 class PolicyKind(enum.Enum):
     MEMBIND = "membind"  # all pages on one tier
     PREFERRED = "preferred"  # fill preferred tier, overflow to next
@@ -100,6 +140,83 @@ class MemPolicy:
         if d == m:
             return MemPolicy.membind(slow)
         return MemPolicy.weighted((fast, slow), (d - m, m))
+
+    @staticmethod
+    def from_tier_fractions(fast: str, devices: Sequence[str],
+                            fractions: Sequence[float],
+                            denominator: int = 64,
+                            exact: bool = False) -> "MemPolicy":
+        """N-device weighted interleave from a per-device fraction vector.
+
+        ``fractions[i]`` of pages land on ``devices[i]``; the fast tier
+        gets the remainder.  By default the TOTAL slow share picks the
+        smallest cycle within ``denominator`` (same discipline as
+        :meth:`from_slow_fraction`: a 64-long blocky cycle would leave a
+        32-page buffer entirely on the fast tier at 30%), and the cycle's
+        slow slots split across devices by largest remainder.  ``exact``
+        keeps the full ``denominator`` cycle so each device's fraction is
+        represented to 1/denominator (the planner's capacity-quantized
+        path, where buffers have thousands of pages)."""
+        if len(devices) != len(fractions):
+            raise ValueError("one fraction per device")
+        fr = [min(max(float(f), 0.0), 1.0) for f in fractions]
+        total = sum(fr)
+        if total > 1.0 + 1e-9:
+            raise ValueError(f"device fractions sum to {total:.3f} > 1")
+        total = min(total, 1.0)
+        if not devices:
+            return MemPolicy.membind(fast)
+        if total <= 0.0:
+            # All-fast, but keep every device in the policy (zero-
+            # weighted): membind would lose the device vocabulary, and a
+            # fast name outside the well-known list would then be
+            # misread as a slow device downstream.
+            return MemPolicy.weighted((fast,) + tuple(devices),
+                                      (1,) + (0,) * len(devices))
+        from fractions import Fraction
+        n_active = sum(1 for f in fr if f > 0)
+        if exact:
+            cycle, units = denominator, int(round(total * denominator))
+        else:
+            ft = Fraction(total).limit_denominator(denominator)
+            if ft.numerator == 0:
+                ft = Fraction(1, denominator)
+            cycle, units = ft.denominator, ft.numerator
+            if units < n_active:
+                # Stretch the cycle so every active device owns at least
+                # one slot — unless that would blow past the denominator
+                # (then small devices must round away regardless).
+                k = -(-n_active // units)
+                if cycle * k <= denominator:
+                    cycle, units = cycle * k, units * k
+        units = max(units, 1)
+        # Largest-remainder split of the cycle's slow slots across devices.
+        base, _ = largest_remainder_split([f / total * units for f in fr],
+                                          units)
+        w_fast = cycle - units
+        # Every tier stays in the policy — zero-weighted if it gets no
+        # pages.  Dropping them would (a) let a full offload misread the
+        # first slow device as the fast home and (b) shift device
+        # ordinals out of topology order, so a later weight-vector
+        # repartition would relabel pages onto the wrong device.
+        tiers = (fast,) + tuple(devices)
+        weights = (w_fast,) + tuple(base)
+        return MemPolicy.weighted(tiers, weights)
+
+    def tier_fractions(self) -> dict[str, float]:
+        """Per-tier page share this policy realizes (by tier name)."""
+        if self.kind in (PolicyKind.MEMBIND, PolicyKind.PREFERRED):
+            return {self.tiers[0]: 1.0}
+        if self.kind == PolicyKind.INTERLEAVE:
+            out: dict[str, float] = {}
+            for t in self.tiers:
+                out[t] = out.get(t, 0.0) + 1.0 / len(self.tiers)
+            return out
+        total = sum(self.weights)
+        out = {}
+        for t, w in zip(self.tiers, self.weights):
+            out[t] = out.get(t, 0.0) + w / total
+        return out
 
     def slow_fraction(self, fast: str | None = None, *,
                       n_pages: int | None = None,

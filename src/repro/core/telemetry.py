@@ -105,14 +105,20 @@ class EpochCounters:
     source_route_bytes: dict[str, int] = dataclasses.field(
         default_factory=dict)
 
-    def bytes_into(self, dst: str, source: Optional[str] = None) -> int:
+    def bytes_into(self, dst, source: Optional[str] = None) -> int:
+        """Bytes into tier ``dst`` (a name, or a sequence of device names
+        — multi-device topologies sum their slow pool in one call)."""
+        if not isinstance(dst, str):
+            return sum(self.bytes_into(d, source) for d in dst)
         if source is not None:
             return sum(v for k, v in self.source_route_bytes.items()
                        if k.startswith(f"{source}|") and k.endswith(f"->{dst}"))
         return sum(v for k, v in self.route_bytes.items()
                    if k.endswith(f"->{dst}"))
 
-    def bytes_from(self, src: str, source: Optional[str] = None) -> int:
+    def bytes_from(self, src, source: Optional[str] = None) -> int:
+        if not isinstance(src, str):
+            return sum(self.bytes_from(s, source) for s in src)
         if source is not None:
             return sum(v for k, v in self.source_route_bytes.items()
                        if k.startswith(f"{source}|{src}->"))

@@ -115,6 +115,53 @@ CXL_AGILEX = TierSpec(
     rfo_traffic_multiplier=2.0,
 )
 
+# ---------------------------------------------------------------------------
+# The paper's three CXL devices (Table 1, §4): same host, three different
+# manufacturers, markedly different latency/bandwidth/RFO behaviour.  A is
+# the ASIC controller with DDR5 behind it (fastest of the three), B an ASIC
+# with DDR4, C the FPGA-based prototype (the Agilex card above, renamed into
+# the A/B/C scheme so a multi-device topology can hold all three at once).
+# ---------------------------------------------------------------------------
+CXL_A = TierSpec(
+    name="cxl-a",
+    kind="cxl",
+    capacity_bytes=64 * GiB,
+    load_bw=26 * GB,  # ASIC + DDR5-4800 single channel
+    store_bw=13 * GB,
+    nt_store_bw=24 * GB,
+    load_latency_ns=340.0,  # 2.0x DDR5-L8: best of the three
+    chase_latency_ns=290.0,
+    load_peak_streams=8,
+    store_peak_streams=4,
+    load_collapse_streams=16,
+    store_collapse_streams=8,
+    collapse_factor=0.75,
+    link_bw=64 * GB,  # PCIe Gen5 x16
+    rfo_traffic_multiplier=2.0,
+)
+
+CXL_B = TierSpec(
+    name="cxl-b",
+    kind="cxl",
+    capacity_bytes=32 * GiB,
+    load_bw=22 * GB,  # ASIC + DDR4-3200
+    store_bw=10 * GB,
+    nt_store_bw=21 * GB,
+    load_latency_ns=360.0,
+    chase_latency_ns=310.0,
+    load_peak_streams=8,
+    store_peak_streams=3,
+    load_collapse_streams=14,
+    store_collapse_streams=6,
+    collapse_factor=0.70,
+    link_bw=64 * GB,
+    rfo_traffic_multiplier=2.0,
+)
+
+#: the FPGA prototype is the paper's worst-case device; alias it into the
+#: manufacturer scheme so ``paper_three_device_topology`` reads like Table 1.
+CXL_C = dataclasses.replace(CXL_AGILEX, name="cxl-c")
+
 DDR5_R1 = TierSpec(
     name="ddr5-r1",
     kind="ddr_remote",
@@ -178,20 +225,64 @@ HOST_V5E = TierSpec(
 )
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class TierTopology:
-    """A fast tier + optional slow tier(s), as one compute engine sees them."""
+    """An ordered fast tier + N slow devices, as one compute engine sees them.
+
+    ``slow`` accepts a single :class:`TierSpec` (the historical two-tier
+    shape) or a sequence of them (the paper's multi-device pool: CXL-A/B/C
+    from three manufacturers attached to one host).  The two-device
+    compatibility path is the ``slow`` property: the *first* slow device,
+    which every ``slow_fraction``-era call site keeps addressing.
+
+    ``extra`` holds devices that are *present* (ledger-visible, memo-
+    characterizable) but not placement targets — e.g. the remote-NUMA node
+    the paper measures but never interleaves onto.
+    """
 
     fast: TierSpec
-    slow: Optional[TierSpec] = None
-    extra: tuple[TierSpec, ...] = ()
+    slows: tuple[TierSpec, ...]
+    extra: tuple[TierSpec, ...]
+
+    def __init__(self, fast: TierSpec, slow=None, extra: tuple = (), *,
+                 slows=None):
+        if slows is not None and slow is not None:
+            raise ValueError("pass slow= or slows=, not both")
+        if slows is None:
+            if slow is None:
+                slows = ()
+            elif isinstance(slow, (tuple, list)):
+                slows = tuple(slow)
+            else:
+                slows = (slow,)
+        names = [fast.name] + [t.name for t in slows] + [t.name for t in extra]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names in topology: {names}")
+        object.__setattr__(self, "fast", fast)
+        object.__setattr__(self, "slows", tuple(slows))
+        object.__setattr__(self, "extra", tuple(extra))
+
+    @property
+    def slow(self) -> Optional[TierSpec]:
+        """Two-device compatibility: the first (primary) slow device."""
+        return self.slows[0] if self.slows else None
+
+    @property
+    def n_slow(self) -> int:
+        return len(self.slows)
+
+    @property
+    def slow_names(self) -> tuple[str, ...]:
+        return tuple(t.name for t in self.slows)
 
     @property
     def tiers(self) -> tuple[TierSpec, ...]:
-        out = (self.fast,)
-        if self.slow is not None:
-            out = out + (self.slow,)
-        return out + self.extra
+        return (self.fast,) + self.slows + self.extra
+
+    @property
+    def devices(self) -> tuple[TierSpec, ...]:
+        """Placement targets in canonical order: fast first, then slows."""
+        return (self.fast,) + self.slows
 
     def by_name(self, name: str) -> TierSpec:
         for t in self.tiers:
@@ -199,12 +290,78 @@ class TierTopology:
                 return t
         raise KeyError(name)
 
+    def device_index(self, name: str) -> int:
+        """Ordinal of ``name`` in the canonical device order (0 = fast)."""
+        for i, t in enumerate(self.devices):
+            if t.name == name:
+                return i
+        raise KeyError(name)
+
+    def effective_bw(self, tier: TierSpec, op: OpClass = OpClass.LOAD) -> float:
+        bw = tier.peak_bw(op)
+        return min(bw, tier.link_bw) if tier.link_bw else bw
+
+    def bandwidth_weights(self, op: OpClass = OpClass.LOAD
+                          ) -> tuple[float, ...]:
+        """Per-slow-device share of the aggregate slow bandwidth.
+
+        The Fig. 10 seed: the best static interleave ratio tracks each
+        device's relative bandwidth, so a weight vector proportional to
+        effective (link-clipped) bandwidth is the planner's prior for how
+        to split a given slow fraction across devices."""
+        if not self.slows:
+            return ()
+        bws = [self.effective_bw(t, op) for t in self.slows]
+        total = sum(bws)
+        return tuple(b / total for b in bws)
+
 
 def paper_topology() -> TierTopology:
     """The paper's testbed: local DDR5 fast tier + CXL slow tier (+ remote)."""
     return TierTopology(fast=DDR5_L8, slow=CXL_AGILEX, extra=(DDR5_R1,))
 
 
+def paper_three_device_topology() -> TierTopology:
+    """Table 1's full pool: DDR5 fast tier + the three CXL devices at once."""
+    return TierTopology(fast=DDR5_L8, slows=(CXL_A, CXL_B, CXL_C))
+
+
 def tpu_v5e_topology() -> TierTopology:
     """Deployment target: HBM fast tier + host-DRAM-behind-PCIe slow tier."""
     return TierTopology(fast=HBM_V5E, slow=HOST_V5E)
+
+
+#: devices addressable from a ``--devices`` spec (first name = fast tier).
+DEVICE_REGISTRY: dict[str, TierSpec] = {
+    t.name: t
+    for t in (DDR5_L8, CXL_AGILEX, CXL_A, CXL_B, CXL_C, DDR5_R1, HBM_V5E,
+              HOST_V5E)
+}
+
+_NAMED_TOPOLOGIES = {
+    "tpu-v5e": tpu_v5e_topology,
+    "paper": paper_topology,
+    "paper3": paper_three_device_topology,
+}
+
+
+def topology_from_spec(spec: str) -> TierTopology:
+    """Build a topology from a CLI ``--devices`` spec.
+
+    Either a named preset (``tpu-v5e``, ``paper``, ``paper3``) or a
+    ``+``-joined device list from :data:`DEVICE_REGISTRY` with the first
+    entry as the fast tier, e.g. ``ddr5-l8+cxl-a+cxl-b``."""
+    key = spec.strip().lower()
+    if key in _NAMED_TOPOLOGIES:
+        return _NAMED_TOPOLOGIES[key]()
+    names = [n.strip() for n in key.split("+") if n.strip()]
+    if not names:
+        raise ValueError(f"empty --devices spec: {spec!r}")
+    try:
+        devs = [DEVICE_REGISTRY[n] for n in names]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown device {e.args[0]!r}; choose from "
+            f"{sorted(DEVICE_REGISTRY)} or a preset "
+            f"{sorted(_NAMED_TOPOLOGIES)}") from None
+    return TierTopology(fast=devs[0], slows=tuple(devs[1:]))

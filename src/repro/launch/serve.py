@@ -12,10 +12,10 @@ import time
 import jax
 import numpy as np
 
-from repro.core.arbiter import ArbiterConfig, CaptionArbiter
+from repro.core.arbiter import CaptionArbiter, budgeted_config
 from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.policy import MemPolicy
-from repro.core.tiers import tpu_v5e_topology
+from repro.core.tiers import topology_from_spec
 from repro.models.registry import get as get_arch
 from repro.serving.engine import ServingEngine
 
@@ -29,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--slow-fraction", type=float, default=0.0)
+    ap.add_argument("--devices", default="tpu-v5e",
+                    help="tier topology: a preset (tpu-v5e, paper, paper3) "
+                         "or a '+'-joined device list, fast tier first "
+                         "(e.g. ddr5-l8+cxl-a+cxl-b)")
     ap.add_argument("--page-t", type=int, default=16)
     ap.add_argument("--caption", action="store_true",
                     help="dynamic re-tiering of KV pages between decode steps")
@@ -48,8 +52,17 @@ def main(argv=None):
     if cfg.family not in ("dense", "vlm", "moe"):
         raise SystemExit("tiered serving demo targets uniform-attention archs")
     params = arch.module.init(cfg, jax.random.PRNGKey(0))
-    policy = MemPolicy.from_slow_fraction("fast", "slow", args.slow_fraction)
-    topology = tpu_v5e_topology()
+    topology = topology_from_spec(args.devices)
+    if topology.n_slow > 1:
+        # Seed the per-device split bandwidth-proportionally (Fig. 10's
+        # best static ratio); Caption tunes the vector from there.
+        bw = topology.bandwidth_weights()
+        policy = MemPolicy.from_tier_fractions(
+            topology.fast.name, topology.slow_names,
+            [args.slow_fraction * w for w in bw])
+    else:
+        policy = MemPolicy.from_slow_fraction("fast", "slow",
+                                              args.slow_fraction)
     caption = None
     arbiter = None
     if args.caption:
@@ -59,9 +72,8 @@ def main(argv=None):
             initial_fraction=args.slow_fraction)
         # One arbiter owns the slow-tier write budget; the engine registers
         # its KV controller under it (more buffers would share the pool).
-        acfg = (ArbiterConfig(slow_bw_budget=args.slow_budget)
-                if args.slow_budget > 0 else None)
-        arbiter = CaptionArbiter(topology, acfg)
+        arbiter = CaptionArbiter(topology,
+                                 budgeted_config(topology, args.slow_budget))
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         policy=policy, topology=topology, page_t=args.page_t,
@@ -82,6 +94,9 @@ def main(argv=None):
           f"p50={lats[len(lats)//2]*1e3:.1f}ms p99={p99*1e3:.1f}ms "
           f"modeled_p50={modeled[len(modeled)//2]*1e3:.3f}ms "
           f"slow_frac={engine.cache.slow_fraction():.2f}")
+    if topology.n_slow > 1:
+        fr = engine.cache.device_fractions()
+        print("devices: " + " ".join(f"{k}={v:.2f}" for k, v in fr.items()))
     if caption is not None:
         traj = " -> ".join(f"{f:.2f}" for _, f in engine.caption_trace[-8:])
         print(f"caption: phase={caption.phase.value} trajectory {traj}")

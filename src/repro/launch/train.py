@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import tiers as tiers_mod
-from repro.core.arbiter import ArbiterConfig, CaptionArbiter
+from repro.core.arbiter import CaptionArbiter, budgeted_config
 from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.classifier import AccessProfile
 from repro.core.telemetry import EpochWindow
@@ -33,7 +33,8 @@ from repro.runtime.straggler import StragglerMitigator
 
 
 def build(arch_id: str, *, tiny: bool, batch: int, seq: int, lr: float,
-          total_steps: int, offload_fraction: float | None = None):
+          total_steps: int, offload_fraction: float | None = None,
+          devices: str = "tpu-v5e", slow_budget: float = 0.0):
     arch = get_arch(arch_id)
     if tiny:
         arch = arch.tiny()
@@ -45,8 +46,10 @@ def build(arch_id: str, *, tiny: bool, batch: int, seq: int, lr: float,
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
 
     # Paper integration: plan optimizer-state placement against the target
-    # topology; if the plan spills, use the tiered optimizer.
-    topo = tiers_mod.tpu_v5e_topology()
+    # topology; if the plan spills, use the tiered optimizer.  With an
+    # arbiter budget, the plan is reconciled with it UP FRONT (arbiter-
+    # aware seeding) instead of letting the runtime clip from a bad start.
+    topo = tiers_mod.topology_from_spec(devices)
     opt_bytes = n_params * 12
     req = BufferReq(
         "opt_state", BufferClass.OPT_STATE, opt_bytes,
@@ -55,13 +58,21 @@ def build(arch_id: str, *, tiny: bool, batch: int, seq: int, lr: float,
                       compute_seconds=0.1),
     )
     placement = None
+    slow_weights = None
     if offload_fraction is None:
         placement = plan_placement(
             [req], topo, compute_seconds=0.1,
-            reserve_fast_bytes=int(2 * n_params + 4 * n_params))
+            reserve_fast_bytes=int(2 * n_params + 4 * n_params),
+            write_budget_bw=slow_budget if slow_budget > 0 else None)
         offload_fraction = placement.slow_fraction("opt_state")
+        dfr = placement.decisions["opt_state"].device_fractions
+        if topo.n_slow > 1 and dfr:
+            slow_weights = [dfr.get(n, 0.0) for n in topo.slow_names]
     if offload_fraction > 0:
-        opt = offload.TieredAdamW(opt_cfg, slow_fraction=offload_fraction)
+        opt = offload.TieredAdamW(
+            opt_cfg, slow_fraction=offload_fraction,
+            slow_weights=slow_weights,
+            slow_device_names=topo.slow_names if topo.n_slow > 1 else None)
         opt_state = opt.init(params)
     else:
         opt = None
@@ -80,6 +91,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--offload-fraction", type=float, default=None)
+    ap.add_argument("--devices", default="tpu-v5e",
+                    help="tier topology: a preset (tpu-v5e, paper, paper3) "
+                         "or a '+'-joined device list, fast tier first "
+                         "(e.g. ddr5-l8+cxl-a+cxl-b)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--caption", action="store_true",
@@ -93,7 +108,8 @@ def main(argv=None):
     arch, opt_cfg, opt, params, opt_state, n_params, placement, topo = build(
         args.arch, tiny=args.tiny, batch=args.batch, seq=args.seq,
         lr=args.lr, total_steps=args.steps,
-        offload_fraction=args.offload_fraction)
+        offload_fraction=args.offload_fraction, devices=args.devices,
+        slow_budget=args.slow_budget)
     cfg, mod = arch.cfg, arch.module
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
           f"tiered_opt={'on' if opt else 'off'}")
@@ -111,10 +127,10 @@ def main(argv=None):
                 topo, ccfg, initial_fraction=opt.slow_fraction)
         # One arbiter spans every tiered buffer in this process; training
         # currently registers opt_state (a colocated serving engine or
-        # tiered weights would register under the same budget).
-        acfg = (ArbiterConfig(slow_bw_budget=args.slow_budget)
-                if args.slow_budget > 0 else None)
-        arbiter = CaptionArbiter(topo, acfg)
+        # tiered weights would register under the same budget).  An
+        # explicit budget keeps per-device ceilings on multi-device
+        # topologies (scaled to sum to it) instead of disabling them.
+        arbiter = CaptionArbiter(topo, budgeted_config(topo, args.slow_budget))
         arbiter.register("opt_state", caption)
         caption_window = EpochWindow(opt.telemetry)
 
@@ -171,7 +187,8 @@ def main(argv=None):
                 # (paged state streams both ways) and writer concurrency
                 # from the optimizer's actual route counters.
                 slow_b = opt.traffic_per_step_bytes(opt_state)
-                slow_s = slow_b / topo.slow.nt_store_bw if topo.slow else 0.0
+                agg_nt_bw = sum(t.nt_store_bw for t in topo.slows)
+                slow_s = slow_b / agg_nt_bw if agg_nt_bw else 0.0
                 modeled = max(0.1, slow_s)  # compute floor from the plan
                 fast_resident = (12 * n_params * (1 - caption.fraction)
                                  + 6 * n_params)  # opt state + params/grads
@@ -180,10 +197,20 @@ def main(argv=None):
                     mover=opt.mover,
                     fast_pressure=min(
                         1.0, fast_resident / topo.fast.capacity_bytes),
-                    slow_name=None if opt.mover is not None else "host")
+                    slow_name=(None if opt.mover is not None
+                               else (topo.slow_names if topo.n_slow > 1
+                                     else "host")))
                 if decision.changed:
-                    opt_state = opt.repartition(
-                        params, opt_state, decision.fraction)
+                    if topo.n_slow > 1 and len(decision.weights) > 1:
+                        opt_state = opt.repartition_weights(
+                            params, opt_state, decision.weights)
+                        caption.actuated_weights(
+                            opt.achieved_weights(params, opt_state))
+                    else:
+                        opt_state = opt.repartition(
+                            params, opt_state, decision.fraction)
+                        caption.actuated(sum(
+                            opt.achieved_weights(params, opt_state)))
                     print(f"caption: slow_fraction -> "
                           f"{decision.fraction:.2f} ({decision.reason})")
         losses.append(float(metrics["loss"]))

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,9 @@ class OffloadedLeaf:
     quantized: bool = False
     mu_scale: Optional[np.ndarray] = None  # (n_pages * PAGE / QBLOCK,) fp32
     nu_scale: Optional[np.ndarray] = None
+    #: slow device holding this leaf's pages (tier name for routing —
+    #: multi-device topologies spread leaves across their CXL pool).
+    device: str = "host"
 
 
 def _q_moments(x: jax.Array, *, sqrt_domain: bool = False
@@ -102,6 +105,8 @@ class TieredAdamW:
         cfg: adamw.AdamWConfig,
         *,
         slow_fraction: float = 0.0,
+        slow_weights: Optional[Sequence[float]] = None,
+        slow_device_names: Optional[Sequence[str]] = None,
         mover: Optional[BulkMover] = None,
         min_offload_bytes: int = 1 << 20,
         quantize_moments: bool = False,
@@ -109,7 +114,19 @@ class TieredAdamW:
         source: str = "opt_state",
     ):
         self.cfg = cfg
+        # ``slow_weights`` is the N-device form: per-slow-device shares of
+        # the moment bytes (summing to the total slow fraction).  The
+        # scalar ``slow_fraction`` remains the two-device shorthand.
+        if slow_weights is not None:
+            slow_fraction = float(sum(slow_weights))
         self.slow_fraction = slow_fraction
+        self.slow_weights = (tuple(float(w) for w in slow_weights)
+                             if slow_weights is not None else None)
+        # Without a mover the routes are modeled; real device names can
+        # still be supplied so per-device telemetry (and the arbiter's
+        # device budgets, which are keyed by tier name) stay meaningful.
+        self.slow_device_names = (tuple(slow_device_names)
+                                  if slow_device_names else None)
         self.mover = mover
         self.min_offload_bytes = min_offload_bytes
         self.quantize_moments = quantize_moments
@@ -119,6 +136,18 @@ class TieredAdamW:
         self.source = source
 
     # -- placement ----------------------------------------------------------
+    def _slow_device_names(self) -> tuple[str, ...]:
+        if self.mover is not None and self.mover.topology.slows:
+            return self.mover.topology.slow_names
+        if self.slow_device_names:
+            return self.slow_device_names
+        return ("host",)
+
+    def _fast_name(self) -> str:
+        if self.mover is not None:
+            return self.mover.topology.fast.name
+        return "hbm"
+
     def choose_offloaded(self, params) -> list[tuple]:
         """Greedy knapsack: largest params spill first until the target
         fraction of moment bytes is host-resident."""
@@ -135,9 +164,35 @@ class TieredAdamW:
             acc += x.size
         return picked
 
+    def assign_devices(self, params, picked) -> dict[str, str]:
+        """Distribute the offloaded leaves across the slow devices.
+
+        Greedy largest-first fill against per-device byte targets set by
+        ``slow_weights`` (bandwidth-proportional when seeded from the
+        planner) — the Fig. 10 discipline applied to optimizer pages."""
+        names = self._slow_device_names()
+        sizes = {str(p): x.size
+                 for p, x in jax.tree_util.tree_leaves_with_path(params)}
+        keys = sorted((str(p) for p in picked),
+                      key=lambda k: -sizes.get(k, 0))
+        if len(names) == 1 or not self.slow_weights:
+            return {k: names[0] for k in keys}
+        w = list(self.slow_weights[: len(names)])
+        w += [0.0] * (len(names) - len(w))
+        total_w = sum(w) or 1.0
+        total_b = sum(sizes.get(k, 0) for k in keys)
+        remaining = [total_b * x / total_w for x in w]
+        out = {}
+        for k in keys:
+            i = max(range(len(names)), key=lambda j: remaining[j])
+            out[k] = names[i]
+            remaining[i] -= sizes.get(k, 0)
+        return out
+
     # -- state --------------------------------------------------------------
     def init(self, params) -> dict:
-        offloaded_paths = set(map(str, self.choose_offloaded(params)))
+        picked = self.choose_offloaded(params)
+        offloaded_paths = set(map(str, picked))
         fast_tree = jax.tree_util.tree_map_with_path(
             lambda p, x: None if str(p) in offloaded_paths else x, params,
             is_leaf=lambda x: x is None,
@@ -155,9 +210,11 @@ class TieredAdamW:
             },
             "slow": {},
         }
+        devmap = self.assign_devices(params, picked)
         for path, x in jax.tree_util.tree_leaves_with_path(params):
             if str(path) in offloaded_paths:
                 master, n_pages = _flat_pages(np.asarray(x, np.float32))
+                device = devmap.get(str(path), self._slow_device_names()[0])
                 if self.quantize_moments:
                     n_blocks = master.size // QBLOCK
                     state["slow"][str(path)] = OffloadedLeaf(
@@ -168,6 +225,7 @@ class TieredAdamW:
                         quantized=True,
                         mu_scale=np.zeros(n_blocks, np.float32),
                         nu_scale=np.zeros(n_blocks, np.float32),
+                        device=device,
                     )
                 else:
                     state["slow"][str(path)] = OffloadedLeaf(
@@ -175,8 +233,17 @@ class TieredAdamW:
                         n_pages=n_pages, size=x.size,
                         master=master,
                         mu=np.zeros_like(master), nu=np.zeros_like(master),
+                        device=device,
                     )
         return state
+
+    def repartition_weights(self, params, state, weights: Sequence[float],
+                            **kwargs) -> dict:
+        """Re-tier to a per-slow-device weight vector (N-device Caption
+        actuation): total offload = sum(weights); newly offloaded leaves
+        land on devices per the vector."""
+        self.slow_weights = tuple(float(w) for w in weights)
+        return self.repartition(params, state, float(sum(weights)), **kwargs)
 
     def repartition(self, params, state, new_fraction: float, *,
                     mover: Optional[BulkMover] = None,
@@ -204,7 +271,12 @@ class TieredAdamW:
         self.slow_fraction = new_fraction
         new_paths = set(map(str, self.choose_offloaded(params)))
         old_paths = set(state["slow"])
-        if new_paths == old_paths:
+        devmap = self.assign_devices(params, sorted(new_paths))
+        names = self._slow_device_names()
+        if new_paths == old_paths and all(
+                state["slow"][k].device == devmap.get(
+                    k, state["slow"][k].device)
+                for k in old_paths):
             return state
         mu_map = {str(p): x for p, x in jax.tree_util.tree_flatten_with_path(
             state["fast"]["mu"], is_leaf=lambda x: x is None)[0]}
@@ -217,6 +289,9 @@ class TieredAdamW:
             key = str(path)
             if key in new_paths and key not in old_paths:
                 # fast -> slow: page out master (from params) + moments.
+                device = devmap.get(key, names[0])
+                if device not in names and slow_tier in names:
+                    device = slow_tier
                 master, n_pages = _flat_pages(np.asarray(x, np.float32))
                 mu_flat, _ = _flat_pages(np.asarray(mu_map[key], np.float32))
                 nu_flat, _ = _flat_pages(np.asarray(nu_map[key], np.float32))
@@ -229,16 +304,19 @@ class TieredAdamW:
                         n_pages=n_pages, size=x.size, master=master,
                         mu=np.asarray(qmu), nu=np.asarray(qnu),
                         quantized=True, mu_scale=np.asarray(smu),
-                        nu_scale=np.asarray(snu))
+                        nu_scale=np.asarray(snu), device=device)
                 else:
                     slow[key] = OffloadedLeaf(
                         shape=tuple(x.shape), dtype=np.dtype(str(x.dtype)),
                         n_pages=n_pages, size=x.size, master=master,
-                        mu=mu_flat, nu=nu_flat)
+                        mu=mu_flat, nu=nu_flat, device=device)
                 mu_map[key] = nu_map[key] = None
                 nbytes = master.nbytes + slow[key].mu.nbytes + slow[key].nu.nbytes
                 moved_down += nbytes
-                self._record_move(fast_tier, slow_tier, nbytes, mover,
+                dst = device if mover is not None or device != names[0] \
+                    else slow_tier
+                self._record_move(fast_tier, dst if dst else slow_tier,
+                                  nbytes, mover,
                                   (jnp.asarray(master),
                                    jnp.asarray(slow[key].mu),
                                    jnp.asarray(slow[key].nu)))
@@ -259,10 +337,27 @@ class TieredAdamW:
                     nu_flat[: leaf.size].reshape(leaf.shape), jnp.float32)
                 nbytes = leaf.master.nbytes + leaf.mu.nbytes + leaf.nu.nbytes
                 moved_up += nbytes
-                self._record_move(slow_tier, fast_tier, nbytes, mover,
+                src = (leaf.device if mover is not None
+                       or leaf.device != names[0] else slow_tier)
+                self._record_move(src if src else slow_tier, fast_tier,
+                                  nbytes, mover,
                                   (jnp.asarray(leaf.master),
                                    jnp.asarray(leaf.mu),
                                    jnp.asarray(leaf.nu)))
+            elif key in old_paths:
+                # staying offloaded, but the weight vector reassigned its
+                # device: ship the pages on the slow->slow (C2C) route so
+                # a device-share-only adjustment actually actuates.
+                leaf = slow[key]
+                want = devmap.get(key, leaf.device)
+                if want != leaf.device and want in names:
+                    nbytes = (leaf.master.nbytes + leaf.mu.nbytes
+                              + leaf.nu.nbytes)
+                    self._record_move(leaf.device, want, nbytes, mover,
+                                      (jnp.asarray(leaf.master),
+                                       jnp.asarray(leaf.mu),
+                                       jnp.asarray(leaf.nu)))
+                    slow[key] = dataclasses.replace(leaf, device=want)
         if mover is not None and mover.asynchronous:
             mover.wait_all()
         self.telemetry.bump("caption.opt_repartitions")
@@ -284,11 +379,36 @@ class TieredAdamW:
             self.telemetry.record_move(src, dst, nbytes, 0.0,
                                        source=self.source)
 
+    def _leaf_dst(self, leaf: OffloadedLeaf) -> str:
+        """Routing name for a leaf's pages (valid in the mover's topology)."""
+        names = self._slow_device_names()
+        return leaf.device if leaf.device in names else names[0]
+
+    def achieved_weights(self, params, state) -> tuple[float, ...]:
+        """Per-slow-device share of param elements actually offloaded —
+        the operating point to feed back to the controller
+        (``actuated_weights``): leaf granularity rounds the request, and
+        the walk must continue from what the system really runs."""
+        names = self._slow_device_names()
+        total = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        per = {n: 0 for n in names}
+        for leaf in state["slow"].values():
+            per[leaf.device if leaf.device in per else names[0]] += leaf.size
+        return tuple(per[n] / max(total, 1) for n in names)
+
     def host_bytes(self, state) -> int:
         return sum(
             leaf.master.nbytes + leaf.mu.nbytes + leaf.nu.nbytes
             for leaf in state["slow"].values()
         )
+
+    def host_bytes_by_device(self, state) -> dict[str, int]:
+        """Slow-tier residency per device (capacity accounting)."""
+        out: dict[str, int] = {}
+        for leaf in state["slow"].values():
+            b = leaf.master.nbytes + leaf.mu.nbytes + leaf.nu.nbytes
+            out[leaf.device] = out.get(leaf.device, 0) + b
+        return out
 
     def traffic_per_step_bytes(self, state) -> int:
         """Host<->device bytes each step (reads + writes), for the roofline
@@ -339,6 +459,7 @@ class TieredAdamW:
 
         # --- slow subset: paged streaming update ---------------------------
         bytes_moved = 0
+        dev_bytes: dict[str, int] = {}
         for (path, p), g in zip(flat, flat_g):
             key = str(path)
             if key not in slow_paths:
@@ -385,8 +506,7 @@ class TieredAdamW:
                         leaf.nu_scale[bs] = w[4]
                     if self.mover is not None:
                         self.mover.submit([Descriptor(
-                            "hbm", self.mover.topology.slow.name
-                            if self.mover.topology.slow else "hbm",
+                            self._fast_name(), self._leaf_dst(leaf),
                             (np.asarray(ms2), np.asarray(qmu), np.asarray(qnu)),
                             on_done=commit_q, source=self.source)])
                     else:
@@ -397,13 +517,14 @@ class TieredAdamW:
                         def commit(res, sl=sl, wb=writeback):
                             leaf.master[sl], leaf.mu[sl], leaf.nu[sl] = wb
                         self.mover.submit([Descriptor(
-                            "hbm", self.mover.topology.slow.name
-                            if self.mover.topology.slow else "hbm",
+                            self._fast_name(), self._leaf_dst(leaf),
                             writeback, on_done=commit, source=self.source)])
                     else:
                         leaf.master[sl], leaf.mu[sl], leaf.nu[sl] = writeback
                 out_pages[i] = ms2
                 bytes_moved += PAGE_ELEMS * 4 * 6
+                dst = self._leaf_dst(leaf)
+                dev_bytes[dst] = dev_bytes.get(dst, 0) + PAGE_ELEMS * 4 * 6
             if self.mover is not None:
                 self.mover.wait_all()
             assembled = jnp.concatenate(out_pages)[: leaf.size]
@@ -411,12 +532,16 @@ class TieredAdamW:
 
         if self.mover is None and bytes_moved:
             # No movement engine: still surface the paging traffic so an
-            # EpochWindow (Caption's sampler) sees real route counters.
-            # Half the bytes stream host->device (page reads), half back.
-            self.telemetry.record_move("host", "hbm", bytes_moved // 2, 0.0,
-                                       source=self.source)
-            self.telemetry.record_move("hbm", "host", bytes_moved // 2, 0.0,
-                                       source=self.source)
+            # EpochWindow (Caption's sampler) sees real route counters —
+            # per device, so the arbiter's device budgets (keyed by tier
+            # name) meter the right links.  Half the bytes stream
+            # device-ward (page reads), half back.
+            fast = self._fast_name()
+            for dev, b in dev_bytes.items():
+                self.telemetry.record_move(dev, fast, b // 2, 0.0,
+                                           source=self.source)
+                self.telemetry.record_move(fast, dev, b // 2, 0.0,
+                                           source=self.source)
 
         new_params = tdef.unflatten([new_leaves[str(path)] for path, _ in flat])
         new_state = {

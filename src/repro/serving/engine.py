@@ -105,11 +105,26 @@ class ServingEngine:
         # One tier namespace for traffic accounting and migration: the
         # mover's topology names when a mover meters the moves, else the
         # generic fast/slow labels the modeled path uses.
+        # Device-ordinal route labels (fast + every slow device): the
+        # mover's real names when it meters the moves, else the names the
+        # placement policy stamped onto the cache — repartitions reuse the
+        # same labels, so device keys never churn mid-run.
+        name_src = mover.topology if mover is not None else topology
+        multi = (name_src is not None and name_src.n_slow > 1
+                 and len(self.cache.device_names) > 2)
         if mover is not None:
             self._fast_name = mover.topology.fast.name
             self._slow_name = (mover.topology.slow or mover.topology.fast).name
+        elif multi:
+            self._fast_name = self.cache.device_names[0]
+            self._slow_name = self.cache.device_names[1]
         else:
             self._fast_name, self._slow_name = "fast", "slow"
+        if multi:
+            self._device_names = ((self._fast_name,)
+                                  + tuple(name_src.slow_names))
+        else:
+            self._device_names = (self._fast_name, self._slow_name)
         self._epoch_window = (EpochWindow(telemetry)
                               if caption is not None else None)
 
@@ -163,9 +178,27 @@ class ServingEngine:
 
     def modeled_step_seconds(self) -> float:
         """Per-decode-step time on the target topology (compute ignored on
-        this CPU box; KV streaming dominates decode)."""
+        this CPU box; KV streaming dominates decode).  Devices stream on
+        their own links, so the step pays the SLOWEST device, plus one
+        dependent hop into every device holding pages."""
         if self.topology is None:
             return 0.0
+        if self.topology.n_slow > 1 and len(self.cache.device_names) > 2:
+            rbd = self.cache.read_bytes_per_device()
+            times = [rbd.get(self.cache.device_names[0], 0)
+                     / perfmodel.stream_bandwidth(
+                         self.topology.fast, OpClass.LOAD, 8)]
+            lat = self.topology.fast.chase_latency_ns * 1e-9
+            for dev in self.topology.slows:
+                # By name: a device the cache's policy rounded away holds
+                # no pages and must not inherit a neighbor's bytes.
+                b = rbd.get(dev.name, 0)
+                if not b:
+                    continue
+                times.append(b / perfmodel.stream_bandwidth(
+                    dev, OpClass.LOAD, 4))
+                lat += dev.chase_latency_ns * 1e-9 * self.cfg.n_layers
+            return max(times) + lat
         rb = self.cache.read_bytes_per_step()
         fast_t = rb["fast"] / perfmodel.stream_bandwidth(
             self.topology.fast, OpClass.LOAD, 8)
@@ -228,18 +261,39 @@ class ServingEngine:
         n_unpinned = B - len(self.pinned_slots)
         dt = max(self._epoch_modeled_s, 1e-9)
         src = self.buffer_name
+        multi = len(self._device_names) > 2
         self.telemetry.record_move(self._fast_name, "engine",
                                    rb["fast"] * n, dt, source=src)
         w_slow = int(write_slot_b * n_unpinned * n
                      * self.cache.slow_fraction(self.pinned_slots))
         self.telemetry.record_move("engine", self._fast_name,
                                    write_b * n - w_slow, 0.0, source=src)
-        if rb["slow"]:
-            self.telemetry.record_move(self._slow_name, "engine",
-                                       rb["slow"] * n, dt, source=src)
-        if w_slow:
-            self.telemetry.record_move("engine", self._slow_name, w_slow, 0.0,
-                                       source=src)
+        if multi:
+            # Per-device billing: reads and appended-token writes land on
+            # the real device routes, so the window (and the arbiter's
+            # per-device budgets) see each device's own traffic.  Lookups
+            # are by NAME — a device the cache's policy rounded away holds
+            # no pages and must not be billed a neighbor's bytes.
+            rbd = self.cache.read_bytes_per_device()
+            w_by_name = dict(zip(self.cache.device_names[1:],
+                                 self.cache.weights(self.pinned_slots)))
+            total_w = sum(w_by_name.values())
+            for dev in self._device_names[1:]:
+                if rbd.get(dev):
+                    self.telemetry.record_move(dev, "engine",
+                                               rbd[dev] * n, dt, source=src)
+                w_dev = w_by_name.get(dev, 0.0)
+                if w_slow and total_w > 0 and w_dev > 0:
+                    self.telemetry.record_move(
+                        "engine", dev,
+                        int(w_slow * w_dev / total_w), 0.0, source=src)
+        else:
+            if rb["slow"]:
+                self.telemetry.record_move(self._slow_name, "engine",
+                                           rb["slow"] * n, dt, source=src)
+            if w_slow:
+                self.telemetry.record_move("engine", self._slow_name, w_slow,
+                                           0.0, source=src)
         pressure = None
         if self.topology is not None:
             kv_fast_bytes = (self.cache.k_fast.size + self.cache.v_fast.size) * item
@@ -247,30 +301,47 @@ class ServingEngine:
                            1.0)
         before = self.caption.fraction
         tput = self._epoch_tokens / dt
+        slo_names = (tuple(self._device_names[1:]) if multi
+                     else self._slow_name)
         if self.arbiter is not None:
             decision = self.arbiter.observe_window(
                 src, self._epoch_window, tput, mover=self.mover,
-                fast_pressure=pressure, slow_name=self._slow_name, seconds=dt)
+                fast_pressure=pressure, slow_name=slo_names, seconds=dt)
         else:
             decision = self.caption.observe_window(
                 self._epoch_window, tput, mover=self.mover,
-                fast_pressure=pressure, slow_name=self._slow_name, seconds=dt)
+                fast_pressure=pressure, slow_name=slo_names, seconds=dt)
         self._epoch_tokens = 0
         self._epoch_modeled_s = 0.0
-        if abs(decision.fraction - before) > 1e-9:
-            self.cache = self.cache.repartition_fraction(
-                decision.fraction, pinned_slots=self.pinned_slots,
-                mover=self.mover,
-                telemetry=self.telemetry, fast_tier=self._fast_name,
-                slow_tier=self._slow_name, source=src)
+        if abs(decision.fraction - before) > 1e-9 or (
+                multi and decision.changed):
+            if multi and len(decision.weights) > 1:
+                self.cache = self.cache.repartition_weights(
+                    decision.weights, pinned_slots=self.pinned_slots,
+                    mover=self.mover, telemetry=self.telemetry,
+                    policy_names=self._device_names, source=src)
+            else:
+                self.cache = self.cache.repartition_fraction(
+                    decision.fraction, pinned_slots=self.pinned_slots,
+                    mover=self.mover,
+                    telemetry=self.telemetry, fast_tier=self._fast_name,
+                    slow_tier=self._slow_name, source=src)
             # Page rounding may achieve less (or none) of the request: the
             # controller must continue from the real operating point.  With
             # zero tunable slots (everything SLO-pinned) there IS no
             # operating point to read back — feeding 0.0 would corrupt the
             # walk, so the decision stands until slots unpin.
             if n_unpinned > 0:
-                self.caption.actuated(
-                    self.cache.slow_fraction(self.pinned_slots))
+                if multi and self.caption.n_slow > 1:
+                    kv_w = self.cache.weights(self.pinned_slots)
+                    if len(kv_w) == self.caption.n_slow:
+                        self.caption.actuated_weights(kv_w)
+                    else:
+                        self.caption.actuated(
+                            self.cache.slow_fraction(self.pinned_slots))
+                else:
+                    self.caption.actuated(
+                        self.cache.slow_fraction(self.pinned_slots))
         self.caption_trace.append((self._steps, self.caption.fraction))
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.interleave import minimal_delta_assignment, tier_page_map
+from repro.core.interleave import (_policy_device_map, minimal_delta_weights,
+                                   resolve_device_names, tier_page_map)
 from repro.core.mover import LANE_BULK, LANE_LATENCY
 from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY
@@ -80,21 +81,28 @@ class TieredKVCache:
     v_slow: jax.Array
     lengths: jax.Array  # (B,)
     # static addressing (per-slot page assignment)
-    page_tier: jax.Array  # (B, n_pages) int8
+    page_tier: jax.Array  # (B, n_pages) int8: STORAGE tier (0 fast, 1 slow)
     page_local: jax.Array  # (B, n_pages)
     pos_fast: jax.Array  # (B, Tf) global position held by each fast slot
     pos_slow: jax.Array  # (B, Ts)
+    #: per-page owning DEVICE ordinal (0 = fast, i >= 1 = slow device i-1).
+    #: Physical storage keeps the shape-stable fast/slow pools (devices
+    #: beyond the second share the slow pool on this modeled backend), but
+    #: traffic routes and per-device accounting use the real device map.
+    page_device: jax.Array  # (B, n_pages) int8
     page_t: int
+    #: route labels per device ordinal (telemetry/mover tier names).
+    device_names: tuple[str, ...] = ("fast", "slow")
 
     def tree_flatten(self):
         children = (self.k_fast, self.v_fast, self.k_slow, self.v_slow,
                     self.lengths, self.page_tier, self.page_local,
-                    self.pos_fast, self.pos_slow)
-        return children, (self.page_t,)
+                    self.pos_fast, self.pos_slow, self.page_device)
+        return children, (self.page_t, self.device_names)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, page_t=aux[0])
+        return cls(*children, page_t=aux[0], device_names=aux[1])
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -106,10 +114,10 @@ class TieredKVCache:
         page_t = min(page_t, max_len)
         assert max_len % page_t == 0
         n_pages = max_len // page_t
-        rows = np.broadcast_to(
-            policy.page_is_slow(n_pages).astype(np.int8), (batch, n_pages))
+        dev_row, names = _policy_device_map(policy, n_pages)
+        dev = np.broadcast_to(dev_row.astype(np.int8), (batch, n_pages))
         assign, page_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
-            rows, page_t)
+            dev, page_t)
         return cls(
             k_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
             v_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
@@ -120,7 +128,9 @@ class TieredKVCache:
             page_local=jnp.asarray(page_local, jnp.int32),
             pos_fast=jnp.asarray(pos_fast),
             pos_slow=jnp.asarray(pos_slow),
+            page_device=jnp.asarray(dev, jnp.int8),
             page_t=page_t,
+            device_names=names,
         )
 
     # -- addressing -------------------------------------------------------------
@@ -143,6 +153,26 @@ class TieredKVCache:
             return 0.0
         return float(tiers[unpinned].mean())
 
+    def weights(self, pinned_slots=()) -> tuple[float, ...]:
+        """Per-slow-device page shares of the tunable slots (the Caption
+        weight-vector operating point on an N-device topology)."""
+        dev = np.asarray(self.page_device)
+        pinned = set(pinned_slots)
+        unpinned = [b for b in range(dev.shape[0]) if b not in pinned]
+        n_slow = max(len(self.device_names) - 1, 1)
+        if not unpinned:
+            return (0.0,) * n_slow
+        sub = dev[unpinned]
+        return tuple(float((sub == i + 1).mean()) for i in range(n_slow))
+
+    def device_fractions(self, pinned_slots=()) -> dict[str, float]:
+        """Per-device page share of the tunable slots, keyed by name."""
+        w = self.weights(pinned_slots)
+        out = {self.device_names[0]: 1.0 - sum(w)}
+        for i, share in enumerate(w):
+            out[self.device_names[i + 1]] = share
+        return out
+
     # -- per-step traffic (drives the latency/QPS simulation) ------------------
     def read_bytes_per_step(self) -> dict[str, int]:
         """Bytes streamed per decode step per tier (both K and V), from the
@@ -159,6 +189,23 @@ class TieredKVCache:
             "fast": 2 * L * fast_rows * K * hd * item,
             "slow": 2 * L * slow_rows * K * hd * item,
         }
+
+    def read_bytes_per_device(self) -> dict[str, int]:
+        """Per-device decode-step read bytes, keyed by device name — the
+        slow total splits across the real devices holding the pages (each
+        device streams on its own link, so the modeled step time is the
+        max, not the sum)."""
+        item = self.k_fast.dtype.itemsize
+        L = self.k_fast.shape[0]
+        K, hd = self.k_fast.shape[3:]
+        dev = np.asarray(self.page_device)
+        out = {}
+        for i, name in enumerate(self.device_names):
+            pages = (dev == i).sum(axis=1)
+            if i == 0:
+                pages = np.maximum(pages, 1)  # >= 1 fast page per slot
+            out[name] = 2 * L * int(pages.sum()) * self.page_t * K * hd * item
+        return out
 
     # -- append + attend --------------------------------------------------------
     def append_layer(self, layer: jax.Array, k_new: jax.Array, v_new: jax.Array):
@@ -189,9 +236,9 @@ class TieredKVCache:
         the engine's job: it tracks the pinned-slot set (request policy)
         and passes it as ``pinned_slots`` — keeping SLO state out of this
         data structure keeps the jitted decode treedef stable."""
-        new_assign = np.asarray(self.page_tier).copy()
-        new_assign[i] = 0
-        return self._retile(new_assign, lane=LANE_LATENCY, **kwargs)
+        new_dev = np.asarray(self.page_device).copy()
+        new_dev[i] = 0
+        return self._retile(new_dev, lane=LANE_LATENCY, **kwargs)
 
     # -- dynamic re-tiering (Caption actuation path) ----------------------------
     def repartition(self, policy: MemPolicy, pinned_slots=(), **kwargs
@@ -199,51 +246,83 @@ class TieredKVCache:
         """Re-tier every unpinned slot's KV pages under ``policy``, moving
         only delta pages.
 
-        Host-side (between decode steps).  Pages whose tier is unchanged
+        Host-side (between decode steps).  Pages whose device is unchanged
         are sliced across; changed pages ship through the BulkMover (or
-        are accounted to telemetry), so inter-tier traffic is exactly
+        are accounted to telemetry) on their real ``(src_device,
+        dst_device)`` route, so inter-tier traffic is exactly
         ``delta_pages * page_kv_bytes``.  Attention output is invariant:
         the same (position, K, V) triples exist after the move, only
-        their owning tier changes.  Slots in ``pinned_slots``
+        their owning device changes.  Slots in ``pinned_slots``
         (latency-SLO) keep their all-fast rows.
         """
-        n_pages = self.page_tier.shape[1]
-        row = policy.page_is_slow(n_pages).astype(np.int8)
+        n_pages = self.page_device.shape[1]
+        row, names = _policy_device_map(policy, n_pages)
         pinned = set(pinned_slots)
-        new_assign = np.asarray(self.page_tier).copy()
-        for b in range(new_assign.shape[0]):
+        new_dev = np.asarray(self.page_device).copy()
+        for b in range(new_dev.shape[0]):
             if b not in pinned:
-                new_assign[b] = row
-        return self._retile(new_assign, **kwargs)
+                new_dev[b] = row
+        return self._retile(new_dev, policy_names=names, **kwargs)
 
     def repartition_fraction(self, fraction: float, pinned_slots=(),
                              **kwargs) -> "TieredKVCache":
         """Re-tier unpinned slots to ``fraction`` slow flipping the fewest
-        KV pages per slot."""
-        pinned = set(pinned_slots)
-        new_assign = np.asarray(self.page_tier).copy()
-        for b in range(new_assign.shape[0]):
-            if b not in pinned:
-                new_assign[b] = minimal_delta_assignment(
-                    new_assign[b], fraction)
-        return self._retile(new_assign, **kwargs)
+        KV pages per slot (two-device path)."""
+        return self.repartition_weights((float(fraction),), pinned_slots,
+                                        **kwargs)
 
-    def _retile(self, new_assign: np.ndarray, *, mover=None,
-                fast_tier: str = "fast", slow_tier: str = "slow",
+    def repartition_weights(self, weights, pinned_slots=(), **kwargs
+                            ) -> "TieredKVCache":
+        """Re-tier unpinned slots to a per-slow-device weight vector,
+        flipping the fewest KV pages per slot.  A vector that rounds to
+        every slot's current per-device counts is a true no-op (``self``
+        returned, no mover work enqueued)."""
+        pinned = set(pinned_slots)
+        n_devices = max(len(self.device_names), len(tuple(weights)) + 1)
+        new_dev = np.asarray(self.page_device).copy()
+        changed = False
+        for b in range(new_dev.shape[0]):
+            if b in pinned:
+                continue
+            row = minimal_delta_weights(new_dev[b], tuple(weights),
+                                        n_devices)
+            if row is not None:
+                new_dev[b] = row
+                changed = True
+        if not changed:
+            return self
+        return self._retile(new_dev, **kwargs)
+
+    def _route_names(self, n_devices: int,
+                     policy_names: Optional[tuple] = None,
+                     fast_tier: Optional[str] = None,
+                     slow_tier: Optional[str] = None) -> tuple[str, ...]:
+        return resolve_device_names(self.device_names, n_devices,
+                                    policy_names, fast_tier, slow_tier)
+
+    def _retile(self, new_dev: np.ndarray, *, mover=None,
+                fast_tier: Optional[str] = None,
+                slow_tier: Optional[str] = None,
+                policy_names: Optional[tuple] = None,
                 telemetry=GLOBAL_TELEMETRY, source: Optional[str] = None,
                 lane: int = LANE_BULK) -> "TieredKVCache":
-        old_assign = np.asarray(self.page_tier)
-        if np.array_equal(new_assign, old_assign):
+        old_dev = np.asarray(self.page_device)
+        if np.array_equal(new_dev, old_dev):
             return self
         pt = self.page_t
+        n_devices = max(len(self.device_names),
+                        int(new_dev.max(initial=0)) + 1,
+                        len(policy_names or ()))
+        route = self._route_names(n_devices, policy_names, fast_tier,
+                                  slow_tier)
         new01, new_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
-            new_assign, pt)
+            new_dev, pt)
         old_local = np.asarray(self.page_local)
         k_parts = (np.asarray(self.k_fast), np.asarray(self.k_slow))
         v_parts = (np.asarray(self.v_fast), np.asarray(self.v_slow))
 
         L, B = self.k_fast.shape[:2]
-        P = old_assign.shape[1]
+        P = old_dev.shape[1]
         K, hd = self.k_fast.shape[3:]
         dt = self.k_fast.dtype
         new_k = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
@@ -255,21 +334,24 @@ class TieredKVCache:
         # equal rows imply equal layouts).
         groups: dict[bytes, list[int]] = {}
         for b in range(B):
-            key = old_assign[b].tobytes() + new01[b].tobytes()
+            key = old_dev[b].tobytes() + new_dev[b].tobytes()
             groups.setdefault(key, []).append(b)
         descs = []
         for slots in groups.values():
             b0, sl = slots[0], np.asarray(slots)
             for p in range(P):
-                t0, t1 = int(old_assign[b0, p]), int(new01[b0, p])
+                d0, d1 = int(old_dev[b0, p]), int(new_dev[b0, p])
+                t0, t1 = min(d0, 1), min(d1, 1)
                 l0, l1 = old_local[b0, p], new_local[b0, p]
                 k_page = k_parts[t0][:, sl, l0 * pt:(l0 + 1) * pt]
                 v_page = v_parts[t0][:, sl, l0 * pt:(l0 + 1) * pt]
                 new_k[t1][:, sl, l1 * pt:(l1 + 1) * pt] = k_page
                 new_v[t1][:, sl, l1 * pt:(l1 + 1) * pt] = v_page
-                if t0 != t1:
-                    src = slow_tier if t0 else fast_tier
-                    dst = fast_tier if t0 else slow_tier
+                if d0 != d1:
+                    # Real device route — including slow->slow hops (the
+                    # paper's C2C class), which the storage tiers alone
+                    # cannot distinguish.
+                    src, dst = route[d0], route[d1]
                     if mover is not None:
                         from repro.core.mover import Descriptor
                         descs.append(Descriptor(
@@ -284,6 +366,11 @@ class TieredKVCache:
             mover.submit(descs)  # one submission: descriptors batch (§6)
             if mover.asynchronous:
                 mover.wait_all()
+        # Stored names: the policy's, widened with the cache's EXISTING
+        # names for higher ordinals (a narrower policy must not rename a
+        # pinned slot's real device to a placeholder), without the legacy
+        # fast/slow route overrides.
+        device_names = self._route_names(n_devices, policy_names, None, None)
         return dataclasses.replace(
             self,
             k_fast=jnp.asarray(new_k[0]), v_fast=jnp.asarray(new_v[0]),
@@ -291,6 +378,8 @@ class TieredKVCache:
             page_tier=jnp.asarray(new01, jnp.int8),
             page_local=jnp.asarray(new_local, jnp.int32),
             pos_fast=jnp.asarray(pos_fast), pos_slow=jnp.asarray(pos_slow),
+            page_device=jnp.asarray(new_dev, jnp.int8),
+            device_names=device_names,
         )
 
     def partitions(self, layer: int):

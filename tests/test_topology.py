@@ -1,0 +1,434 @@
+"""N-device tier topology tests: the TierTopology type and presets, the
+page->device map invariants of InterleavedTensor under repeated weight-
+vector repartitions, mover route purity and per-device writer tracking
+with >= 3 devices, arbiter per-device budget enforcement, planner
+per-device fractions + arbiter-aware seeding, Caption's weight-vector
+walk + workload-shift re-probing, the minimal-delta no-op guarantee,
+and the two-device back-compat shim."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.testing import given, settings, st  # hypothesis, with fallback
+
+from repro.core.arbiter import ArbiterConfig, CaptionArbiter
+from repro.core.caption import CaptionConfig, CaptionController, EpochMetrics
+from repro.core.classifier import AccessProfile
+from repro.core.interleave import (InterleavedTensor, minimal_delta_weights,
+                                   tier_page_map)
+from repro.core.mover import BulkMover, Descriptor
+from repro.core.planner import BufferReq, plan
+from repro.core.policy import BufferClass, MemPolicy
+from repro.core.telemetry import EpochWindow, Telemetry
+from repro.core.tiers import (CXL_A, CXL_B, CXL_C, DDR5_L8, TierTopology,
+                              paper_three_device_topology, topology_from_spec,
+                              tpu_v5e_topology)
+
+
+def three_dev() -> TierTopology:
+    return TierTopology(fast=DDR5_L8, slows=(CXL_A, CXL_B))
+
+
+# -- TierTopology ---------------------------------------------------------------
+def test_topology_two_device_back_compat():
+    """The historical TierTopology(fast=..., slow=...) shape keeps working:
+    .slow is the first slow device and .tiers includes extras."""
+    topo = tpu_v5e_topology()
+    assert topo.slow is not None and topo.slow.name == "host"
+    assert topo.n_slow == 1
+    assert [t.name for t in topo.tiers] == ["hbm", "host"]
+    # sequence form
+    topo3 = paper_three_device_topology()
+    assert topo3.slow_names == ("cxl-a", "cxl-b", "cxl-c")
+    assert topo3.slow.name == "cxl-a"  # primary = first
+    assert topo3.device_index("cxl-b") == 2
+    with pytest.raises(ValueError):
+        TierTopology(fast=DDR5_L8, slow=CXL_A, slows=(CXL_A,))
+    with pytest.raises(ValueError):  # duplicate names
+        TierTopology(fast=DDR5_L8, slows=(CXL_A, CXL_A))
+
+
+def test_topology_bandwidth_weights_and_spec():
+    topo = paper_three_device_topology()
+    w = topo.bandwidth_weights()
+    assert len(w) == 3 and abs(sum(w) - 1.0) < 1e-9
+    assert w[0] > w[1] > w[2]  # cxl-a is the fastest device
+    t2 = topology_from_spec("ddr5-l8+cxl-a+cxl-b")
+    assert t2.fast.name == "ddr5-l8" and t2.slow_names == ("cxl-a", "cxl-b")
+    assert topology_from_spec("paper3").n_slow == 3
+    with pytest.raises(ValueError, match="unknown device"):
+        topology_from_spec("ddr5-l8+nope")
+
+
+# -- page->device map invariants ------------------------------------------------
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_interleave_device_map_invariants_under_repartition(seed):
+    """Under repeated random weight vectors: the device map matches the
+    shard sizes, local indices are a bijection, values are preserved, and
+    the realized weights hit the targets to page rounding."""
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(24, 96))
+    x = jnp.asarray(rng.normal(size=(rows, 3)), jnp.float32)
+    pol = MemPolicy.from_tier_fractions(
+        "fast", ("cxl-a", "cxl-b", "cxl-c"), (0.2, 0.2, 0.1))
+    it = InterleavedTensor.from_array(x, pol, page_rows=4)
+    n = it.n_pages
+    for _ in range(4):
+        w = rng.uniform(0, 0.3, size=3)
+        it = it.repartition_weights(tuple(w), telemetry=Telemetry())
+        dev = np.asarray(it.page_device)
+        local = np.asarray(it.page_local)
+        # shard sizes match the map
+        for i, part in enumerate(it.parts):
+            count = int((dev == i).sum())
+            assert part.shape[0] == count * it.page_rows
+            # local indices within a device are 0..count-1, each once
+            assert sorted(local[dev == i]) == list(range(count))
+        # realized weights == targets after page rounding
+        total_target = round(min(sum(w), 1.0) * n)
+        assert int((dev >= 1).sum()) == total_target
+        # numerical no-op
+        assert np.allclose(np.asarray(it.to_array()), np.asarray(x))
+
+
+def test_minimal_delta_weights_noop_and_counts():
+    """The no-op guarantee: a weight vector that rounds to the current
+    per-device counts returns None (no page churn, no mover work)."""
+    cur = np.array([0, 1, 0, 2, 0, 1, 0, 2], np.int8)  # 4 fast, 2+2 slow
+    assert minimal_delta_weights(cur, (0.25, 0.25), 3) is None
+    out = minimal_delta_weights(cur, (0.5, 0.25), 3)
+    assert out is not None
+    counts = np.bincount(out, minlength=3)
+    assert list(counts) == [2, 4, 2]
+    # minimal moves: only the deficit count changes device
+    assert int((out != cur).sum()) == 2
+
+
+def test_repartition_weights_noop_enqueues_no_mover_work():
+    x = jnp.arange(64.0).reshape(16, 4)
+    pol = MemPolicy.from_tier_fractions("fast", ("cxl-a", "cxl-b"),
+                                        (0.25, 0.25), denominator=4)
+    it = InterleavedTensor.from_array(x, pol, page_rows=4)  # 4 pages
+    tel = Telemetry()
+    topo = three_dev()
+    with BulkMover(topo, asynchronous=True, telemetry=tel) as mover:
+        it2 = it.repartition_weights((0.25, 0.25), mover=mover,
+                                     fast_tier="ddr5-l8")
+    assert it2 is it  # same object: true no-op
+    assert not tel.routes  # nothing moved, nothing billed
+    # scalar shim: fraction that rounds to the current count is also free
+    it3 = InterleavedTensor.from_array(x, MemPolicy.membind("fast"),
+                                       page_rows=4)
+    it4 = it3.repartition_fraction(0.1, telemetry=tel)  # rounds to 0 pages
+    assert it4 is it3
+
+
+def test_interleave_two_device_shim():
+    """slow_fraction/page_tier/fast/slow keep their two-device semantics."""
+    x = jnp.arange(64.0).reshape(16, 4)
+    it = InterleavedTensor.from_array(x, MemPolicy.membind("fast"),
+                                      page_rows=4)
+    assert it.device_names == ("fast", "slow")
+    it = it.repartition_fraction(0.5, telemetry=Telemetry())
+    assert it.slow_fraction() == pytest.approx(0.5)
+    assert int(np.asarray(it.page_tier).sum()) == 2
+    assert it.fast.shape[0] == it.slow.shape[0] == 8
+    # a 3-device tensor refuses the ambiguous .slow accessor
+    it3 = InterleavedTensor.from_array(
+        x, MemPolicy.from_tier_fractions("fast", ("a", "b"), (0.25, 0.25),
+                                         denominator=4), page_rows=4)
+    with pytest.raises(AttributeError):
+        _ = it3.slow
+
+
+# -- mover: route purity + per-device writers with >= 3 devices -----------------
+def test_mover_route_purity_three_devices():
+    """One submission across 3 slow devices: every batch is route-pure
+    (per-route batch counts cover every descriptor) and per-device writer
+    watermarks track independently."""
+    topo = paper_three_device_topology()
+    tel = Telemetry()
+    with BulkMover(topo, asynchronous=True, batch_size=4, max_writers=2,
+                   drain_workers=3, telemetry=tel) as mover:
+        descs = []
+        for dst in ("cxl-a", "cxl-b", "cxl-c"):
+            descs += [Descriptor("ddr5-l8", dst, jnp.zeros((32,)))
+                      for _ in range(6)]
+        mover.submit(descs)
+        mover.wait_all()
+        for dst in ("cxl-a", "cxl-b", "cxl-c"):
+            r = tel.route("ddr5-l8", dst)
+            assert r.descriptors == 6
+            assert r.batches == 2  # ceil(6/4) route-pure batches
+            assert mover.take_peak_writers(dst) >= 1
+        # per-device watermarks reset independently
+        assert mover.take_peak_writers("cxl-a") == 0
+
+
+def test_mover_writer_limit_is_per_device():
+    """max_writers bounds concurrency PER slow device, not across the
+    pool: three devices can have 3 concurrent writers total."""
+    import threading
+    topo = paper_three_device_topology()
+    barrier = threading.Barrier(3)
+
+    def rendezvous(payload):
+        barrier.wait(timeout=10)
+        return payload
+
+    with BulkMover(topo, asynchronous=True, batch_size=1, max_writers=1,
+                   drain_workers=3, telemetry=Telemetry(),
+                   execute=rendezvous) as mover:
+        mover.submit([Descriptor("ddr5-l8", dst, jnp.zeros((8,)))
+                      for dst in ("cxl-a", "cxl-b", "cxl-c")])
+        mover.wait_all()
+        assert mover.take_peak_writers() == 3  # one per device, concurrent
+        for dst in ("cxl-a", "cxl-b", "cxl-c"):
+            assert mover.peak_by_dev[dst] == 1  # but never 2 on one device
+
+
+# -- arbiter: per-device budgets ------------------------------------------------
+def test_arbiter_default_multi_device_budgets():
+    arb = CaptionArbiter(paper_three_device_topology())
+    assert arb.cfg.device_budgets is not None
+    assert set(arb.cfg.device_budgets) == {"cxl-a", "cxl-b", "cxl-c"}
+    assert arb.cfg.slow_bw_budget == pytest.approx(
+        sum(arb.cfg.device_budgets.values()))
+
+
+def test_arbiter_per_device_budget_gates_only_saturated_device():
+    """A buffer growing onto a saturated device is frozen; the same walk
+    on a device with headroom still grows."""
+    topo = three_dev()
+    budgets = {"cxl-a": 1e9, "cxl-b": 50e9}
+    arb = CaptionArbiter(topo, ArbiterConfig(
+        slow_bw_budget=100e9, device_budgets=budgets))
+    ctl = arb.register("buf", CaptionController(
+        topo, CaptionConfig(probe_epochs=1, step=0.1)))
+    assert ctl.active_slow_device == "cxl-a"  # coordinate 0 first
+    # cxl-a saturated: growth on it must freeze
+    for _ in range(6):
+        d = arb.observe("buf", EpochMetrics(throughput=1.0),
+                        slow_bw=2e9, device_bw={"cxl-a": 2e9})
+    assert ctl.weights[0] == 0.0
+    assert any("cxl-a at budget" in h["reason"] for h in arb.history)
+    # force the walk onto cxl-b (headroom): growth proceeds
+    ctl._coord = 1
+    grew = False
+    for _ in range(6):
+        arb.observe("buf", EpochMetrics(throughput=1.0 + ctl.fraction),
+                    slow_bw=2e9, device_bw={"cxl-a": 2e9})
+        grew = grew or ctl.weights[1] > 0
+    assert grew, ctl.weights
+
+
+def test_arbiter_device_clip_pulls_back_saturated_share():
+    topo = three_dev()
+    arb = CaptionArbiter(topo, ArbiterConfig(
+        slow_bw_budget=100e9, device_budgets={"cxl-a": 1e9, "cxl-b": 50e9},
+        slack=0.0))
+    ctl = arb.register("buf", CaptionController(
+        topo, CaptionConfig(probe_epochs=1),
+        initial_weights=(0.4, 0.2)))
+    for _ in range(4):
+        d = arb.observe("buf", EpochMetrics(throughput=1.0), slow_bw=8e9,
+                        device_bw={"cxl-a": 8e9, "cxl-b": 0.5e9})
+    assert ctl.weights[0] < 0.4  # the saturated device's share was cut
+    assert ctl.weights[1] == pytest.approx(0.2)  # headroom share untouched
+    assert any("device clip" in h["reason"] for h in arb.history)
+
+
+# -- planner: per-device fractions + arbiter-aware seeding ----------------------
+def _bw_req(name, nbytes, rps, wps=0.0):
+    return BufferReq(name, BufferClass.OPT_STATE, int(nbytes),
+                     AccessProfile(rps, wps, 1, 1024, 2 << 20, 0.05))
+
+
+def test_planner_emits_device_fractions_bandwidth_proportional():
+    snc = dataclasses.replace(DDR5_L8, name="snc-2ch", load_bw=55e9,
+                              load_peak_streams=12, capacity_bytes=96 << 30)
+    topo = TierTopology(fast=snc, slows=(CXL_A, CXL_B))
+    p = plan([_bw_req("emb", 8 << 30, 55e9 * 1.3)], topo,
+             compute_seconds=1.0)
+    d = p.decisions["emb"]
+    assert d.slow_fraction > 0.05
+    assert set(d.device_fractions) <= {"cxl-a", "cxl-b"}
+    assert sum(d.device_fractions.values()) == pytest.approx(
+        d.slow_fraction)
+    # bandwidth-proportional: the faster device carries the larger share
+    assert d.device_fractions["cxl-a"] > d.device_fractions["cxl-b"]
+    # capacity ledger accounts per device
+    assert p.ledger.used("cxl-a") > 0 and p.ledger.used("cxl-b") > 0
+
+
+def test_planner_multi_device_capacity_spill_order():
+    """Overflow fills slow devices in declaration order, capacity-capped."""
+    small_a = dataclasses.replace(CXL_A, capacity_bytes=4 << 30)
+    topo = TierTopology(fast=tpu_v5e_topology().fast,
+                        slows=(small_a, CXL_B))
+    p = plan([_bw_req("opt", 28 << 30, 1e9, 1e9)], topo,
+             compute_seconds=0.05)
+    d = p.decisions["opt"]
+    # 12 GiB overflow: 4 GiB fills cxl-a, the rest lands on cxl-b
+    assert d.min_slow_fraction > 0.4
+    assert p.ledger.used("cxl-a") <= small_a.capacity_bytes
+    assert p.ledger.used("cxl-b") > 0
+
+
+def test_planner_arbiter_aware_seeding_scales_under_budget():
+    """When aggregate slow write demand exceeds the arbiter budget, the
+    voluntary slow share is scaled under it at plan time; capacity floors
+    are untouched."""
+    snc = dataclasses.replace(DDR5_L8, name="snc-2ch", load_bw=55e9,
+                              load_peak_streams=12, capacity_bytes=96 << 30)
+    topo = TierTopology(fast=snc, slow=CXL_C)
+    reqs = [_bw_req("a", 8 << 30, 40e9, 40e9),
+            _bw_req("b", 8 << 30, 40e9, 40e9)]
+    free = plan(reqs, topo, compute_seconds=0.5)
+    budget = 30e9
+    capped = plan(reqs, topo, compute_seconds=0.5, write_budget_bw=budget)
+    assert any("arbiter-aware seeding" in n for n in capped.notes)
+    assert sum(capped.slow_fraction(n) for n in ("a", "b")) < \
+        sum(free.slow_fraction(n) for n in ("a", "b"))
+    for n in ("a", "b"):
+        assert capped.slow_fraction(n) <= free.slow_fraction(n) + 1e-9
+        assert capped.slow_fraction(n) >= \
+            capped.decisions[n].min_slow_fraction - 1e-9
+    # seeded demand actually fits the budget, to one N:M round-up quantum
+    # per buffer (1/64 of the write rate each)
+    quantum = (1 / 64) * 40e9 * CXL_C.rfo_traffic_multiplier / 0.5
+    rate = sum(capped.slow_fraction(n)
+               * reqs[i].profile.bytes_written_per_step
+               * CXL_C.rfo_traffic_multiplier / 0.5
+               for i, n in enumerate(("a", "b")))
+    assert rate <= budget + 2 * quantum
+    # a budget that nothing exceeds changes nothing
+    roomy = plan(reqs, topo, compute_seconds=0.5, write_budget_bw=1e15)
+    for n in ("a", "b"):
+        assert roomy.slow_fraction(n) == pytest.approx(free.slow_fraction(n))
+
+
+# -- caption: weight vector + re-probing ----------------------------------------
+def test_caption_weight_vector_respects_simplex_and_floor():
+    topo = three_dev()
+    ctl = CaptionController(topo, CaptionConfig(probe_epochs=1, step=0.2,
+                                                max_fraction=0.5),
+                            initial_weights=(0.2, 0.1), min_fraction=0.25)
+    for _ in range(40):
+        # always-improving signal tries to push the sum past the ceiling
+        ctl.observe(EpochMetrics(throughput=1.0 + ctl.fraction))
+    assert ctl.fraction <= 0.5 + 1e-9
+    ctl2 = CaptionController(topo, CaptionConfig(probe_epochs=1, step=0.2),
+                             initial_weights=(0.2, 0.1), min_fraction=0.25)
+    for _ in range(40):
+        # always-degrading signal tries to shrink below the capacity floor
+        ctl2.observe(EpochMetrics(throughput=1.0 / (1.0 + ctl2.fraction)))
+    assert ctl2.fraction >= 0.25 - 1e-9
+
+
+def test_caption_two_device_scalar_shim():
+    """On a single-slow topology the weight vector degenerates to the
+    scalar walk: Decision.weights mirrors Decision.fraction."""
+    topo = tpu_v5e_topology()
+    ctl = CaptionController(topo, CaptionConfig(probe_epochs=1),
+                            initial_fraction=0.3)
+    d = ctl.observe(EpochMetrics(throughput=1.0))
+    assert d.weights == (pytest.approx(d.fraction),)
+    ctl.actuated(0.25)
+    assert ctl.weights == [pytest.approx(0.25)]
+
+
+def test_caption_drift_reopens_converged_walk():
+    """Workload-shift re-probing: a converged controller whose slow-route
+    EWMA bandwidth drifts past the threshold resets and re-converges to
+    the new optimum."""
+    topo = snc = None
+    from benchmarks.fig11_caption import snc_topology
+    topo = snc_topology()
+    from benchmarks.fig8_dlrm import throughput as tp
+    cfg = CaptionConfig(probe_epochs=2, step=0.05, min_step=0.01,
+                        hysteresis=0.01, drift_threshold=0.3)
+    ctl = CaptionController(topo, cfg)
+
+    def optimum(phase2: bool) -> float:
+        grid = np.linspace(0, 0.6, 121)
+        f = [tp(topo.fast, topo.slow, float(x), 8 if phase2 else 32)
+             for x in grid]
+        return float(grid[int(np.argmax(f))])
+
+    def run_epochs(n, threads, bw):
+        for _ in range(n):
+            t = tp(topo.fast, topo.slow, ctl.fraction, threads)
+            ctl.observe(EpochMetrics(throughput=t, slow_bw=bw))
+
+    run_epochs(64, 32, 10e9)  # phase 1: bandwidth-hungry, steady route bw
+    assert ctl.converged
+    f1 = ctl.fraction
+    assert abs(f1 - optimum(False)) <= 0.05
+    # phase 2: the workload shifts (fewer threads, route bw collapses)
+    run_epochs(2, 8, 1e9)
+    assert not ctl.converged  # drift re-opened the walk
+    assert any("workload shift" in d.reason for d in ctl.history[-3:])
+    run_epochs(96, 8, 1e9)  # steady again: re-converges to the new point
+    assert ctl.converged
+    assert abs(ctl.fraction - optimum(True)) <= 0.07
+    # control: with drift detection disabled the controller never re-opens
+    ctl3 = CaptionController(topo, dataclasses.replace(
+        cfg, drift_threshold=0.0))
+    for _ in range(64):
+        ctl3.observe(EpochMetrics(
+            throughput=tp(topo.fast, topo.slow, ctl3.fraction, 32),
+            slow_bw=10e9))
+    assert ctl3.converged
+    for _ in range(8):
+        ctl3.observe(EpochMetrics(throughput=1.0, slow_bw=1e9))
+    assert ctl3.converged
+
+
+# -- kv cache: weight-vector retile + device routes -----------------------------
+def test_kv_cache_repartition_weights_and_device_routes(key):
+    from repro.models import registry
+    from repro.serving.kv_cache import TieredKVCache, tiered_decode_step
+    arch = registry.get("internvl2-2b").tiny()
+    cfg = arch.cfg
+    params = arch.module.init(cfg, key)
+    pol = MemPolicy.from_tier_fractions(
+        "fast", ("cxl-a", "cxl-b"), (0.0, 0.0))
+    cache = TieredKVCache.create(cfg, 2, 32, pol, page_t=8)
+    # all-fast, but the device vocabulary survives the zero vector
+    assert cache.device_names == ("fast", "cxl-a", "cxl-b")
+    assert cache.slow_fraction() == 0.0
+    # decode a few tokens, then re-tier onto two devices mid-sequence
+    toks = jnp.asarray([3, 9], jnp.int32)
+    cache_b = cache
+    tel = Telemetry()
+    outs = []
+    for t in range(6):
+        la, cache = tiered_decode_step(cfg, params, cache, toks)
+        lb, cache_b = tiered_decode_step(cfg, params, cache_b, toks)
+        if t == 2:
+            cache_b = cache_b.repartition_weights(
+                (0.25, 0.25), telemetry=tel)
+        outs.append((np.asarray(la), np.asarray(lb)))
+    for a, b in outs:
+        np.testing.assert_allclose(a, b, atol=1e-4)
+    dev = np.asarray(cache_b.page_device)
+    assert (dev == 1).sum() == (dev == 2).sum() == 2  # 1 page/dev/slot
+    # traffic billed on real device routes
+    assert tel.route("fast", "cxl-a").bytes_moved > 0
+    assert tel.route("fast", "cxl-b").bytes_moved > 0
+    # no-op weights: same object, no new traffic
+    before = dict(tel.routes)
+    again = cache_b.repartition_weights((0.25, 0.25), telemetry=tel)
+    assert again is cache_b
+    assert dict(tel.routes) == before
+
+
+def test_tier_page_map_collapses_devices_to_storage():
+    assign = np.array([0, 1, 2, 3, 1, 0], np.int8)
+    a01, local, counts = tier_page_map(assign)
+    assert list(a01) == [0, 1, 1, 1, 1, 0]
+    assert counts == [2, 4]
