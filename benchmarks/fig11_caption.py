@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -276,17 +277,53 @@ def run() -> list[str]:
         f2 = ctl.fraction + 0.05
         cur_slow = int(np.asarray(it.page_tier).sum())
         delta12 = abs(round(f2 * it.n_pages) - cur_slow)
+        descs_before = mover.descriptors_submitted
         it = it.repartition_fraction(f2, mover=mover,
                                      fast_tier=topo.fast.name,
                                      slow_tier=topo.slow.name)
+        descs12 = mover.descriptors_submitted - descs_before
         moved2 = (tel.route(topo.fast.name, topo.slow.name).bytes_moved
                   + tel.route(topo.slow.name, topo.fast.name).bytes_moved
                   - moved1)
         assert moved2 == delta12 * page_bytes, (moved2, delta12 * page_bytes)
         assert delta12 < it.n_pages  # strictly less than a rebuild
+        # run-coalesced movement: O(delta-runs) descriptors, not one per
+        # page — the billed bytes above stayed exact regardless
+        assert descs12 < delta12, (descs12, delta12)
     assert np.allclose(np.asarray(it.to_array()), ref)  # numerical no-op
     rows.append(f"fig11/repartition/audit,0,pages={it.n_pages}"
-                f";delta1={expect1};delta2={delta12};bytes_ok=1")
+                f";delta1={expect1};delta2={delta12};descs2={descs12}"
+                f";bytes_ok=1")
+
+    # --- Retrace-free actuation: probe epochs never retrace the consumer ----
+    ctl_w = CaptionController(
+        snc_topology(), CaptionConfig(probe_epochs=1, step=0.05,
+                                      min_step=0.01, hysteresis=0.01))
+    n_pages = 256
+    walk_it = InterleavedTensor.from_array(
+        jnp.asarray(rng.normal(size=(n_pages * 16, 8)), jnp.float32),
+        MemPolicy.membind("fast"), page_rows=16,
+        headroom=ctl_w.headroom_pages(n_pages))
+    traces = [0]
+
+    def _step(t, i):
+        traces[0] += 1
+        return t.gather_rows(i)
+
+    step_fn = jax.jit(_step)
+    idx = jnp.asarray(rng.integers(0, n_pages * 16, size=32))
+    epochs = 0
+    for _ in range(16):
+        jax.block_until_ready(step_fn(walk_it, idx))
+        tput = throughput(topo.fast, topo.slow, ctl_w.fraction, THREADS)
+        d = ctl_w.observe(EpochMetrics(throughput=tput))
+        walk_it = walk_it.repartition_fraction(d.fraction,
+                                               telemetry=Telemetry())
+        ctl_w.actuated(walk_it.slow_fraction())
+        epochs += 1
+    assert epochs >= 10 and traces[0] == 1, (epochs, traces[0])
+    rows.append(f"fig11/repartition/retrace_free,0,epochs={epochs}"
+                f";jit_traces={traces[0]}")
 
     # --- N-device: weight-vector convergence on a 3-device pool -------------
     rows.extend(run_three_device())

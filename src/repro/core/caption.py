@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import TYPE_CHECKING, Optional, Sequence
 
 from repro.core.classifier import Boundedness
@@ -281,6 +282,22 @@ class CaptionController:
         if self.topology.slows:
             return self.topology.slows[self._coord].name
         return None
+
+    def headroom_pages(self, n_pages: int) -> int:
+        """Shard capacity padding (pages) that keeps the WHOLE walk
+        shape-stable.
+
+        The walk is bounded: no device's share — and no slow pool's
+        total — can exceed ``cfg.max_fraction``, and the fast tier can
+        reclaim at most the initial slow share.  A shard padded by
+        ``ceil(max_fraction * n_pages)`` pages therefore absorbs every
+        actuation the controller can ever request, so a consumer built
+        with this headroom (``InterleavedTensor.from_array(...,
+        headroom=...)``, ``TieredKVCache.create(...,
+        slow_headroom=...)``) never changes shape mid-walk and its
+        jitted step functions trace exactly once across all probe
+        epochs (asserted by tests/test_hotpaths.py)."""
+        return int(math.ceil(self.cfg.max_fraction * max(n_pages, 0)))
 
     @classmethod
     def from_plan(cls, plan: "Plan", buffer: str, topology: TierTopology,

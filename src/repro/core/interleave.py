@@ -11,6 +11,26 @@ and embedding-bag reduction (the paper's DLRM §5.2 workload) runs a
 reduce per shard and sums — numerically identical to the un-tiered
 reduce (see tests/property tests).
 
+Hot paths (the Caption loop's actuation and access costs, ISSUE 5):
+
+* **Shape-stable shards** — with ``headroom > 0`` each device shard is
+  capacity-padded by that many page chunks, and a repartition whose new
+  per-device page counts fit the existing capacities rewrites only the
+  index maps and the moved pages: shard shapes (and the pytree treedef)
+  are unchanged, so jitted consumers never retrace across Caption probe
+  epochs.  Only when headroom is exhausted does the shard grow (and the
+  consumer retrace, once).
+* **O(Δ) vectorized repartition** — the planner is numpy index
+  arithmetic, and moved pages are coalesced into contiguous
+  source-local *runs*, one batched mover :class:`Descriptor` per run
+  (route-pure, billed bytes identical to per-page movement).
+* **Single-pass routed access** — ``gather_rows``/``update_rows`` with
+  concrete indices bucket rows by owning device (argsort), do one
+  compact take/scatter per shard over only the rows it owns, and
+  inverse-permute: one pass of memory traffic instead of one full pass
+  per device.  Traced (jit) calls keep the masked N-pass formulation,
+  whose shapes are static.
+
 On the CPU dry-run backend every shard is a plain device array and the
 tier split is accounting (ledger + telemetry + perfmodel); on a TPU
 runtime the slow shards carry a ``pinned_host`` sharding (backend
@@ -20,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,24 +50,35 @@ from repro.core.ledger import TierLedger
 from repro.core.policy import MemPolicy, largest_remainder_split
 from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
 
+#: default movement-run length (pages) the minimal-move planner clusters
+#: its picks into: one mover Descriptor ships one run, so a Δ-page shift
+#: drains ~Δ/RUN descriptors instead of Δ (§6 descriptor batching).  Run
+#: STARTS stay evenly spread across the address range, so the interleave
+#: discipline holds at run granularity; raise for cheaper actuation,
+#: lower toward 1 for finer spreading (1 = legacy page-at-a-time).
+DEFAULT_RUN_PAGES = 16
+
 
 def device_page_map(assign: np.ndarray, n_devices: int
                     ) -> tuple[np.ndarray, np.ndarray, list[int]]:
     """(device ordinals, local index within owning device, per-device counts).
 
     The one place the page->device bookkeeping lives: each page's local
-    index is its arrival order within its device.  Shared by construction
-    and repartition here and by the tiered KV cache."""
+    index is its arrival order within its device.  Vectorized (cumsum
+    per device) — it runs on every construction and repartition.  Shared
+    by construction and repartition here and by the tiered KV cache."""
     dev = np.asarray(assign, np.int8)
     if dev.size and int(dev.max()) >= n_devices:
         raise ValueError(
             f"page assigned to device {int(dev.max())} >= {n_devices}")
     local = np.zeros(len(dev), np.int32)
-    counters = [0] * n_devices
-    for p, d in enumerate(dev):
-        local[p] = counters[d]
-        counters[d] += 1
-    return dev, local, counters
+    counts: list[int] = []
+    for d in range(n_devices):
+        mask = dev == d
+        counts.append(int(mask.sum()))
+        if counts[-1]:
+            local[mask] = np.cumsum(mask)[mask] - 1
+    return dev, local, counts
 
 
 def tier_page_map(assign: np.ndarray) -> tuple[np.ndarray, np.ndarray, list[int]]:
@@ -56,6 +87,48 @@ def tier_page_map(assign: np.ndarray) -> tuple[np.ndarray, np.ndarray, list[int]
     storage tier (the KV cache's shape-stable fast/slow pools)."""
     assign01 = np.minimum(np.asarray(assign), 1).astype(np.int8)
     return device_page_map(assign01, 2)
+
+
+def contiguous_runs(values: np.ndarray) -> list[tuple[int, int]]:
+    """(start, length) spans where ``values`` increments by exactly 1.
+
+    The run-coalescing primitive: positions whose source locals are
+    consecutive form one contiguous slab in the owning shard and ship as
+    a single batched mover descriptor."""
+    v = np.asarray(values)
+    if v.size == 0:
+        return []
+    breaks = np.nonzero(np.diff(v) != 1)[0] + 1
+    starts = np.concatenate(([0], breaks))
+    ends = np.concatenate((breaks, [v.size]))
+    return [(int(s), int(e - s)) for s, e in zip(starts, ends)]
+
+
+def route_pure_runs(src: np.ndarray, dst: np.ndarray, loc: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sort moved items by (src, dst, source local) and split them into
+    route-pure runs of consecutive locals.
+
+    Returns ``(order, starts, ends)``: ``order`` permutes the inputs into
+    run order, and ``[starts[i], ends[i])`` spans run ``i`` within it.
+    The ONE place the coalescing rule lives — a run never mixes (src,
+    dst) routes and its source locals are adjacent, so it is a single
+    contiguous slab of the source pool and ships as one batched
+    descriptor.  Shared by ``InterleavedTensor`` and ``TieredKVCache``
+    so the two actuation paths can never bill runs differently."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    loc = np.asarray(loc, np.int64)
+    if src.size == 0:
+        empty = np.zeros(0, np.int64)
+        return empty, empty, empty
+    order = np.lexsort((loc, dst, src))
+    s, d, lo = src[order], dst[order], loc[order]
+    key = s * (int(max(s.max(), d.max())) + 2) + d
+    brk = np.nonzero((np.diff(key) != 0) | (np.diff(lo) != 1))[0] + 1
+    starts = np.concatenate(([0], brk))
+    ends = np.concatenate((brk, [order.size]))
+    return order, starts, ends
 
 
 def _policy_device_map(policy, n_pages: int
@@ -123,12 +196,21 @@ def resolve_device_names(existing: Sequence[str], n_devices: int,
     return tuple(names)
 
 
+def _is_concrete(*arrays) -> bool:
+    """True when every array can be materialized host-side (not a jit
+    tracer) — the gate between the single-pass bucketed access path and
+    the masked shape-static formulation."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class InterleavedTensor:
     """A logical array paged across (fast, slow devices...) along axis 0."""
 
-    #: per-device page shards; ``parts[0]`` is the fast tier's.
+    #: per-device page shards; ``parts[0]`` is the fast tier's.  With
+    #: ``headroom > 0`` each shard is capacity-padded: only the slots the
+    #: page->local map points at are valid, the rest is reserve.
     parts: tuple[jax.Array, ...]
     page_device: jax.Array  # (n_pages,) int8: 0 = fast, i >= 1 = slow dev i-1
     page_local: jax.Array  # (n_pages,) int32: page index within its device
@@ -136,19 +218,64 @@ class InterleavedTensor:
     rows: int  # logical row count (may be < n_pages * page_rows)
     #: route labels per device ordinal (telemetry/mover tier names).
     device_names: tuple[str, ...] = ("fast", "slow")
+    #: capacity padding, in page chunks per device shard.  0 = exact-size
+    #: shards (every repartition resizes them — the legacy layout);
+    #: > 0 = shape-stable shards (repartitions that fit never reallocate,
+    #: so jitted consumers never retrace across Caption probe epochs).
+    headroom: int = 0
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
         children = (tuple(self.parts), self.page_device, self.page_local)
-        aux = (self.page_rows, self.rows, self.device_names)
+        aux = (self.page_rows, self.rows, self.device_names, self.headroom)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         parts, page_device, page_local = children
-        page_rows, rows, device_names = aux
+        page_rows, rows, device_names, headroom = aux
         return cls(tuple(parts), page_device, page_local, page_rows, rows,
-                   device_names)
+                   device_names, headroom)
+
+    # -- host-side map cache --------------------------------------------------
+    def _host_map(self) -> tuple[np.ndarray, np.ndarray]:
+        """Cached numpy (page_device, page_local) — controller reads
+        (slow_fraction / device_fractions / weights) happen every epoch
+        and must not re-sync the device arrays each time."""
+        cached = self.__dict__.get("_host_cache")
+        if cached is None:
+            cached = (np.asarray(self.page_device),
+                      np.asarray(self.page_local))
+            self.__dict__["_host_cache"] = cached
+        return cached
+
+    def _with_map(self, dev: np.ndarray, local: np.ndarray) -> None:
+        """Seed the host cache when the maps were just built host-side."""
+        self.__dict__["_host_cache"] = (dev, local)
+
+    def _part_host(self, i: int) -> np.ndarray:
+        """Cached host mirror of shard ``i``.
+
+        The shards are immutable jax buffers, so a host copy stays valid
+        for the instance's lifetime; repartitions hand the mirrors of
+        untouched shards to the child instance, which is what makes the
+        shape-stable actuation path O(Δ): only the receiving shard is
+        copied, everything else is fancy-indexed through its mirror.
+        Mirrors must NEVER be mutated — writers copy first."""
+        cache = self.__dict__.get("_parts_host")
+        if cache is None:
+            cache = self.__dict__["_parts_host"] = [None] * len(self.parts)
+        if cache[i] is None:
+            cache[i] = np.asarray(self.parts[i])
+        return cache[i]
+
+    def _with_parts_host(self, mirrors: list) -> None:
+        """Seed the host mirrors (entries may be None for lazy fill)."""
+        self.__dict__["_parts_host"] = list(mirrors)
+
+    def _inherit_parts_host(self) -> list:
+        cache = self.__dict__.get("_parts_host")
+        return list(cache) if cache is not None else [None] * len(self.parts)
 
     # -- two-device compatibility views --------------------------------------
     @property
@@ -176,6 +303,7 @@ class InterleavedTensor:
         policy: MemPolicy,
         page_rows: int = 256,
         *,
+        headroom: int = 0,
         ledger: Optional[TierLedger] = None,
         name: str = "interleaved",
     ) -> "InterleavedTensor":
@@ -190,13 +318,19 @@ class InterleavedTensor:
         ) if pad_rows else array
         paged = padded.reshape((n_pages, page_rows) + feature)
 
-        def take_pages(ids):
-            if len(ids) == 0:
-                return jnp.zeros((0, page_rows) + feature, array.dtype)
-            return paged[np.asarray(ids)]
+        def take_pages(ids, cap: int):
+            got = (paged[np.asarray(ids)] if len(ids)
+                   else jnp.zeros((0, page_rows) + feature, array.dtype))
+            if cap > len(ids):
+                pad = jnp.zeros((cap - len(ids), page_rows) + feature,
+                                array.dtype)
+                got = jnp.concatenate([got, pad]) if len(ids) else pad
+            return got
 
         parts = tuple(
-            take_pages(np.nonzero(dev == i)[0]).reshape((-1,) + feature)
+            take_pages(np.nonzero(dev == i)[0],
+                       counts[i] + max(int(headroom), 0))
+            .reshape((-1,) + feature)
             for i in range(len(names)))
         out = cls(
             parts=parts,
@@ -205,7 +339,9 @@ class InterleavedTensor:
             page_rows=page_rows,
             rows=rows,
             device_names=names,
+            headroom=max(int(headroom), 0),
         )
+        out._with_map(dev, page_local)
         if ledger is not None:
             for i, part in enumerate(parts):
                 if part.size:
@@ -228,18 +364,29 @@ class InterleavedTensor:
         feat = int(np.prod(f.shape[1:])) if f.ndim > 1 else 1
         return feat * f.dtype.itemsize
 
+    @property
+    def capacity_pages(self) -> tuple[int, ...]:
+        """Per-device shard capacity in pages (valid + headroom)."""
+        return tuple(p.shape[0] // self.page_rows for p in self.parts)
+
+    def valid_page_counts(self) -> tuple[int, ...]:
+        """Per-device VALID page counts (what the map actually uses)."""
+        dev, _ = self._host_map()
+        return tuple(np.bincount(dev, minlength=len(self.parts)).tolist())
+
     def slow_fraction(self) -> float:
-        return float((np.asarray(self.page_device) >= 1).mean())
+        dev, _ = self._host_map()
+        return float((dev >= 1).mean())
 
     def device_fractions(self) -> dict[str, float]:
         """Per-device page share, keyed by device name."""
-        dev = np.asarray(self.page_device)
+        dev, _ = self._host_map()
         return {n: float((dev == i).mean())
                 for i, n in enumerate(self.device_names)}
 
     def weights(self) -> tuple[float, ...]:
         """Per-slow-device page shares (the Caption weight vector)."""
-        dev = np.asarray(self.page_device)
+        dev, _ = self._host_map()
         return tuple(float((dev == i).mean())
                      for i in range(1, len(self.parts)))
 
@@ -253,9 +400,34 @@ class InterleavedTensor:
         local = local_page * self.page_rows + offset
         return dev, local
 
+    def _route_host(self, idx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side :meth:`_route` over the cached maps (no device sync)."""
+        dev_map, local_map = self._host_map()
+        # clip (not wrap) out-of-range pages, matching the traced path's
+        # mode="clip" take semantics
+        page = np.clip(idx // self.page_rows, 0, self.n_pages - 1)
+        offset = idx % self.page_rows
+        dev = dev_map[page]
+        local = local_map[page].astype(np.int64) * self.page_rows + offset
+        return dev, local
+
     # -- access --------------------------------------------------------------
     def gather_rows(self, idx: jax.Array) -> jax.Array:
-        """rows[idx] — routed gather across every device shard."""
+        """rows[idx] — routed gather across the device shards.
+
+        Concrete indices take the single-pass path: rows are bucketed by
+        owning device (stable argsort), each shard serves one compact
+        take over exactly the rows it owns, and the inverse permutation
+        restores request order — one pass of memory traffic instead of
+        one full masked pass per device.  Traced indices (inside jit)
+        use the masked formulation, which is shape-static.  The two are
+        value-identical (asserted bit-exact by tests/test_hotpaths.py).
+        """
+        if _is_concrete(idx, self.page_device, *self.parts):
+            return self._gather_rows_bucketed(np.asarray(idx))
+        return self._gather_rows_masked(idx)
+
+    def _gather_rows_masked(self, idx: jax.Array) -> jax.Array:
         dev, local = self._route(idx)
         out = None
         for i, part in enumerate(self.parts):
@@ -273,8 +445,44 @@ class InterleavedTensor:
             out = jnp.zeros(idx.shape + feat, self.parts[0].dtype)
         return out
 
+    def _gather_rows_bucketed(self, idx: np.ndarray) -> jax.Array:
+        # Host-side numpy on purpose: index shapes change call to call,
+        # so staying in XLA would recompile the gather per shape; numpy
+        # fancy indexing is the one-pass copy with zero compile cost on
+        # the CPU-modeled backend.
+        feat = self.parts[0].shape[1:]
+        dtype = self.parts[0].dtype
+        flat = np.asarray(idx).ravel()
+        if flat.size == 0 or all(p.shape[0] == 0 for p in self.parts):
+            return jnp.zeros(idx.shape + feat, dtype)
+        dev, local = self._route_host(flat)
+        out = np.empty((flat.size,) + feat, dtype)
+        for i, part in enumerate(self.parts):
+            mask = dev == i
+            if not mask.any():
+                continue  # shard untouched: no gather pass at all
+            view = self._part_host(i)
+            rows = np.minimum(local[mask], max(view.shape[0] - 1, 0))
+            out[mask] = view[rows]
+        return jnp.asarray(out).reshape(idx.shape + feat)
+
     def _scatter(self, idx: jax.Array, values: jax.Array, op: str
                  ) -> "InterleavedTensor":
+        if _is_concrete(idx, values, self.page_device, *self.parts):
+            return self._scatter_bucketed(np.asarray(idx), values, op)
+        return self._scatter_masked(idx, values, op)
+
+    @staticmethod
+    def _np_number(dtype) -> bool:
+        """True when numpy can index-assign/accumulate this dtype natively
+        (extension dtypes like bfloat16 fall back to the masked path)."""
+        try:
+            return np.issubdtype(np.dtype(dtype), np.number)
+        except TypeError:
+            return False
+
+    def _scatter_masked(self, idx: jax.Array, values: jax.Array, op: str
+                        ) -> "InterleavedTensor":
         dev, local = self._route(idx)
         parts = []
         for i, part in enumerate(self.parts):
@@ -287,6 +495,37 @@ class InterleavedTensor:
             parts.append(ref.set(values, mode="drop") if op == "set"
                          else ref.add(values, mode="drop"))
         return dataclasses.replace(self, parts=tuple(parts))
+
+    def _scatter_bucketed(self, idx: np.ndarray, values: jax.Array, op: str
+                          ) -> "InterleavedTensor":
+        # Same rationale as the bucketed gather: numpy fancy assignment
+        # per owning shard, no XLA recompiles on changing index shapes.
+        feat = self.parts[0].shape[1:]
+        if op == "add" and not self._np_number(self.parts[0].dtype):
+            return self._scatter_masked(jnp.asarray(idx), values, op)
+        flat = np.asarray(idx).ravel()
+        vals = np.asarray(values).reshape((flat.size,) + feat)
+        dev, local = self._route_host(flat)
+        parts = list(self.parts)
+        mirrors = self._inherit_parts_host()
+        for i, part in enumerate(self.parts):
+            if part.shape[0] == 0:
+                continue
+            mask = dev == i
+            if not mask.any():
+                continue  # shard untouched: no scatter pass at all
+            new_part = self._part_host(i).copy()  # one writable copy
+            rows = local[mask]
+            keep = rows < new_part.shape[0]
+            if op == "set":
+                new_part[rows[keep]] = vals[mask][keep]
+            else:
+                np.add.at(new_part, rows[keep], vals[mask][keep])
+            parts[i] = jnp.asarray(new_part)
+            mirrors[i] = new_part
+        out = dataclasses.replace(self, parts=tuple(parts))
+        out._with_parts_host(mirrors)
+        return out
 
     def update_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
         """Functional scatter-set of ``values`` at row ``idx``."""
@@ -334,7 +573,8 @@ class InterleavedTensor:
         dev[np.asarray(page_ids)] = 1 if to_slow else 0
         policy_like = _ExplicitAssignment(dev, self.device_names)
         return InterleavedTensor.from_array(
-            jnp.asarray(dense), policy_like, self.page_rows
+            jnp.asarray(dense), policy_like, self.page_rows,
+            headroom=self.headroom,
         )
 
     def repartition(
@@ -355,12 +595,12 @@ class InterleavedTensor:
         pages between devices — through the
         :class:`~repro.core.mover.BulkMover` when one is given (batched,
         cache-bypass descriptors, writer-limited), else accounted directly
-        to telemetry.  Unchanged pages are recompacted within their own
-        device and never cross the interconnect, so inter-device traffic
-        equals ``delta_pages * page_bytes`` exactly (asserted by
-        benchmarks/fig11_caption.py).  Every move is billed to its real
-        ``(src_device, dst_device)`` route — a page hopping between two
-        slow devices is the paper's C2C traffic, not fast-tier churn.
+        to telemetry.  Unchanged pages never cross the interconnect, so
+        inter-device traffic equals ``delta_pages * page_bytes`` exactly
+        (asserted by benchmarks/fig11_caption.py).  Every move is billed
+        to its real ``(src_device, dst_device)`` route — a page hopping
+        between two slow devices is the paper's C2C traffic, not
+        fast-tier churn.
 
         ``fast_tier``/``slow_tier`` override the first two route labels
         (the two-device compatibility path, e.g. hbm/host on v5e).
@@ -378,77 +618,198 @@ class InterleavedTensor:
         return self._reassign(new_dev, names, mover=mover,
                               telemetry=telemetry, source=source, lane=lane)
 
+    # -- the vectorized O(Δ) actuation core ----------------------------------
+    def _move_runs(self, delta: np.ndarray, old_dev: np.ndarray,
+                   old_local: np.ndarray, new_dev: np.ndarray
+                   ) -> list[tuple[int, int, np.ndarray, int]]:
+        """Coalesce the delta pages into route-pure movement runs.
+
+        Returns ``(src_dev, dst_dev, page_ids, src_local_start)`` tuples
+        where the pages' source locals are consecutive — each run is one
+        contiguous slab of its source shard and ships as ONE batched
+        descriptor.  Sorting is (src, dst, src_local), so coalescing
+        never mixes routes and billed bytes are exactly
+        ``delta_pages * page_bytes``."""
+        if delta.size == 0:
+            return []
+        order, starts, ends = route_pure_runs(
+            old_dev[delta], new_dev[delta], old_local[delta])
+        pages = delta[order]
+        src = old_dev[delta][order]
+        dst = new_dev[delta][order]
+        loc = old_local[delta][order]
+        return [(int(src[s]), int(dst[s]), pages[s:e], int(loc[s]))
+                for s, e in zip(starts, ends)]
+
+    def _ship_runs(self, runs, names, *, mover, telemetry, source, lane
+                   ) -> None:
+        """Meter the movement runs: one batched descriptor per run
+        through the mover, or one telemetry record per run."""
+        if not runs:
+            return
+        page_bytes = self.page_rows * self.row_bytes
+
+        def route_name(d: int) -> str:
+            return names[d] if d < len(names) else f"dev{d}"
+
+        if mover is not None:
+            from repro.core.mover import LANE_BULK, Descriptor
+            pr = self.page_rows
+            descs = [
+                Descriptor(
+                    src_tier=route_name(s),
+                    dst_tier=route_name(d),
+                    payload=self._part_host(s)[l0 * pr:
+                                               (l0 + len(pages)) * pr],
+                    lane=LANE_BULK if lane is None else lane,
+                    source=source,
+                )
+                for s, d, pages, l0 in runs
+            ]
+            mover.submit(descs)
+            if mover.asynchronous:
+                mover.wait_all()
+        else:
+            for s, d, pages, _ in runs:
+                telemetry.record_move(route_name(s), route_name(d),
+                                      page_bytes * len(pages), 0.0,
+                                      source=source)
+
+    def _gather_pages(self, page_ids: np.ndarray, old_dev: np.ndarray,
+                      old_local: np.ndarray) -> np.ndarray:
+        """(len(page_ids), page_rows, *feature) page data, one compact
+        fancy-indexed copy per source shard (vectorized; no per-page
+        Python, no XLA recompiles on changing delta shapes)."""
+        pr = self.page_rows
+        feature = self.parts[0].shape[1:]
+        out = np.empty((page_ids.size, pr) + feature, self.parts[0].dtype)
+        if page_ids.size == 0:
+            return out
+        src = old_dev[page_ids]
+        for s in np.unique(src):
+            mask = src == s
+            view = self._part_host(int(s)).reshape((-1, pr) + feature)
+            out[mask] = view[old_local[page_ids[mask]]]
+        return out
+
     def _reassign(self, new_dev: np.ndarray, names: tuple[str, ...], *,
                   mover=None, telemetry: Telemetry = GLOBAL_TELEMETRY,
                   source: Optional[str] = None,
                   lane: Optional[int] = None) -> "InterleavedTensor":
         n = self.n_pages
         new_dev = np.asarray(new_dev, np.int8)
-        old_dev = np.asarray(self.page_device)
+        old_dev, old_local = self._host_map()
         n_devices = max(len(names), len(self.parts),
                         int(new_dev.max(initial=0)) + 1)
         delta = np.nonzero(new_dev != old_dev)[0]
         if delta.size == 0 and n_devices == len(self.parts):
             return self
 
-        feature = self.parts[0].shape[1:]
-        old_local = np.asarray(self.page_local)
-        paged = [np.asarray(p).reshape((-1, self.page_rows) + feature)
-                 for p in self.parts]
+        new_counts = np.bincount(new_dev, minlength=n_devices)
+        caps = self.capacity_pages
 
-        def old_page(p: int) -> np.ndarray:
-            return paged[old_dev[p]][old_local[p]]
+        # Bill / ship the movement first (payloads slice the CURRENT
+        # shards): one route-pure batched descriptor per contiguous run.
+        runs = self._move_runs(delta, old_dev, old_local, new_dev)
+        self._ship_runs(runs, names, mover=mover, telemetry=telemetry,
+                        source=source, lane=lane)
 
         def route_name(d: int) -> str:
             return names[d] if d < len(names) else f"dev{d}"
 
-        # Ship only the delta through the movement engine.
-        moved: dict[int, Any] = {}
-        page_bytes = self.page_rows * self.row_bytes
-        if mover is not None and delta.size:
-            from repro.core.mover import LANE_BULK, Descriptor
-            descs = [
-                Descriptor(
-                    src_tier=route_name(int(old_dev[p])),
-                    dst_tier=route_name(int(new_dev[p])),
-                    payload=jnp.asarray(old_page(p)),
-                    on_done=lambda r, p=int(p): moved.__setitem__(p, r),
-                    lane=LANE_BULK if lane is None else lane,
-                    source=source,
-                )
-                for p in delta
-            ]
-            mover.submit(descs)
-            if mover.asynchronous:
-                mover.wait_all()
+        stable = (self.headroom > 0 and n_devices == len(self.parts)
+                  and all(int(new_counts[d]) <= caps[d]
+                          for d in range(n_devices)))
+        if stable:
+            out = self._reassign_stable(delta, old_dev, old_local, new_dev)
         else:
-            for p in delta:
-                telemetry.record_move(
-                    route_name(int(old_dev[p])), route_name(int(new_dev[p])),
-                    page_bytes, 0.0, source=source)
-                moved[int(p)] = old_page(p)
+            out = self._reassign_rebuild(old_dev, old_local, new_dev,
+                                         n_devices)
+        final = dataclasses.replace(
+            out, device_names=tuple(route_name(d) for d in range(n_devices)))
+        final._with_map(*out._host_map())
+        final._with_parts_host(out._inherit_parts_host())
+        return final
 
-        new_dev, new_local, _ = device_page_map(new_dev, n_devices)
-        groups: list[list[np.ndarray]] = [[] for _ in range(n_devices)]
-        for p in range(n):
-            groups[int(new_dev[p])].append(
-                np.asarray(moved[p]) if p in moved else old_page(p))
-
-        def stack(pages: list[np.ndarray]) -> jax.Array:
-            if not pages:
-                return jnp.zeros((0,) + feature, self.parts[0].dtype)
-            return jnp.asarray(
-                np.stack(pages).reshape((-1,) + feature),
-                self.parts[0].dtype)
-
-        return dataclasses.replace(
+    def _reassign_stable(self, delta: np.ndarray, old_dev: np.ndarray,
+                         old_local: np.ndarray, new_dev: np.ndarray
+                         ) -> "InterleavedTensor":
+        """Shape-stable fast path: every moved page lands in a free slot
+        of its destination shard — shard shapes, the treedef, and every
+        unmoved page's slot are untouched, so jitted consumers keep their
+        traces.  Planning, index updates, and metered movement are all
+        O(Δ); materializing the functional update still costs one
+        copy-on-write of each RECEIVING shard (non-receiving shards are
+        reused as-is), because immutable jax buffers cannot be patched
+        in place."""
+        pr = self.page_rows
+        new_local = old_local.copy()
+        parts = list(self.parts)
+        mirrors = self._inherit_parts_host()
+        caps = self.capacity_pages
+        for d in np.unique(new_dev[delta]):
+            incoming = delta[new_dev[delta] == d]
+            # free slots = capacity minus the slots kept by staying pages
+            staying = (old_dev == d) & (new_dev == d)
+            used = np.zeros(caps[int(d)], bool)
+            used[old_local[staying]] = True
+            free = np.nonzero(~used)[0]
+            slots = free[: incoming.size]
+            new_local[incoming] = slots.astype(np.int32)
+            data = self._gather_pages(incoming, old_dev, old_local)
+            new_part = self._part_host(int(d)).copy().reshape(
+                (-1, pr) + data.shape[2:])
+            new_part[slots] = data
+            new_flat = new_part.reshape((-1,) + data.shape[2:])
+            parts[int(d)] = jnp.asarray(new_flat)
+            mirrors[int(d)] = new_flat
+        out = dataclasses.replace(
             self,
-            parts=tuple(stack(g) for g in groups),
+            parts=tuple(parts),
             page_device=jnp.asarray(new_dev, jnp.int8),
             page_local=jnp.asarray(new_local, jnp.int32),
-            device_names=tuple(
-                route_name(d) for d in range(n_devices)),
         )
+        out._with_map(new_dev, new_local)
+        out._with_parts_host(mirrors)
+        return out
+
+    def _reassign_rebuild(self, old_dev: np.ndarray, old_local: np.ndarray,
+                          new_dev: np.ndarray, n_devices: int
+                          ) -> "InterleavedTensor":
+        """Exact-size (or grow) path: rebuild each shard at its new count
+        plus headroom, gathering every device's pages in one vectorized
+        take per (dst, src) pair.  This is the path that changes shapes —
+        jitted consumers retrace once, by design (headroom exhausted or
+        the device set widened)."""
+        pr = self.page_rows
+        feature = self.parts[0].shape[1:]
+        dtype = self.parts[0].dtype
+        dev2, local2, counts = device_page_map(new_dev, n_devices)
+        parts = []
+        mirrors: list = []
+        for d in range(n_devices):
+            cap = counts[d] + self.headroom
+            if cap == 0:
+                empty = np.zeros((0,) + tuple(feature), dtype)
+                parts.append(jnp.asarray(empty))
+                mirrors.append(empty)
+                continue
+            pages_d = np.nonzero(dev2 == d)[0]  # page-id order == rank order
+            data = np.zeros((cap, pr) + tuple(feature), dtype)
+            data[: counts[d]] = self._gather_pages(pages_d, old_dev,
+                                                   old_local)
+            flat = data.reshape((-1,) + tuple(feature))
+            parts.append(jnp.asarray(flat))
+            mirrors.append(flat)
+        out = dataclasses.replace(
+            self,
+            parts=tuple(parts),
+            page_device=jnp.asarray(dev2, jnp.int8),
+            page_local=jnp.asarray(local2, jnp.int32),
+        )
+        out._with_map(dev2, local2)
+        out._with_parts_host(mirrors)
+        return out
 
     def repartition_fraction(self, fraction: float, **kwargs
                              ) -> "InterleavedTensor":
@@ -462,7 +823,8 @@ class InterleavedTensor:
                             device_names: Optional[Sequence[str]] = None,
                             telemetry: Telemetry = GLOBAL_TELEMETRY,
                             source: Optional[str] = None,
-                            lane: Optional[int] = None
+                            lane: Optional[int] = None,
+                            run_pages: int = DEFAULT_RUN_PAGES
                             ) -> "InterleavedTensor":
         """Re-tier to a per-slow-device weight vector with minimal moves.
 
@@ -470,13 +832,15 @@ class InterleavedTensor:
         fast tier keeps the remainder.  Unlike building an N:M policy —
         whose round-robin pattern can disagree with the current map on far
         more pages than the share delta — this flips exactly the surplus/
-        deficit page counts (evenly spread), so the controller's small
-        weight-vector adjustments stay cheap.  A weight vector that rounds
-        to the current per-device page counts is a true no-op: the same
-        object is returned and no mover work is enqueued."""
+        deficit page counts, clustered into evenly spread runs of up to
+        ``run_pages`` consecutive pages so the mover drains O(runs)
+        batched descriptors instead of O(pages).  A weight vector that
+        rounds to the current per-device page counts is a true no-op: the
+        same object is returned and no mover work is enqueued."""
         n_devices = max(len(self.parts), len(weights) + 1)
-        new_dev = minimal_delta_weights(
-            np.asarray(self.page_device), tuple(weights), n_devices)
+        dev, _ = self._host_map()
+        new_dev = minimal_delta_weights(dev, tuple(weights), n_devices,
+                                        run_pages=run_pages)
         if new_dev is None:  # rounds to the current assignment: no-op
             return self
         names = resolve_device_names(self.device_names, n_devices,
@@ -493,7 +857,8 @@ class InterleavedTensor:
     def traffic_bytes(self, idx: np.ndarray) -> dict[str, int]:
         """Bytes touched per device for a concrete index batch (host-side)."""
         page = np.asarray(idx).ravel() // self.page_rows
-        dev = np.asarray(self.page_device)[np.minimum(page, self.n_pages - 1)]
+        dev_map, _ = self._host_map()
+        dev = dev_map[np.minimum(page, self.n_pages - 1)]
         out = {}
         for i, name in enumerate(self.device_names):
             out[name] = int((dev == i).sum()) * self.row_bytes
@@ -541,16 +906,52 @@ def _round_targets(weights: tuple[float, ...], n_pages: int) -> list[int]:
     return base
 
 
+def _spread_run_picks(n_cands: int, k: int, run_pages: int) -> np.ndarray:
+    """Indices (into a candidate list of length ``n_cands``) of ``k``
+    picks grouped into evenly spaced runs of up to ``run_pages``
+    consecutive candidates.
+
+    The movement-coalescing compromise: perfectly even per-page spreading
+    (stride n/k) keeps the interleave discipline but makes every moved
+    page its own mover descriptor; clustering the picks into short runs
+    whose *starts* stay evenly spread keeps the access interleave nearly
+    uniform while letting the actuator ship each run as one contiguous
+    batched descriptor."""
+    if k >= n_cands:
+        return np.arange(n_cands)
+    n_runs = max(1, -(-k // max(run_pages, 1)))
+    picked = np.zeros(n_cands, bool)
+    taken = 0
+    prev_end = 0
+    for j in range(n_runs):
+        want = (k - taken + (n_runs - j - 1)) // (n_runs - j)  # ceil spread
+        start = max((j * n_cands) // n_runs, prev_end)
+        end = min(start + want, n_cands)
+        picked[start:end] = True
+        taken += end - start
+        prev_end = end
+    if taken < k:  # dense move: fill from the unpicked complement
+        rest = np.nonzero(~picked)[0][: k - taken]
+        picked[rest] = True
+    return np.nonzero(picked)[0]
+
+
 def minimal_delta_weights(current: np.ndarray, weights: tuple[float, ...],
-                          n_devices: int) -> Optional[np.ndarray]:
+                          n_devices: int, *,
+                          run_pages: int = DEFAULT_RUN_PAGES
+                          ) -> Optional[np.ndarray]:
     """New page->device map hitting ``weights`` with the FEWEST moves.
 
     Returns ``None`` when the targets round to the current per-device
     counts (the no-op guarantee: callers must not churn page ids or
-    enqueue empty-delta mover work).  Surplus pages are released evenly
-    spread from their device and deficits filled round-robin, keeping the
-    interleave discipline (clustered pages would serialize one device on
-    strided access)."""
+    enqueue empty-delta mover work).  Surplus pages are released in
+    evenly spread *runs* of up to ``run_pages`` consecutive pages — each
+    run is a contiguous slab of its device and ships as one batched
+    mover descriptor — and the runs are dealt to deficit devices
+    round-robin, so each deficit device's new pages stay spread across
+    the address range (clustered pages would serialize one device on
+    strided access).  ``run_pages=1`` recovers the legacy page-at-a-time
+    even spreading exactly."""
     cur = np.asarray(current, np.int8)
     n = len(cur)
     targets = _round_targets(tuple(weights), n)
@@ -560,31 +961,39 @@ def minimal_delta_weights(current: np.ndarray, weights: tuple[float, ...],
     if all(int(counts[d]) == target_all[d] for d in range(n_devices)):
         return None
     out = cur.copy()
-    # Release surplus pages (evenly spread within each surplus device)...
-    pool: list[int] = []
+    # Release surplus pages as evenly spread runs within each device.  A
+    # run is contiguous in the device's CANDIDATE order — i.e. in its
+    # source locals when those are rank-ordered — which is exactly what
+    # the actuator can ship as one contiguous-slab descriptor.
+    runs_list: list[np.ndarray] = []
     for d in range(n_devices):
         surplus = int(counts[d]) - target_all[d]
         if surplus <= 0:
             continue
         cands = np.nonzero(cur == d)[0]
-        pick = cands[(np.arange(surplus) * len(cands)) // surplus]
-        pool.extend(int(p) for p in pick)
-    # ... and deal them to deficit devices, round-robin so each deficit
-    # device's new pages stay spread across the address range.
-    pool.sort()
-    deficits = [(d, target_all[d] - int(counts[d]))
+        picks = _spread_run_picks(len(cands), surplus, run_pages)
+        for start, length in contiguous_runs(picks):
+            runs_list.append(cands[picks[start: start + length]])
+    # Deal whole runs to deficit devices, round-robin, so each deficit
+    # device's new pages stay spread across the address range AND every
+    # run stays route-pure (one (src, dst) per run; split only when a
+    # deficit fills mid-run).
+    runs_list.sort(key=lambda a: int(a[0]))
+    deficits = [[d, target_all[d] - int(counts[d])]
                 for d in range(n_devices) if target_all[d] > int(counts[d])]
-    k = nxt = 0
-    while nxt < len(pool):
-        d, need = deficits[k % len(deficits)]
-        if need > 0:
-            out[pool[nxt]] = d
-            nxt += 1
-            deficits[k % len(deficits)] = (d, need - 1)
-        else:
-            deficits.pop(k % len(deficits))
-            continue
-        k += 1
+    k = 0
+    for run in runs_list:
+        offset = 0
+        while offset < len(run):
+            entry = deficits[k % len(deficits)]
+            if entry[1] <= 0:
+                deficits.pop(k % len(deficits))
+                continue
+            take = min(entry[1], len(run) - offset)
+            out[run[offset: offset + take]] = entry[0]
+            entry[1] -= take
+            offset += take
+            k += 1
     return out
 
 

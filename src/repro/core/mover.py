@@ -32,6 +32,7 @@ from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import perfmodel
 from repro.core.tiers import OpClass, TierSpec, TierTopology
@@ -76,9 +77,21 @@ class Completion:
 
 
 def _execute_copy(payload):
-    """Materialize a fresh copy on the current backend (the actual move)."""
-    out = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), payload)
-    jax.block_until_ready(out)
+    """Materialize a fresh copy on the current backend (the actual move).
+
+    Host (numpy) payloads copy with a plain memcpy — routing them
+    through XLA costs ~ms of dispatch per descriptor, which would put
+    the movement daemon back ON the critical path it exists to clear."""
+    def _copy(x):
+        if isinstance(x, np.ndarray):
+            return np.array(x)
+        return jnp.asarray(x).copy()
+
+    out = jax.tree_util.tree_map(_copy, payload)
+    jax.block_until_ready([
+        x for x in jax.tree_util.tree_leaves(out)
+        if not isinstance(x, np.ndarray)
+    ])
     return out
 
 
@@ -137,6 +150,12 @@ class BulkMover:
         # shutdown sentinels — work nobody drains, a silent wait_all hang.
         self._lifecycle = threading.Lock()
         self._closed = False
+        # Lifetime submission counters (bench_hotpaths/tests introspection):
+        # a run-coalesced actuator submits O(runs) descriptors for O(pages)
+        # of payload, and these two watermarks make that ratio observable
+        # without spelunking telemetry.
+        self.descriptors_submitted = 0
+        self.bytes_submitted = 0
         self._workers: list[threading.Thread] = []
         if asynchronous:
             for i in range(drain_workers):
@@ -250,11 +269,20 @@ class BulkMover:
     def submit(self, descs: Sequence[Descriptor]) -> list[Completion]:
         """Submit descriptors; sync mode returns completions immediately."""
         descs = list(descs)
+
+        def count_accepted():
+            # only ACCEPTED work bumps the observability counters — a
+            # rejected submit (after close) must not skew the exact
+            # billed-bytes assertions downstream
+            self.descriptors_submitted += len(descs)
+            self.bytes_submitted += sum(d.nbytes for d in descs)
+
         if not self.asynchronous:
             if self._closed:
                 raise RuntimeError("BulkMover.submit() after close()")
             if not descs:
                 return []
+            count_accepted()
             order = {id(d): i for i, d in enumerate(descs)}
             out = []
             for b in self._schedule(descs):
@@ -266,6 +294,7 @@ class BulkMover:
                 raise RuntimeError("BulkMover.submit() after close()")
             if not descs:
                 return []
+            count_accepted()
             with self._pending_lock:
                 self._pending += len(descs)
             for b in self._schedule(descs):

@@ -73,10 +73,27 @@ class ServingEngine:
         self.max_len = max_len
         self.topology = topology
         policy = policy or MemPolicy.membind("fast")
+        # With a Caption loop attached, size the KV slow pool for the
+        # walk's ceiling up front (capacity padding): every repartition
+        # the controller can request then fits the existing shapes, so
+        # the jitted decode step traces exactly once across all probe
+        # epochs instead of retracing on each actuation.
+        n_pages = max_len // min(page_t, max_len)
+        slow_headroom = (caption.headroom_pages(n_pages)
+                         if caption is not None else 0)
         self.cache = TieredKVCache.create(
-            cfg, max_batch, max_len, policy, page_t=page_t)
-        self._decode = jax.jit(
-            lambda p, c, t: tiered_decode_step(cfg, p, c, t))
+            cfg, max_batch, max_len, policy, page_t=page_t,
+            slow_headroom=slow_headroom)
+        # Trace accounting: the counter increments only when jit actually
+        # retraces (the wrapped Python fn re-executes), so benchmarks and
+        # tests can assert the walk stayed retrace-free.
+        self.decode_traces = 0
+
+        def _decode_traced(p, c, t):
+            self.decode_traces += 1
+            return tiered_decode_step(cfg, p, c, t)
+
+        self._decode = jax.jit(_decode_traced)
         self.slots: list[Optional[Request]] = [None] * max_batch
         # Latency-SLO slots (request policy lives here, not in the cache):
         # excluded from Caption repartitions while their request is active.

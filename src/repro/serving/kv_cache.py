@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.interleave import (_policy_device_map, minimal_delta_weights,
-                                   resolve_device_names, tier_page_map)
+                                   resolve_device_names, route_pure_runs)
 from repro.core.mover import LANE_BULK, LANE_LATENCY
 from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY
@@ -45,31 +45,48 @@ def _kv_layout_rows(assign: np.ndarray, page_t: int):
     The fast part is sized for ALL pages (the fast tier is the home tier)
     so pinning a slot fast or shifting the interleave never reallocates
     it — repartition and SLO admission only rewrite index maps and the
-    slow part, keeping the jitted decode step's shapes stable."""
+    slow part, keeping the jitted decode step's shapes stable.
+
+    Fully vectorized (argsort/cumsum over the whole B x P map — it runs
+    on every retile and SLO pin); equivalence with the per-slot
+    ``tier_page_map`` walk is asserted by tests/test_hotpaths.py."""
     assign = np.asarray(assign)
     B, P = assign.shape
     assign01 = np.minimum(assign, 1).astype(np.int8)
-    local = np.zeros((B, P), np.int32)
-    n_slow = np.zeros(B, np.int64)
-    for b in range(B):
-        _, loc, counters = tier_page_map(assign01[b])
-        local[b] = loc
-        n_slow[b] = counters[1]
+    is_slow = assign01.astype(bool)
+    # local = rank of the page within its tier, in page order (the same
+    # arrival-order discipline tier_page_map uses per slot)
+    fast_rank = np.cumsum(~is_slow, axis=1) - 1
+    slow_rank = np.cumsum(is_slow, axis=1) - 1
+    local = np.where(is_slow, slow_rank, fast_rank).astype(np.int32)
+    n_slow = is_slow.sum(axis=1).astype(np.int64)
     Tf = P * page_t
-    Ts = int(n_slow.max()) * page_t
-    pos_fast = np.full((B, Tf), _INT32_MAX, np.int32)
-    pos_slow = (np.full((B, Ts), _INT32_MAX, np.int32) if Ts
-                else np.zeros((B, 0), np.int32))
-    for b in range(B):
-        fpos: list[int] = []
-        spos: list[int] = []
-        for p in range(P):
-            (spos if assign01[b, p] else fpos).extend(
-                range(p * page_t, (p + 1) * page_t))
-        pos_fast[b, : len(fpos)] = fpos
-        if Ts and spos:
-            pos_slow[b, : len(spos)] = spos
-    return assign01, local, Tf, Ts, pos_fast, pos_slow
+    Ts = int(n_slow.max(initial=0)) * page_t
+    # global positions sorted by (tier, page): fast pages' spans first.
+    order = np.argsort(assign01, axis=1, kind="stable")
+    allpos = (order[:, :, None] * page_t
+              + np.arange(page_t)).reshape(B, Tf).astype(np.int32)
+    col = np.arange(Tf)
+    fast_len = (P - n_slow)[:, None] * page_t
+    pos_fast = np.where(col[None, :] < fast_len, allpos, _INT32_MAX)
+    if Ts:
+        cols = np.arange(Ts)
+        gidx = np.minimum(fast_len + cols[None, :], Tf - 1)
+        pos_slow = np.where(cols[None, :] < n_slow[:, None] * page_t,
+                            np.take_along_axis(allpos, gidx, axis=1),
+                            _INT32_MAX)
+    else:
+        pos_slow = np.zeros((B, 0), np.int32)
+    return (assign01, local, Tf, Ts,
+            pos_fast.astype(np.int32), pos_slow.astype(np.int32))
+
+
+def _pad_pos(pos: np.ndarray, T: int) -> np.ndarray:
+    """Pad a (B, t) position map to (B, T) with never-valid sentinels."""
+    if pos.shape[1] >= T:
+        return pos
+    pad = np.full((pos.shape[0], T - pos.shape[1]), _INT32_MAX, np.int32)
+    return np.concatenate([pos, pad], axis=1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -93,45 +110,70 @@ class TieredKVCache:
     page_t: int
     #: route labels per device ordinal (telemetry/mover tier names).
     device_names: tuple[str, ...] = ("fast", "slow")
+    #: slow-pool capacity padding, in pages per slot.  0 = the slow part
+    #: is sized exactly for the current worst slot (every retile that
+    #: changes that resizes it — the legacy layout); > 0 = the slow part
+    #: keeps ``max_slow + slow_headroom`` pages of capacity, so Caption
+    #: repartitions and SLO pins that fit never change the decode step's
+    #: shapes (zero retraces across probe epochs).
+    slow_headroom: int = 0
 
     def tree_flatten(self):
         children = (self.k_fast, self.v_fast, self.k_slow, self.v_slow,
                     self.lengths, self.page_tier, self.page_local,
                     self.pos_fast, self.pos_slow, self.page_device)
-        return children, (self.page_t, self.device_names)
+        return children, (self.page_t, self.device_names,
+                          self.slow_headroom)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, page_t=aux[0], device_names=aux[1])
+        return cls(*children, page_t=aux[0], device_names=aux[1],
+                   slow_headroom=aux[2])
+
+    # -- host-side map cache ----------------------------------------------------
+    def _host_dev(self) -> np.ndarray:
+        """Cached numpy page->device map: the Caption loop reads
+        ``slow_fraction``/``weights`` every epoch and must not re-sync
+        the device array each time."""
+        cached = self.__dict__.get("_host_cache")
+        if cached is None:
+            cached = np.asarray(self.page_device)
+            self.__dict__["_host_cache"] = cached
+        return cached
 
     # -- construction ---------------------------------------------------------
     @classmethod
     def create(cls, cfg: ArchConfig, batch: int, max_len: int,
-               policy: MemPolicy, *, page_t: int = 256, dtype=None
-               ) -> "TieredKVCache":
+               policy: MemPolicy, *, page_t: int = 256, dtype=None,
+               slow_headroom: int = 0) -> "TieredKVCache":
         dt = dtype or dtype_of(cfg.param_dtype)
         L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
         page_t = min(page_t, max_len)
         assert max_len % page_t == 0
         n_pages = max_len // page_t
+        slow_headroom = min(max(int(slow_headroom), 0), n_pages)
         dev_row, names = _policy_device_map(policy, n_pages)
         dev = np.broadcast_to(dev_row.astype(np.int8), (batch, n_pages))
         assign, page_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
             dev, page_t)
-        return cls(
+        Ts_cap = min(Ts + slow_headroom * page_t, n_pages * page_t)
+        out = cls(
             k_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
             v_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
-            k_slow=jnp.zeros((L, batch, max(Ts, 0), K, hd), dt),
-            v_slow=jnp.zeros((L, batch, max(Ts, 0), K, hd), dt),
+            k_slow=jnp.zeros((L, batch, max(Ts_cap, 0), K, hd), dt),
+            v_slow=jnp.zeros((L, batch, max(Ts_cap, 0), K, hd), dt),
             lengths=jnp.zeros((batch,), jnp.int32),
             page_tier=jnp.asarray(assign, jnp.int8),
             page_local=jnp.asarray(page_local, jnp.int32),
             pos_fast=jnp.asarray(pos_fast),
-            pos_slow=jnp.asarray(pos_slow),
+            pos_slow=jnp.asarray(_pad_pos(pos_slow, Ts_cap)),
             page_device=jnp.asarray(dev, jnp.int8),
             page_t=page_t,
             device_names=names,
+            slow_headroom=slow_headroom,
         )
+        out.__dict__["_host_cache"] = np.asarray(dev)
+        return out
 
     # -- addressing -------------------------------------------------------------
     def _route(self, pos: jax.Array):
@@ -146,7 +188,7 @@ class TieredKVCache:
         ``pinned_slots``) — the operating point the Caption actuation
         feedback must report.  Pin state lives with the engine (request
         SLO policy), not in this data structure."""
-        tiers = np.asarray(self.page_tier, np.float32)
+        tiers = np.minimum(self._host_dev(), 1).astype(np.float32)
         pinned = set(pinned_slots)
         unpinned = [b for b in range(tiers.shape[0]) if b not in pinned]
         if not unpinned:
@@ -156,7 +198,7 @@ class TieredKVCache:
     def weights(self, pinned_slots=()) -> tuple[float, ...]:
         """Per-slow-device page shares of the tunable slots (the Caption
         weight-vector operating point on an N-device topology)."""
-        dev = np.asarray(self.page_device)
+        dev = self._host_dev()
         pinned = set(pinned_slots)
         unpinned = [b for b in range(dev.shape[0]) if b not in pinned]
         n_slow = max(len(self.device_names) - 1, 1)
@@ -180,7 +222,7 @@ class TieredKVCache:
         item = self.k_fast.dtype.itemsize
         L = self.k_fast.shape[0]
         K, hd = self.k_fast.shape[3:]
-        tiers = np.asarray(self.page_tier)
+        tiers = np.minimum(self._host_dev(), 1)
         n_pages = tiers.shape[1]
         slow_pages = tiers.sum(axis=1)
         fast_rows = int(np.maximum((n_pages - slow_pages), 1).sum()) * self.page_t
@@ -198,7 +240,7 @@ class TieredKVCache:
         item = self.k_fast.dtype.itemsize
         L = self.k_fast.shape[0]
         K, hd = self.k_fast.shape[3:]
-        dev = np.asarray(self.page_device)
+        dev = self._host_dev()
         out = {}
         for i, name in enumerate(self.device_names):
             pages = (dev == i).sum(axis=1)
@@ -236,7 +278,7 @@ class TieredKVCache:
         the engine's job: it tracks the pinned-slot set (request policy)
         and passes it as ``pinned_slots`` — keeping SLO state out of this
         data structure keeps the jitted decode treedef stable."""
-        new_dev = np.asarray(self.page_device).copy()
+        new_dev = self._host_dev().copy()
         new_dev[i] = 0
         return self._retile(new_dev, lane=LANE_LATENCY, **kwargs)
 
@@ -258,7 +300,7 @@ class TieredKVCache:
         n_pages = self.page_device.shape[1]
         row, names = _policy_device_map(policy, n_pages)
         pinned = set(pinned_slots)
-        new_dev = np.asarray(self.page_device).copy()
+        new_dev = self._host_dev().copy()
         for b in range(new_dev.shape[0]):
             if b not in pinned:
                 new_dev[b] = row
@@ -279,7 +321,7 @@ class TieredKVCache:
         returned, no mover work enqueued)."""
         pinned = set(pinned_slots)
         n_devices = max(len(self.device_names), len(tuple(weights)) + 1)
-        new_dev = np.asarray(self.page_device).copy()
+        new_dev = self._host_dev().copy()
         changed = False
         for b in range(new_dev.shape[0]):
             if b in pinned:
@@ -306,7 +348,7 @@ class TieredKVCache:
                 policy_names: Optional[tuple] = None,
                 telemetry=GLOBAL_TELEMETRY, source: Optional[str] = None,
                 lane: int = LANE_BULK) -> "TieredKVCache":
-        old_dev = np.asarray(self.page_device)
+        old_dev = self._host_dev()
         if np.array_equal(new_dev, old_dev):
             return self
         pt = self.page_t
@@ -317,51 +359,88 @@ class TieredKVCache:
                                   slow_tier)
         new01, new_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
             new_dev, pt)
+        P = old_dev.shape[1]
+        # Capacity-held slow pool: with headroom, a retile that fits the
+        # existing capacity keeps the decode step's shapes (no retrace);
+        # growing past it re-pads by the headroom so the NEXT walk fits.
+        cap = self.k_slow.shape[2]
+        if self.slow_headroom > 0:
+            Ts_cap = cap if cap >= Ts else min(
+                Ts + self.slow_headroom * pt, P * pt)
+        else:
+            Ts_cap = Ts
         old_local = np.asarray(self.page_local)
         k_parts = (np.asarray(self.k_fast), np.asarray(self.k_slow))
         v_parts = (np.asarray(self.v_fast), np.asarray(self.v_slow))
 
         L, B = self.k_fast.shape[:2]
-        P = old_dev.shape[1]
         K, hd = self.k_fast.shape[3:]
         dt = self.k_fast.dtype
-        new_k = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
-        new_v = (np.zeros((L, B, Tf, K, hd), dt), np.zeros((L, B, Ts, K, hd), dt))
+        new_k = (np.zeros((L, B, Tf, K, hd), dt),
+                 np.zeros((L, B, Ts_cap, K, hd), dt))
+        new_v = (np.zeros((L, B, Tf, K, hd), dt),
+                 np.zeros((L, B, Ts_cap, K, hd), dt))
         page_kv_bytes = 2 * L * pt * K * hd * dt.itemsize  # one slot-page
         # Slots sharing a (old row, new row) pair — the whole batch-class
         # population after a repartition — copy as ONE batched slice per
-        # page instead of per-slot (locals are a function of the row, so
-        # equal rows imply equal layouts).
+        # tier combo instead of per-slot-per-page (locals are a function
+        # of the row, so equal rows imply equal layouts).
         groups: dict[bytes, list[int]] = {}
         for b in range(B):
             key = old_dev[b].tobytes() + new_dev[b].tobytes()
             groups.setdefault(key, []).append(b)
         descs = []
+        at = np.arange(pt)
+        L_idx = np.arange(L)
         for slots in groups.values():
             b0, sl = slots[0], np.asarray(slots)
-            for p in range(P):
-                d0, d1 = int(old_dev[b0, p]), int(new_dev[b0, p])
-                t0, t1 = min(d0, 1), min(d1, 1)
-                l0, l1 = old_local[b0, p], new_local[b0, p]
-                k_page = k_parts[t0][:, sl, l0 * pt:(l0 + 1) * pt]
-                v_page = v_parts[t0][:, sl, l0 * pt:(l0 + 1) * pt]
-                new_k[t1][:, sl, l1 * pt:(l1 + 1) * pt] = k_page
-                new_v[t1][:, sl, l1 * pt:(l1 + 1) * pt] = v_page
-                if d0 != d1:
-                    # Real device route — including slow->slow hops (the
-                    # paper's C2C class), which the storage tiers alone
-                    # cannot distinguish.
+            od, nd = old_dev[b0].astype(np.int64), new_dev[b0].astype(np.int64)
+            ot, nt = np.minimum(od, 1), np.minimum(nd, 1)
+            ol, nl = old_local[b0].astype(np.int64), new_local[b0].astype(np.int64)
+            # Vectorized data placement: one fancy-indexed copy per
+            # (old storage tier, new storage tier) combination.
+            for t0 in (0, 1):
+                for t1 in (0, 1):
+                    sel = np.nonzero((ot == t0) & (nt == t1))[0]
+                    if sel.size == 0:
+                        continue
+                    src_rows = (ol[sel][:, None] * pt + at).ravel()
+                    dst_rows = (nl[sel][:, None] * pt + at).ravel()
+                    new_k[t1][np.ix_(L_idx, sl, dst_rows)] = \
+                        k_parts[t0][np.ix_(L_idx, sl, src_rows)]
+                    new_v[t1][np.ix_(L_idx, sl, dst_rows)] = \
+                        v_parts[t0][np.ix_(L_idx, sl, src_rows)]
+            # Movement metering on real device routes — including
+            # slow->slow hops (the paper's C2C class), which the storage
+            # tiers alone cannot distinguish.  Moved pages coalesce into
+            # route-pure runs of consecutive source locals; each run is
+            # one contiguous slab of its source pool and ships as ONE
+            # batched descriptor (billed bytes identical to per-page).
+            moved = np.nonzero(od != nd)[0]
+            if moved.size:
+                order, starts, ends = route_pure_runs(
+                    od[moved], nd[moved], ol[moved])
+                mv = moved[order]
+                for s, e in zip(starts, ends):
+                    p0 = mv[s]
+                    d0, d1 = int(od[p0]), int(nd[p0])
+                    t0 = min(d0, 1)
+                    l0, run = int(ol[p0]), int(e - s)
                     src, dst = route[d0], route[d1]
                     if mover is not None:
                         from repro.core.mover import Descriptor
+                        k_slab = k_parts[t0][:, sl,
+                                             l0 * pt:(l0 + run) * pt]
+                        v_slab = v_parts[t0][:, sl,
+                                             l0 * pt:(l0 + run) * pt]
                         descs.append(Descriptor(
-                            src, dst, (jnp.asarray(k_page),
-                                       jnp.asarray(v_page)),
+                            src, dst, (jnp.asarray(k_slab),
+                                       jnp.asarray(v_slab)),
                             lane=lane, source=source))
                     elif telemetry is not None:
                         telemetry.record_move(
-                            src, dst, page_kv_bytes * len(slots), 0.0,
-                            source=source)
+                            src, dst, page_kv_bytes * len(slots) * run,
+                            0.0, source=source)
         if mover is not None:
             mover.submit(descs)  # one submission: descriptors batch (§6)
             if mover.asynchronous:
@@ -371,16 +450,19 @@ class TieredKVCache:
         # pinned slot's real device to a placeholder), without the legacy
         # fast/slow route overrides.
         device_names = self._route_names(n_devices, policy_names, None, None)
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self,
             k_fast=jnp.asarray(new_k[0]), v_fast=jnp.asarray(new_v[0]),
             k_slow=jnp.asarray(new_k[1]), v_slow=jnp.asarray(new_v[1]),
             page_tier=jnp.asarray(new01, jnp.int8),
             page_local=jnp.asarray(new_local, jnp.int32),
-            pos_fast=jnp.asarray(pos_fast), pos_slow=jnp.asarray(pos_slow),
+            pos_fast=jnp.asarray(pos_fast),
+            pos_slow=jnp.asarray(_pad_pos(pos_slow, Ts_cap)),
             page_device=jnp.asarray(new_dev, jnp.int8),
             device_names=device_names,
         )
+        out.__dict__["_host_cache"] = np.asarray(new_dev)
+        return out
 
     def partitions(self, layer: int):
         """[(k, v, valid)] per tier for decode attention (post-append)."""
