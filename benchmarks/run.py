@@ -19,7 +19,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_latency, fig3_seq_bw, fig4_dsa, fig5_random,
-                            fig6_redis, fig8_dlrm, fig10_dsb, fig11_caption)
+                            fig6_redis, fig8_dlrm, fig10_dsb, fig11_caption,
+                            fig_elastic)
     figs = {
         "fig2": fig2_latency.run,
         "fig3": fig3_seq_bw.run,
@@ -29,6 +30,7 @@ def main() -> None:
         "fig8": fig8_dlrm.run,
         "fig10": fig10_dsb.run,
         "fig11": fig11_caption.run,
+        "elastic": fig_elastic.run,
     }
     print("name,us_per_call,derived")
     failures = 0

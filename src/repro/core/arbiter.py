@@ -140,6 +140,34 @@ class CaptionArbiter:
     def controller(self, name: str) -> CaptionController:
         return self._entries[name].controller
 
+    # -- elastic topology ----------------------------------------------------
+    def remove_device(self, name: str) -> None:
+        """Hot-remove slow device ``name`` from the budget pool: drop its
+        per-device ceiling, forget its billed demand (a dead device's
+        EWMA must not keep gating survivors' growth), and recompute the
+        grants over the shrunken topology."""
+        self.topology = self.topology.remove_device(name)
+        if self.cfg.device_budgets and name in self.cfg.device_budgets:
+            budgets = {k: v for k, v in self.cfg.device_budgets.items()
+                       if k != name}
+            self.cfg = dataclasses.replace(self.cfg,
+                                           device_budgets=budgets or None)
+        for e in self._entries.values():
+            e.demand_dev.pop(name, None)
+        self._recompute_grants()
+
+    def add_device(self, spec) -> None:
+        """Hot-add a slow device (TierSpec or name): extend the per-device
+        budgets with its nt-store bandwidth (the natural ceiling) and
+        recompute grants."""
+        self.topology = self.topology.add_device(spec)
+        added = self.topology.slows[-1]
+        if self.cfg.device_budgets is not None:
+            budgets = dict(self.cfg.device_budgets)
+            budgets.setdefault(added.name, added.nt_store_bw)
+            self.cfg = dataclasses.replace(self.cfg, device_budgets=budgets)
+        self._recompute_grants()
+
     @property
     def buffers(self) -> tuple[str, ...]:
         return tuple(self._entries)

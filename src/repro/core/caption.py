@@ -367,6 +367,52 @@ class CaptionController:
             raise ValueError(f"need {self.n_slow} weights")
         self.weights = [float(w) for w in weights]
 
+    # -- elastic topology (hot-remove / hot-add) -----------------------------
+    def remove_device(self, name: str) -> None:
+        """Hot-remove slow device ``name`` from the walk.
+
+        The weight simplex loses the coordinate, the total slow share is
+        preserved, and the surviving devices are re-seeded bandwidth-
+        proportionally (the Fig. 10 best-static-ratio prior, same as a
+        cold start on the shrunken topology).  The walk re-opens: the old
+        operating point measured a pool that no longer exists."""
+        names = self.topology.slow_names
+        if name not in names:
+            raise KeyError(name)
+        if len(names) <= 1:
+            raise ValueError("cannot remove the last slow device")
+        i = names.index(name)
+        total = self.fraction
+        self.topology = self.topology.remove_device(name)
+        self.n_slow = self.topology.n_slow
+        self.min_weights = tuple(w for j, w in enumerate(self.min_weights)
+                                 if j != i)
+        bw = self.topology.bandwidth_weights()
+        self.weights = [max(total * b, mw)
+                        for b, mw in zip(bw, self.min_weights)]
+        over = sum(self.weights)
+        if over > self.cfg.max_fraction > 0:
+            self.weights = [w * self.cfg.max_fraction / over
+                            for w in self.weights]
+        self._reopen()
+
+    def add_device(self, spec, *, initial_weight: float = 0.0) -> None:
+        """Hot-add a slow device (a TierSpec or a name the topology can
+        promote from ``extra`` / the registry).
+
+        The survivors keep their converged shares — re-probing starts
+        from the converged point, not a cold restart — and the newcomer
+        enters at ``initial_weight`` with the walk re-opened on ITS
+        coordinate, so the next probe climbs the new device first."""
+        self.topology = self.topology.add_device(spec)
+        self.n_slow = self.topology.n_slow
+        self.min_weights = self.min_weights + (0.0,)
+        self.weights = list(self.weights) + [
+            min(max(float(initial_weight), 0.0), self.cfg.max_fraction)]
+        self._reopen()
+        self._coord = self.n_slow - 1
+        self._coord_start = self.weights[self._coord]
+
     def observe(self, metrics: EpochMetrics) -> Decision:
         """Feed one epoch; returns the (possibly updated) target weights."""
         a = self.cfg.ewma_alpha
@@ -406,6 +452,7 @@ class CaptionController:
 
     def _reopen(self) -> None:
         """Reset the walk state for a fresh convergence run."""
+        self.phase = Phase.WARMUP
         self._step = self.cfg.step
         self._restart_step = self.cfg.step
         self._dir = -1.0 if self.latency_bound else 1.0

@@ -848,6 +848,31 @@ class InterleavedTensor:
         return self._reassign(new_dev, names, mover=mover,
                               telemetry=telemetry, source=source, lane=lane)
 
+    def drain_device(self, device, **kwargs) -> "InterleavedTensor":
+        """Move every page off one slow device (elastic hot-remove drain).
+
+        ``device`` is a slow-device ordinal (>= 1) or its name.  The
+        departing share is redistributed over the surviving slow devices
+        proportionally to their current shares (the fast tier absorbs it
+        when no survivor holds pages), and the move rides the normal
+        minimal-delta repartition path: run-coalesced LANE_BULK
+        descriptors on real (dead device -> survivor) routes.  Keyword
+        arguments forward to :meth:`repartition_weights`."""
+        if isinstance(device, str):
+            if device not in self.device_names:
+                raise KeyError(device)
+            i = self.device_names.index(device)
+        else:
+            i = int(device)
+        if not 1 <= i < self.n_devices:
+            raise KeyError(device)
+        cur = list(self.weights())
+        departing, cur[i - 1] = cur[i - 1], 0.0
+        rest = sum(cur)
+        if departing > 0 and rest > 0:
+            cur = [w + departing * w / rest for w in cur]
+        return self.repartition_weights(tuple(cur), **kwargs)
+
     def to_array(self) -> jax.Array:
         """Materialize the logical array (tests / checkpointing)."""
         idx = jnp.arange(self.rows)

@@ -168,6 +168,17 @@ class BulkMover:
     def _tier(self, name: str) -> TierSpec:
         return self.topology.by_name(name)
 
+    def update_topology(self, topology: TierTopology) -> None:
+        """Swap the topology after an elastic add/remove.
+
+        A removed device should stay ledger-visible in the new topology
+        (``TierTopology.remove_device(keep_visible=True)``) so queued
+        descriptors naming it keep costing and billing; a hot-added
+        device must be present before the first descriptor routes to it.
+        Per-device writer semaphores/watermarks are keyed by name and
+        created lazily, so they carry across the swap untouched."""
+        self.topology = topology
+
     def modeled_cost(self, descs: Sequence[Descriptor]) -> float:
         """Modeled seconds for a descriptor set (DSA model): descriptors
         grouped per route; batching amortizes submission overhead."""

@@ -20,7 +20,69 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from typing import Optional
+
 from repro.core.tiers import OpClass, TierSpec
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection degradations (emucxl-style): per-device bandwidth/latency
+# multipliers applied at every model entry point, so a degraded device is
+# slower everywhere at once — mover execution timing (bulk_move_cost), the
+# serving engine's modeled step seconds (stream_bandwidth), and the closed-
+# loop benchmark throughput models (random_block_bandwidth).  The slowdown
+# therefore shows up in telemetry-billed bandwidths, which is exactly the
+# EWMA drift signal that re-opens a converged Caption walk.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Degradation:
+    """Multipliers applied to one device: bw scales down, latency up."""
+
+    bw_scale: float = 1.0
+    latency_scale: float = 1.0
+
+
+_DEGRADATIONS: dict[str, Degradation] = {}
+
+
+def set_degradation(name: str, *, bw_scale: float = 1.0,
+                    latency_scale: float = 1.0) -> None:
+    """Install (or clear, at 1.0/1.0) a degradation for device ``name``."""
+    if bw_scale <= 0 or latency_scale <= 0:
+        raise ValueError("degradation scales must be > 0")
+    if bw_scale == 1.0 and latency_scale == 1.0:
+        _DEGRADATIONS.pop(name, None)
+    else:
+        _DEGRADATIONS[name] = Degradation(bw_scale, latency_scale)
+
+
+def clear_degradations(name: Optional[str] = None) -> None:
+    if name is None:
+        _DEGRADATIONS.clear()
+    else:
+        _DEGRADATIONS.pop(name, None)
+
+
+def degradation(name: str) -> Optional[Degradation]:
+    return _DEGRADATIONS.get(name)
+
+
+def _eff(tier: TierSpec) -> TierSpec:
+    """The spec as currently seen: injected degradations applied.
+
+    Only the public entry points call this (internal helpers take the
+    already-degraded spec), so multipliers never compound."""
+    d = _DEGRADATIONS.get(tier.name)
+    if d is None:
+        return tier
+    return dataclasses.replace(
+        tier,
+        load_bw=tier.load_bw * d.bw_scale,
+        store_bw=tier.store_bw * d.bw_scale,
+        nt_store_bw=tier.nt_store_bw * d.bw_scale,
+        load_latency_ns=tier.load_latency_ns * d.latency_scale,
+        chase_latency_ns=tier.chase_latency_ns * d.latency_scale,
+    )
 
 
 def stream_bandwidth(tier: TierSpec, op: OpClass, n_streams: int) -> float:
@@ -30,6 +92,10 @@ def stream_bandwidth(tier: TierSpec, op: OpClass, n_streams: int) -> float:
     26 threads @ 221 GB/s; CXL load peaks near 8 threads then drops past
     12; CXL nt-store peaks at 2 threads then collapses.
     """
+    return _stream_bandwidth(_eff(tier), op, n_streams)
+
+
+def _stream_bandwidth(tier: TierSpec, op: OpClass, n_streams: int) -> float:
     if n_streams <= 0:
         return 0.0
     peak = tier.peak_bw(op)
@@ -58,7 +124,8 @@ def random_block_bandwidth(
     Each random block pays one dependent-access latency, then streams at
     the sequential rate; efficiency = stream_time / (latency + stream_time).
     """
-    seq = stream_bandwidth(tier, op, n_streams)
+    tier = _eff(tier)
+    seq = _stream_bandwidth(tier, op, n_streams)
     if seq <= 0.0:
         return 0.0
     per_stream = seq / n_streams
@@ -113,9 +180,10 @@ def bulk_move_cost(
     store path, and any intervening link (paper Fig. 4a: C2C is the
     slowest route because both sides cross the same link).
     """
-    read_bw = stream_bandwidth(src, OpClass.LOAD, n_streams)
-    write_bw = stream_bandwidth(dst, op, n_streams)
-    if src is dst and src.link_bw is not None:
+    src, dst = _eff(src), _eff(dst)
+    read_bw = _stream_bandwidth(src, OpClass.LOAD, n_streams)
+    write_bw = _stream_bandwidth(dst, op, n_streams)
+    if src.name == dst.name and src.link_bw is not None:
         # C2C: one far device serves both sides — controller + link are
         # shared, so read and write serialize (paper Fig. 4a: C2C slowest).
         route = min(1.0 / (1.0 / read_bw + 1.0 / write_bw), src.link_bw / 2)
@@ -145,7 +213,7 @@ def bulk_move_cost(
 
 def chase_seconds(tier: TierSpec, n_hops: int) -> float:
     """Dependent pointer-chase time (Fig. 2 ptr-chase)."""
-    return n_hops * tier.chase_latency_ns * 1e-9
+    return n_hops * _eff(tier).chase_latency_ns * 1e-9
 
 
 def effective_latency_amortized(
@@ -156,5 +224,5 @@ def effective_latency_amortized(
     The paper's DSB finding (F8): ms-level layered computation amortizes
     the slow tier's extra latency. Returns the visible slowdown factor.
     """
-    extra = tier.chase_latency_ns
+    extra = _eff(tier).chase_latency_ns
     return 1.0 + extra / max(compute_ns_between_accesses + extra, 1e-9)

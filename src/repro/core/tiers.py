@@ -315,6 +315,47 @@ class TierTopology:
         total = sum(bws)
         return tuple(b / total for b in bws)
 
+    # -- elastic hot-plug / hot-remove ---------------------------------------
+    def remove_device(self, name: str, *,
+                      keep_visible: bool = True) -> "TierTopology":
+        """Hot-remove a slow device: a new topology without ``name`` as a
+        placement target.
+
+        With ``keep_visible`` (the default) the departing spec moves to
+        ``extra`` — still ledger-visible so in-flight drain descriptors
+        and telemetry routes naming it keep resolving via ``by_name`` —
+        but ``slows``/``devices``/``bandwidth_weights`` no longer include
+        it, so every weight simplex rebuilt from this topology excludes
+        the dead device.  Removing the fast tier is not a thing."""
+        if name == self.fast.name:
+            raise ValueError("cannot remove the fast tier")
+        spec = next((t for t in self.slows if t.name == name), None)
+        if spec is None:
+            raise KeyError(name)
+        slows = tuple(t for t in self.slows if t.name != name)
+        extra = self.extra + ((spec,) if keep_visible else ())
+        return TierTopology(fast=self.fast, slows=slows, extra=extra)
+
+    def add_device(self, spec) -> "TierTopology":
+        """Hot-add a slow device: a new topology with ``spec`` appended to
+        the placement targets.
+
+        ``spec`` is a :class:`TierSpec` or a name — a name is promoted
+        back from ``extra`` (the re-add of a previously removed device)
+        or looked up in :data:`DEVICE_REGISTRY`."""
+        if isinstance(spec, str):
+            match = next((t for t in self.extra if t.name == spec), None)
+            if match is None:
+                match = DEVICE_REGISTRY.get(spec)
+            if match is None:
+                raise KeyError(spec)
+            spec = match
+        if spec.name == self.fast.name or spec.name in self.slow_names:
+            raise ValueError(f"device {spec.name!r} already in topology")
+        extra = tuple(t for t in self.extra if t.name != spec.name)
+        return TierTopology(fast=self.fast, slows=self.slows + (spec,),
+                            extra=extra)
+
 
 def paper_topology() -> TierTopology:
     """The paper's testbed: local DDR5 fast tier + CXL slow tier (+ remote)."""

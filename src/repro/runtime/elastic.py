@@ -1,4 +1,4 @@
-"""Elastic re-meshing: re-plan mesh + tier placement when capacity changes.
+"""Elastic re-meshing + device fault injection.
 
 When a pod loses hosts (or gains them back), the runtime must (1) choose
 a new (data, model) factorization of the surviving chips, (2) re-run the
@@ -6,14 +6,139 @@ bandwidth-aware placement planner against the *shrunken* fast-tier
 budget — exactly the paper's scenario of demand exceeding DRAM, where
 weighted interleaving to the slow tier absorbs the loss — and (3) emit a
 resharding plan mapping old checkpoint shards onto the new mesh.
+
+``FaultInjector`` is the emucxl-style harness for the device-level
+analogue: per-device bandwidth/latency degradation (installed into the
+perfmodel, so the mover's execution timing, the serving engine's modeled
+step seconds, and every benchmark throughput model slow down together —
+and the billed-bandwidth drift re-opens converged Caption walks) and
+mid-run device kills, detected through missed heartbeats and recovered
+through the elastic drain path (``ServingEngine.remove_device`` /
+``CaptionController.remove_device``).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Sequence
 
+from repro.core import perfmodel
 from repro.core.planner import BufferReq, Plan, plan as plan_placement
 from repro.core.tiers import TierTopology
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+
+@dataclasses.dataclass(frozen=True)
+class InjectionEvent:
+    """One scheduled fault: fires when the run reaches ``step``."""
+
+    step: int
+    action: str  # "degrade" | "restore" | "kill" | "revive"
+    device: str
+    bw_scale: float = 1.0
+    latency_scale: float = 1.0
+
+
+class FaultInjector:
+    """emucxl-style per-device fault harness.
+
+    ``degrade``/``restore`` install per-device bandwidth/latency
+    multipliers into the perfmodel (every model entry point sees them, so
+    the degradation is visible end to end, telemetry included); ``kill``/
+    ``revive`` mark a device dead so its heartbeats stop — the attached
+    :class:`HeartbeatMonitor` then raises ``WorkerFailure`` on the next
+    ``check()``, and the caller routes recovery through the elastic
+    drain path.  Faults can fire immediately or on a ``schedule`` keyed
+    by run step (``apply(step)`` each step).
+    """
+
+    def __init__(self, monitor: Optional[HeartbeatMonitor] = None):
+        self.monitor = monitor
+        self.dead: set[str] = set()
+        self.degradations: dict[str, tuple[float, float]] = {}
+        self.log: list[tuple[int, str, str]] = []
+        self._schedule: list[InjectionEvent] = []
+        self._step = 0
+
+    # -- immediate faults ----------------------------------------------------
+    def degrade(self, device: str, *, bw_scale: float = 1.0,
+                latency_scale: float = 1.0) -> None:
+        perfmodel.set_degradation(device, bw_scale=bw_scale,
+                                  latency_scale=latency_scale)
+        self.degradations[device] = (bw_scale, latency_scale)
+        self.log.append((self._step, "degrade",
+                         f"{device} bw x{bw_scale:g} lat x{latency_scale:g}"))
+
+    def restore(self, device: str) -> None:
+        perfmodel.clear_degradations(device)
+        self.degradations.pop(device, None)
+        self.log.append((self._step, "restore", device))
+
+    def kill(self, device: str) -> None:
+        """The device disappears mid-run: beats stop, so the monitor's
+        next ``check()`` raises WorkerFailure naming it."""
+        self.dead.add(device)
+        self.log.append((self._step, "kill", device))
+
+    def revive(self, device: str) -> None:
+        self.dead.discard(device)
+        if self.monitor is not None:
+            self.monitor.forgive(device)
+        self.log.append((self._step, "revive", device))
+
+    def alive(self, device: str) -> bool:
+        return device not in self.dead
+
+    def beat_alive(self, devices: Sequence[str],
+                   now: Optional[float] = None) -> None:
+        """One health-poll round: every live device beats; dead ones go
+        silent and age out past the monitor's timeout."""
+        if self.monitor is None:
+            return
+        for d in devices:
+            if d not in self.dead:
+                self.monitor.beat(d, now)
+
+    # -- scheduled faults ----------------------------------------------------
+    def schedule(self, step: int, action: str, device: str, *,
+                 bw_scale: float = 1.0,
+                 latency_scale: float = 1.0) -> "FaultInjector":
+        self._schedule.append(InjectionEvent(step, action, device,
+                                             bw_scale, latency_scale))
+        return self
+
+    def apply(self, step: int) -> list[InjectionEvent]:
+        """Fire every event scheduled for ``step``; returns them."""
+        self._step = step
+        fired = [e for e in self._schedule if e.step == step]
+        for e in fired:
+            if e.action == "degrade":
+                self.degrade(e.device, bw_scale=e.bw_scale,
+                             latency_scale=e.latency_scale)
+            elif e.action == "restore":
+                self.restore(e.device)
+            elif e.action == "kill":
+                self.kill(e.device)
+            elif e.action == "revive":
+                self.revive(e.device)
+            else:
+                raise ValueError(f"unknown injection action {e.action!r}")
+        self._schedule = [e for e in self._schedule if e.step != step]
+        return fired
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Lift every degradation this injector installed (the perfmodel
+        registry is process-global; tests must not leak faults)."""
+        for device in list(self.degradations):
+            perfmodel.clear_degradations(device)
+        self.degradations.clear()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,21 @@ import threading
 import time
 from typing import Callable, Optional
 
+import jax
+import numpy as np
+
 from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _snapshot(tree):
+    """Deep-copy the mutable leaves of a state pytree.
+
+    numpy buffers are the replay hazard: a step function that updates
+    them in place corrupts any alias kept around for later replay.  jax
+    arrays and Python scalars are immutable and pass through."""
+    def copy_leaf(x):
+        return np.array(x, copy=True) if isinstance(x, np.ndarray) else x
+    return jax.tree_util.tree_map(copy_leaf, tree)
 
 
 class WorkerFailure(RuntimeError):
@@ -50,6 +64,21 @@ class HeartbeatMonitor:
         if dead:
             raise WorkerFailure(f"lost heartbeat from {dead}")
 
+    def remove(self, worker: str) -> bool:
+        """Deregister a worker (elastic shrink / permanent removal).
+
+        Without this, one missed timeout poisons the monitor forever:
+        ``check()`` re-raises for the same dead worker on every later
+        call, so recovery could never be acknowledged.  Returns whether
+        the worker was registered."""
+        with self._lock:
+            return self._beats.pop(worker, None) is not None
+
+    def forgive(self, worker: str, now: Optional[float] = None) -> None:
+        """Recovery reset: the worker is healthy again (elastic re-add);
+        restart its timeout window from ``now``."""
+        self.beat(worker, now)
+
 
 class ResilientLoop:
     def __init__(
@@ -73,7 +102,12 @@ class ResilientLoop:
         failure_injector: Optional[Callable[[int], None]] = None,
     ) -> dict:
         """Run to ``n_steps``, surviving WorkerFailure via restore+replay."""
-        step = int(state.pop("step"))
+        state = dict(state)  # never mutate the caller's dict
+        step = start_step = int(state.pop("step"))
+        # Snapshot the pristine initial state: a no-checkpoint failure
+        # replays from scratch, and "scratch" must be bit-exact — not the
+        # post-failure state a partially-executed step may have mutated.
+        initial = _snapshot(state)
         while step < n_steps:
             try:
                 if failure_injector is not None:
@@ -88,7 +122,10 @@ class ResilientLoop:
                     raise
                 latest = self.ckpt.latest_step()
                 if latest is None:
-                    step = 0  # replay from scratch
+                    # replay from scratch: restore the snapshot (and keep a
+                    # fresh copy in case this replay fails too)
+                    state = _snapshot(initial)
+                    step = start_step
                     continue
                 restored_step, state, _ = self.ckpt.restore(state)
                 step = restored_step

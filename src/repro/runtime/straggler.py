@@ -40,21 +40,46 @@ class StragglerMitigator:
 
     def run(self, fn: Callable[[], object]) -> object:
         """Execute fn; if it exceeds the deadline, re-dispatch and take
-        whichever finishes first (results are idempotent)."""
+        whichever finishes first WITHOUT raising (results are idempotent,
+        so a failed original racing a healthy backup must not lose)."""
         self.stats.dispatched += 1
         deadline = max(self.min_timeout,
                        self.threshold * (self.stats.median_estimate or 1e9))
-        t0 = time.perf_counter()
-        fut = self._pool.submit(fn)
+
+        def timed():
+            # Per-dispatch timing: the EWMA must see the winner's OWN
+            # latency.  Wall clock from the first dispatch folds the whole
+            # stall (deadline wait + backup runtime) into the estimate,
+            # inflating the deadline after every straggle.
+            t0 = time.perf_counter()
+            return fn(), time.perf_counter() - t0
+
+        fut = self._pool.submit(timed)
         try:
-            result = fut.result(timeout=deadline)
+            result, dt = fut.result(timeout=deadline)
         except cf.TimeoutError:
             self.stats.redispatched += 1
-            backup = self._pool.submit(fn)
-            done, _ = cf.wait({fut, backup}, return_when=cf.FIRST_COMPLETED)
-            result = next(iter(done)).result()
-        self._observe(time.perf_counter() - t0)
+            backup = self._pool.submit(timed)
+            result, dt = self._first_success((fut, backup))
+        self._observe(dt)
         return result
+
+    @staticmethod
+    def _first_success(futures):
+        """First completed future that did not raise; only when every
+        dispatch failed does the first exception propagate."""
+        pending = set(futures)
+        first_exc = None
+        while pending:
+            done, pending = cf.wait(pending,
+                                    return_when=cf.FIRST_COMPLETED)
+            for f in done:
+                exc = f.exception()
+                if exc is None:
+                    return f.result()
+                if first_exc is None:
+                    first_exc = exc
+        raise first_exc
 
     def close(self):
         self._pool.shutdown(wait=False, cancel_futures=True)

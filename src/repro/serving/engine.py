@@ -145,6 +145,107 @@ class ServingEngine:
         self._epoch_window = (EpochWindow(telemetry)
                               if caption is not None else None)
 
+    # -- elastic topology (hot-remove / hot-add) -------------------------------
+    def _active_slow_names(self) -> tuple[str, ...]:
+        """Slow devices that are CURRENT placement targets.  The engine's
+        ``_device_names`` is the union of every device ever seen (route
+        labels never churn mid-run); the controller's weight vector spans
+        only the live topology, so the two map by name."""
+        if self.caption is not None and self.caption.topology.slows:
+            return self.caption.topology.slow_names
+        if self.topology is not None and self.topology.slows:
+            return self.topology.slow_names
+        return tuple(self._device_names[1:])
+
+    def _expand_weights(self, weights) -> tuple[float, ...]:
+        """Controller weight vector (live slow devices) -> cache device
+        ordinals, zeros for devices that are no longer placement targets."""
+        by_name = dict(zip(self._active_slow_names(), weights))
+        n = len(self._device_names) - 1
+        if not any(name in by_name for name in self._device_names[1:]):
+            # Disjoint namespaces (a controller built on generic labels):
+            # fall back to the positional alignment of the pre-elastic era.
+            w = tuple(float(x) for x in weights)[:n]
+            return w + (0.0,) * (n - len(w))
+        return tuple(by_name.get(name, 0.0)
+                     for name in self._device_names[1:])
+
+    def _project_weights(self, kv_w) -> tuple[float, ...]:
+        """Cache per-ordinal weights -> the controller's live-device order."""
+        active = self._active_slow_names()
+        by_name = dict(zip(self._device_names[1:], kv_w))
+        if not any(name in by_name for name in active):
+            w = tuple(float(x) for x in kv_w)[:len(active)]
+            return w + (0.0,) * (len(active) - len(w))
+        return tuple(by_name.get(name, 0.0) for name in active)
+
+    def remove_device(self, name: str, *, monitor=None) -> None:
+        """Elastic hot-remove of slow device ``name``.
+
+        Drains the departing device's KV pages through the mover's bulk
+        lane (run-coalesced descriptors billed on real dead->survivor
+        routes) without touching in-flight requests, then rebuilds the
+        control plane: topology and mover drop the device (it stays
+        ledger-visible for queued descriptors), the arbiter forgets its
+        budget and billed demand, and the Caption walk re-seeds on the
+        survivors' bandwidth weights.  ``monitor`` (a HeartbeatMonitor)
+        is deregistered so one dead device cannot poison every later
+        health check."""
+        if self.topology is None or name not in self.topology.slow_names:
+            raise KeyError(name)
+        new_topo = self.topology.remove_device(name)
+        # Drain target: survivors keep the departing population's total
+        # slow share, split bandwidth-proportionally — the same re-seed
+        # the controller applies, so drain and walk agree on the new
+        # operating point.
+        if name in self.cache.device_names:
+            total = sum(self.cache.weights(self.pinned_slots))
+            by_name = dict(zip(new_topo.slow_names,
+                               (total * b
+                                for b in new_topo.bandwidth_weights())))
+            target = tuple(by_name.get(n, 0.0)
+                           for n in self._device_names[1:])
+            self.cache = self.cache.drain_device(
+                name, self.pinned_slots, weights=target, mover=self.mover,
+                telemetry=self.telemetry, policy_names=self._device_names,
+                source=self.buffer_name)
+        self.topology = new_topo
+        if self.mover is not None and name in self.mover.topology.slow_names:
+            self.mover.update_topology(
+                self.mover.topology.remove_device(name))
+        if (self.arbiter is not None
+                and name in self.arbiter.topology.slow_names):
+            self.arbiter.remove_device(name)
+        if (self.caption is not None
+                and name in self.caption.topology.slow_names):
+            self.caption.remove_device(name)
+            self.caption.actuated_weights(self._project_weights(
+                self.cache.weights(self.pinned_slots)))
+        if monitor is not None:
+            monitor.remove(name)
+
+    def add_device(self, spec) -> None:
+        """Elastic hot-add: the device (TierSpec or name) joins the
+        placement targets at weight zero and the Caption walk re-opens on
+        its coordinate — pages climb onto it through the normal actuation
+        path, so addition itself moves nothing."""
+        if self.topology is None:
+            raise ValueError("add_device needs a tier topology")
+        self.topology = self.topology.add_device(spec)
+        added = self.topology.slows[-1]
+        if added.name not in self._device_names:
+            self._device_names = self._device_names + (added.name,)
+        if (self.mover is not None
+                and added.name not in self.mover.topology.slow_names):
+            self.mover.update_topology(
+                self.mover.topology.add_device(added))
+        if (self.arbiter is not None
+                and added.name not in self.arbiter.topology.slow_names):
+            self.arbiter.add_device(added)
+        if (self.caption is not None
+                and added.name not in self.caption.topology.slow_names):
+            self.caption.add_device(added)
+
     # -- request management ---------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                slo: str = "batch") -> int:
@@ -332,9 +433,16 @@ class ServingEngine:
         self._epoch_modeled_s = 0.0
         if abs(decision.fraction - before) > 1e-9 or (
                 multi and decision.changed):
-            if multi and len(decision.weights) > 1:
+            active = self._active_slow_names()
+            if multi and (len(decision.weights) > 1
+                          or (active and active[0] in self._device_names)):
+                # Expand the controller's live-device weight vector onto
+                # the cache's (union) device ordinals by name — after an
+                # elastic remove the two differ, and a removed device
+                # must actuate to exactly zero.
                 self.cache = self.cache.repartition_weights(
-                    decision.weights, pinned_slots=self.pinned_slots,
+                    self._expand_weights(decision.weights),
+                    pinned_slots=self.pinned_slots,
                     mover=self.mover, telemetry=self.telemetry,
                     policy_names=self._device_names, source=src)
             else:
@@ -350,12 +458,8 @@ class ServingEngine:
             # walk, so the decision stands until slots unpin.
             if n_unpinned > 0:
                 if multi and self.caption.n_slow > 1:
-                    kv_w = self.cache.weights(self.pinned_slots)
-                    if len(kv_w) == self.caption.n_slow:
-                        self.caption.actuated_weights(kv_w)
-                    else:
-                        self.caption.actuated(
-                            self.cache.slow_fraction(self.pinned_slots))
+                    self.caption.actuated_weights(self._project_weights(
+                        self.cache.weights(self.pinned_slots)))
                 else:
                     self.caption.actuated(
                         self.cache.slow_fraction(self.pinned_slots))

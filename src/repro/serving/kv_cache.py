@@ -335,6 +335,39 @@ class TieredKVCache:
             return self
         return self._retile(new_dev, **kwargs)
 
+    def drain_device(self, device, pinned_slots=(), *, weights=None,
+                     **kwargs) -> "TieredKVCache":
+        """Move every unpinned slot's pages off one slow device (elastic
+        hot-remove drain).
+
+        ``device`` is a slow-device ordinal (>= 1) or its name.  The
+        departing share goes to the surviving slow devices proportionally
+        to their current shares by default, or to an explicit per-device
+        ``weights`` target (which must zero the departing device).  The
+        move rides the normal minimal-delta repartition: run-coalesced
+        LANE_BULK descriptors on real (dead device -> survivor) routes,
+        so in-flight requests keep decoding — only page ownership moves.
+        Pinned (latency-SLO) slots are already all-fast and untouched."""
+        if isinstance(device, str):
+            if device not in self.device_names:
+                raise KeyError(device)
+            i = self.device_names.index(device)
+        else:
+            i = int(device)
+        if not 1 <= i < len(self.device_names):
+            raise KeyError(device)
+        if weights is None:
+            cur = list(self.weights(pinned_slots))
+            departing, cur[i - 1] = cur[i - 1], 0.0
+            rest = sum(cur)
+            if departing > 0 and rest > 0:
+                cur = [w + departing * w / rest for w in cur]
+            weights = tuple(cur)
+        elif weights[i - 1] > 0:
+            raise ValueError(
+                f"drain target keeps weight on {self.device_names[i]!r}")
+        return self.repartition_weights(weights, pinned_slots, **kwargs)
+
     def _route_names(self, n_devices: int,
                      policy_names: Optional[tuple] = None,
                      fast_tier: Optional[str] = None,

@@ -1,0 +1,492 @@
+"""Elastic tier topology + fault injection tests (degraded-mode coverage).
+
+Covers the hot-remove/hot-add path end to end (topology -> controller ->
+arbiter -> KV cache -> serving engine), the perfmodel degradation
+registry the FaultInjector drives, and the three resilience-runtime
+fixes: ResilientLoop's scratch replay, HeartbeatMonitor deregistration,
+and StragglerMitigator's failed-original / EWMA handling."""
+import itertools
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import perfmodel
+from repro.core.arbiter import CaptionArbiter
+from repro.core.caption import CaptionConfig, CaptionController, EpochMetrics
+from repro.core.interleave import InterleavedTensor
+from repro.core.mover import BulkMover
+from repro.core.policy import MemPolicy
+from repro.core.telemetry import Telemetry
+from repro.core.tiers import (CXL_A, CXL_B, CXL_C, DDR5_L8, OpClass,
+                              TierTopology, paper_three_device_topology)
+from repro.runtime.elastic import FaultInjector
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, ResilientLoop,
+                                           WorkerFailure)
+from repro.runtime.straggler import StragglerMitigator
+
+
+# -- ResilientLoop: scratch replay must be bit-exact ---------------------------
+def test_resilient_loop_scratch_replay_bit_exact(tmp_path):
+    """A failure BEFORE the first checkpoint replays from the pristine
+    initial state — an in-place-mutating step function must not leak the
+    partial run's mutations into the replay."""
+    def step_fn(state, step):
+        state["x"] += step + 1.0  # in-place numpy update: the hazard
+        return state
+
+    def run(sub, injector=None):
+        loop = ResilientLoop(
+            Checkpointer(str(tmp_path / sub), asynchronous=False),
+            checkpoint_every=100)  # > n_steps: no checkpoint to restore
+        return loop.run({"x": np.zeros(4), "step": 0}, step_fn, 6,
+                        failure_injector=injector)
+
+    clean = run("clean")
+    fired = []
+
+    def injector(step):
+        if step == 3 and not fired:
+            fired.append(step)
+            raise WorkerFailure("node loss before any checkpoint")
+
+    out = run("faulty", injector)
+    assert fired == [3]
+    np.testing.assert_array_equal(out["x"], clean["x"])
+    assert out["step"] == clean["step"] == 6
+
+
+def test_resilient_loop_leaves_callers_dict_alone(tmp_path):
+    """run() must not pop keys out of (or otherwise mutate) the caller's
+    state dict — resubmitting the same dict is the natural retry idiom."""
+    state = {"x": np.float64(1.0), "step": 0}
+    ResilientLoop(Checkpointer(str(tmp_path), asynchronous=False),
+                  checkpoint_every=5).run(
+        state, lambda s, i: {"x": s["x"] + 1.0}, 4)
+    assert state == {"x": 1.0, "step": 0}
+
+
+# -- HeartbeatMonitor: removal + recovery reset --------------------------------
+def test_heartbeat_remove_unpoisons_monitor():
+    """One dead worker must be removable; otherwise check() re-raises for
+    it forever and recovery can never be acknowledged."""
+    mon = HeartbeatMonitor(timeout=1.0)
+    mon.beat("cxl-c", now=0.0)
+    mon.beat("cxl-a", now=4.9)
+    with pytest.raises(WorkerFailure):
+        mon.check(now=5.0)
+    assert mon.remove("cxl-c") is True
+    mon.check(now=5.0)  # recovery acknowledged: no re-raise
+    assert mon.remove("cxl-c") is False  # already deregistered
+
+
+def test_heartbeat_forgive_restarts_window():
+    mon = HeartbeatMonitor(timeout=1.0)
+    mon.beat("w0", now=0.0)
+    assert mon.dead_workers(now=2.0) == ["w0"]
+    mon.forgive("w0", now=2.0)
+    mon.check(now=2.5)
+    assert mon.dead_workers(now=3.5) == ["w0"]  # the clock restarted
+
+
+# -- StragglerMitigator: redispatch result + EWMA ------------------------------
+def test_straggler_failed_original_does_not_shadow_backup():
+    """When the stalled original dies and the backup succeeds, the backup's
+    result must win — an arbitrary first-completed pick re-raises the
+    original's exception over a perfectly good answer."""
+    strag = StragglerMitigator(threshold=3.0, min_timeout=0.05)
+    for _ in range(5):
+        assert strag.run(lambda: 42) == 42  # prime the EWMA fast
+    calls = itertools.count()
+
+    def flaky():
+        if next(calls) == 0:  # the original: stalls, then dies
+            time.sleep(0.15)
+            raise RuntimeError("original dispatch died mid-stall")
+        time.sleep(0.3)  # the backup: slower, but healthy
+        return 7
+
+    assert strag.run(flaky) == 7
+    assert strag.stats.redispatched == 1
+
+    # Only when EVERY dispatch fails does the exception propagate.
+    def doomed():
+        time.sleep(0.25)
+        raise ValueError("both dispatches fail")
+
+    with pytest.raises(ValueError):
+        strag.run(doomed)
+    strag.close()
+
+
+def test_straggler_ewma_tracks_winner_not_stall():
+    """The latency estimate must reflect the winning dispatch's own
+    runtime; folding the stall's wall clock (deadline wait + backup) into
+    the EWMA inflates every later deadline."""
+    strag = StragglerMitigator(threshold=3.0, alpha=1.0, min_timeout=0.05)
+    strag.run(lambda: time.sleep(0.01) or 1)
+    once = itertools.count()
+
+    def stall_then_fast():
+        if next(once) == 0:
+            time.sleep(0.4)
+        return 2
+
+    assert strag.run(stall_then_fast) == 2
+    assert strag.stats.redispatched == 1
+    # alpha=1: the estimate IS the winner's own latency (near-instant
+    # backup), not the >= 0.05 s stall wall clock.
+    assert strag.stats.median_estimate < 0.04
+    strag.close()
+
+
+# -- topology: hot-remove / hot-add --------------------------------------------
+def test_topology_remove_add_roundtrip():
+    topo = paper_three_device_topology()
+    shrunk = topo.remove_device("cxl-c")
+    assert shrunk.slow_names == ("cxl-a", "cxl-b")
+    # the departed device stays ledger-visible for queued descriptors
+    assert [t.name for t in shrunk.extra] == ["cxl-c"]
+    assert sum(shrunk.bandwidth_weights()) == pytest.approx(1.0)
+    back = shrunk.add_device("cxl-c")  # promoted back from ``extra``
+    assert back.slow_names == topo.slow_names
+    assert back.extra == ()
+    gone = topo.remove_device("cxl-b", keep_visible=False)
+    assert all(t.name != "cxl-b" for t in gone.extra)
+    # a registry name also resolves (fresh device, never seen before)
+    wide = topo.add_device("ddr5-r1")
+    assert wide.slow_names[-1] == "ddr5-r1"
+
+
+def test_topology_remove_add_errors():
+    topo = paper_three_device_topology()
+    with pytest.raises(ValueError):
+        topo.remove_device(topo.fast.name)
+    with pytest.raises(KeyError):
+        topo.remove_device("nope")
+    with pytest.raises(ValueError):
+        topo.add_device(CXL_A)  # already a placement target
+    with pytest.raises(KeyError):
+        topo.add_device("nope")
+
+
+# -- perfmodel degradation registry --------------------------------------------
+def test_perfmodel_degradation_scales_entry_points():
+    base_bw = perfmodel.stream_bandwidth(CXL_A, OpClass.LOAD, 8)
+    base_rnd = perfmodel.random_block_bandwidth(CXL_A, OpClass.LOAD, 64, 4)
+    base_lat = perfmodel.chase_seconds(CXL_A, 1000)
+    other = perfmodel.stream_bandwidth(CXL_B, OpClass.LOAD, 8)
+    try:
+        perfmodel.set_degradation("cxl-a", bw_scale=0.5, latency_scale=2.0)
+        assert perfmodel.stream_bandwidth(CXL_A, OpClass.LOAD, 8) == \
+            pytest.approx(base_bw * 0.5)
+        assert perfmodel.random_block_bandwidth(
+            CXL_A, OpClass.LOAD, 64, 4) < base_rnd
+        assert perfmodel.chase_seconds(CXL_A, 1000) == \
+            pytest.approx(base_lat * 2.0)
+        # absolute multipliers, not compounding: re-setting is idempotent
+        perfmodel.set_degradation("cxl-a", bw_scale=0.5, latency_scale=2.0)
+        assert perfmodel.stream_bandwidth(CXL_A, OpClass.LOAD, 8) == \
+            pytest.approx(base_bw * 0.5)
+        # untouched devices see nothing
+        assert perfmodel.stream_bandwidth(CXL_B, OpClass.LOAD, 8) == other
+        # same-device transfers stay in the C2C class under degradation
+        # (the paper's slowest route: both sides share one controller)
+        same = perfmodel.bulk_move_cost(CXL_A, CXL_A, 1 << 20)
+        cross = perfmodel.bulk_move_cost(CXL_A, CXL_B, 1 << 20)
+        assert same.seconds > cross.seconds
+        # unity multipliers clear the entry
+        perfmodel.set_degradation("cxl-a", bw_scale=1.0, latency_scale=1.0)
+        assert perfmodel.degradation("cxl-a") is None
+    finally:
+        perfmodel.clear_degradations()
+    assert perfmodel.stream_bandwidth(CXL_A, OpClass.LOAD, 8) == base_bw
+    with pytest.raises(ValueError):
+        perfmodel.set_degradation("cxl-a", bw_scale=0.0)
+
+
+# -- FaultInjector -------------------------------------------------------------
+def test_fault_injector_kill_and_revive_via_heartbeats():
+    mon = HeartbeatMonitor(timeout=1.0)
+    inj = FaultInjector(mon)
+    devs = ("cxl-a", "cxl-b", "cxl-c")
+    inj.beat_alive(devs, now=0.0)
+    mon.check(now=0.5)
+    inj.kill("cxl-c")
+    inj.beat_alive(devs, now=2.0)  # the dead device goes silent
+    with pytest.raises(WorkerFailure) as ei:
+        mon.check(now=2.0)
+    assert "cxl-c" in str(ei.value)
+    mon.remove("cxl-c")  # the elastic shrink path deregisters it
+    mon.check(now=2.5)
+    inj.revive("cxl-c")  # re-add: forgiven, beats resume
+    inj.beat_alive(devs, now=3.0)
+    mon.check(now=3.5)
+    assert [a for _, a, _ in inj.log] == ["kill", "revive"]
+
+
+def test_fault_injector_schedule_and_context_cleanup():
+    base = perfmodel.stream_bandwidth(CXL_B, OpClass.LOAD, 4)
+    with FaultInjector() as inj:
+        inj.schedule(3, "degrade", "cxl-b", bw_scale=0.25) \
+           .schedule(5, "restore", "cxl-b")
+        assert inj.apply(0) == []
+        assert [e.action for e in inj.apply(3)] == ["degrade"]
+        assert perfmodel.stream_bandwidth(CXL_B, OpClass.LOAD, 4) == \
+            pytest.approx(base * 0.25)
+        assert inj.apply(3) == []  # events fire once
+        inj.apply(5)
+        assert perfmodel.stream_bandwidth(CXL_B, OpClass.LOAD, 4) == base
+        inj.degrade("cxl-b", bw_scale=0.5)  # left dangling on purpose
+    # context exit lifts every degradation this injector installed
+    assert perfmodel.stream_bandwidth(CXL_B, OpClass.LOAD, 4) == base
+
+
+# -- InterleavedTensor: drain conservation -------------------------------------
+def test_interleaved_drain_conserves_pages_and_bits(key):
+    topo = paper_three_device_topology()
+    names = (topo.fast.name,) + topo.slow_names
+    t = InterleavedTensor.from_array(
+        jax.random.normal(key, (64, 4)),
+        MemPolicy.weighted(names, (5, 1, 1, 1)), page_rows=4)
+    before = np.asarray(t.to_array())
+    counts = t.valid_page_counts()
+    assert counts[3] > 0  # the departing device actually holds pages
+    tel = Telemetry()
+    with BulkMover(topo, asynchronous=False, telemetry=tel) as mover:
+        drained = t.drain_device("cxl-c", mover=mover, telemetry=tel)
+    assert drained.weights()[2] == 0.0
+    assert drained.valid_page_counts()[3] == 0
+    # page conservation: nothing lost, nothing invented
+    assert sum(drained.valid_page_counts()) == sum(counts)
+    np.testing.assert_array_equal(np.asarray(drained.to_array()), before)
+    # the drain billed real dead->survivor routes, byte-for-byte
+    moved = sum(tel.route("cxl-c", d).bytes_moved
+                for d in ("cxl-a", "cxl-b", topo.fast.name))
+    assert moved == counts[3] * 4 * 4 * before.dtype.itemsize
+    with pytest.raises(KeyError):
+        t.drain_device("nope")
+
+
+# -- CaptionController: elastic walk -------------------------------------------
+def _converge(ctl, tput_fn, epochs=256):
+    for _ in range(epochs):
+        ctl.observe(EpochMetrics(throughput=tput_fn(ctl.weights)))
+        if ctl.converged:
+            break
+    return ctl
+
+
+def test_caption_remove_reseeds_and_reopens():
+    topo = paper_three_device_topology()
+    ctl = CaptionController(topo, CaptionConfig(probe_epochs=1),
+                            initial_weights=(0.1, 0.2, 0.3))
+    _converge(ctl, lambda w: 100.0)  # flat landscape: fast convergence
+    assert ctl.converged
+    total = ctl.fraction
+    ctl.remove_device("cxl-b")
+    assert ctl.topology.slow_names == ("cxl-a", "cxl-c")
+    assert ctl.n_slow == len(ctl.weights) == 2
+    # total slow share preserved, re-seeded bandwidth-proportionally
+    assert sum(ctl.weights) == pytest.approx(total)
+    bw = ctl.topology.bandwidth_weights()
+    assert list(ctl.weights) == pytest.approx([total * b for b in bw])
+    assert not ctl.converged  # the walk re-opened on the survivors
+    _converge(ctl, lambda w: 100.0)
+    assert ctl.converged  # ... and re-converges on the shrunken simplex
+    with pytest.raises(KeyError):
+        ctl.remove_device("nope")
+    ctl.remove_device("cxl-a")
+    with pytest.raises(ValueError):
+        ctl.remove_device("cxl-c")  # never remove the last slow device
+
+
+def test_caption_add_probes_new_coordinate_first():
+    topo = TierTopology(fast=DDR5_L8, slows=(CXL_A, CXL_B))
+    ctl = CaptionController(topo, CaptionConfig(probe_epochs=1),
+                            initial_weights=(0.2, 0.1))
+    # peaked objective: the walk holds an interior optimum (total ~0.3),
+    # leaving simplex headroom for the newcomer to climb into
+    _converge(ctl, lambda w: 100.0 - abs(sum(w) - 0.3) * 100.0)
+    held = tuple(ctl.weights)
+    ctl.add_device(CXL_C)
+    assert ctl.topology.slow_names == ("cxl-a", "cxl-b", "cxl-c")
+    # survivors keep their converged point; the newcomer enters at zero
+    assert tuple(ctl.weights) == held + (0.0,)
+    assert ctl.active_slow_device == "cxl-c"
+    assert not ctl.converged
+    d = ctl.observe(EpochMetrics(throughput=100.0))
+    assert d.weights[2] > 0.0  # the next probe climbs the new coordinate
+
+
+def test_degradation_drift_reopens_converged_walk():
+    """A bandwidth fault the injector installs shows up in the slow-route
+    counters; the EWMA drift detector must re-open a converged walk."""
+    topo = TierTopology(fast=DDR5_L8, slows=(CXL_A, CXL_B))
+    ctl = CaptionController(
+        topo, CaptionConfig(probe_epochs=1, drift_threshold=0.3))
+    _converge(ctl, lambda w: 100.0)
+    assert ctl.converged
+
+    def slow_bw():
+        return sum(perfmodel.stream_bandwidth(d, OpClass.LOAD, 4)
+                   for d in topo.slows)
+
+    base = slow_bw()
+    for _ in range(3):  # establish the drift reference at the hold point
+        d = ctl.observe(EpochMetrics(throughput=100.0, slow_bw=base))
+        assert ctl.converged
+    with FaultInjector() as inj:
+        inj.degrade("cxl-a", bw_scale=0.2)
+        d = ctl.observe(EpochMetrics(throughput=60.0, slow_bw=slow_bw()))
+    assert "drift" in d.reason
+    assert not ctl.converged
+
+
+# -- CaptionArbiter: elastic budgets -------------------------------------------
+def test_arbiter_elastic_budgets():
+    topo = paper_three_device_topology()
+    arb = CaptionArbiter(topo)  # defaults to per-device nt-store budgets
+    assert set(arb.cfg.device_budgets) == {"cxl-a", "cxl-b", "cxl-c"}
+    arb.register("kv", CaptionController(topo, CaptionConfig(probe_epochs=1)))
+    # a dead device's billed demand must not keep gating the survivors
+    arb._entries["kv"].demand_dev.update({"cxl-a": 1e9, "cxl-c": 2e9})
+    arb.remove_device("cxl-c")
+    assert arb.topology.slow_names == ("cxl-a", "cxl-b")
+    assert "cxl-c" not in (arb.cfg.device_budgets or {})
+    assert "cxl-c" not in arb._entries["kv"].demand_dev
+    arb.add_device("cxl-c")
+    assert arb.topology.slow_names == ("cxl-a", "cxl-b", "cxl-c")
+    assert arb.cfg.device_budgets["cxl-c"] == pytest.approx(CXL_C.nt_store_bw)
+
+
+# -- ServingEngine: kill -> drain -> recover -> re-add -------------------------
+def _tiny_engine(key, topo, tel, mover=None, caption=None):
+    from repro.models import registry
+    from repro.serving.engine import ServingEngine
+    arch = registry.get("internvl2-2b").tiny()
+    params = arch.module.init(arch.cfg, key)
+    names = (topo.fast.name,) + topo.slow_names
+    return ServingEngine(
+        arch.cfg, params, max_batch=2, max_len=32,
+        policy=MemPolicy.weighted(names, (5, 1, 1, 1)), topology=topo,
+        page_t=4, caption=caption, mover=mover, telemetry=tel)
+
+
+def test_engine_drain_keeps_latency_slot_fast(key):
+    """Hot-removing a device mid-run: the latency-SLO slot stays all-fast,
+    the dead device empties, billed drain bytes equal its page population,
+    and every request still completes (zero drops, zero timeouts)."""
+    topo = paper_three_device_topology()
+    tel = Telemetry()
+    with BulkMover(topo, asynchronous=False, telemetry=tel) as mover:
+        eng = _tiny_engine(key, topo, tel, mover=mover)
+        eng.submit([5, 6, 7], max_new_tokens=10, slo="latency")
+        eng.submit([5, 6, 7], max_new_tokens=10)
+        for _ in range(3):
+            eng.step()
+        assert eng.pinned_slots == {0}
+        dev = np.asarray(eng.cache.page_device)
+        assert (dev[0] == 0).all()  # SLO slot pinned fast
+        dead_pages = int((dev[1] == 3).sum())
+        assert dead_pages > 0
+        item = eng.cache.k_fast.dtype.itemsize
+        L = eng.cache.k_fast.shape[0]
+        K, hd = eng.cache.k_fast.shape[3:]
+        page_kv_bytes = 2 * L * eng.cache.page_t * K * hd * item
+        # route totals include the SLO pin's earlier migration: the drain
+        # audit below is the DELTA billed from the dead device
+        routes = ("cxl-a", "cxl-b", topo.fast.name)
+        pre = {d: tel.route("cxl-c", d).bytes_moved for d in routes}
+
+        eng.remove_device("cxl-c")
+        dev = np.asarray(eng.cache.page_device)
+        assert (dev[0] == 0).all()      # the drain never touched the pin
+        assert not (dev == 3).any()     # the dead device is empty
+        assert dev.shape == (2, 8)      # page population conserved
+        billed = sum(tel.route("cxl-c", d).bytes_moved - pre[d]
+                     for d in routes)
+        assert billed == dead_pages * page_kv_bytes
+        assert eng.topology.slow_names == ("cxl-a", "cxl-b")
+        assert mover.topology.slow_names == ("cxl-a", "cxl-b")
+        with pytest.raises(KeyError):
+            eng.remove_device("nope")
+
+        done = eng.run_until_drained()
+        assert sorted(r.rid for r in done) == [0, 1]
+        assert all(len(r.generated) == 10 for r in done)
+
+        eng.add_device("cxl-c")  # hot re-add restores the placement target
+        assert eng.topology.slow_names == ("cxl-a", "cxl-b", "cxl-c")
+        assert eng._device_names == (topo.fast.name,) + topo.slow_names
+
+
+def test_engine_kill_drain_recover_same_tokens(key):
+    """Full degraded-mode path: a FaultInjector kill silences a device's
+    heartbeats, the monitor flags it, recovery drains it through the
+    elastic path, the controller re-seeds on the survivors, and the
+    generated tokens are identical to a run with no kill at all."""
+    topo = paper_three_device_topology()
+
+    def run(kill: bool):
+        tel = Telemetry()
+        mon = HeartbeatMonitor(timeout=1.5)
+        ctl = CaptionController(
+            topo, CaptionConfig(epoch_steps=2, probe_epochs=1))
+        with BulkMover(topo, asynchronous=False, telemetry=tel) as mover, \
+                FaultInjector(mon) as inj:
+            eng = _tiny_engine(key, topo, tel, mover=mover, caption=ctl)
+            for _ in range(3):
+                eng.submit([5, 6, 7], max_new_tokens=8)
+            steps, recovered = 0, []
+            while eng.queue or any(eng.slots):
+                steps += 1
+                now = float(steps)
+                eng.step()
+                inj.beat_alive(topo.slow_names, now=now)
+                if kill and steps == 4:
+                    inj.kill("cxl-c")
+                try:
+                    mon.check(now=now)
+                except WorkerFailure:
+                    for name in mon.dead_workers(now=now):
+                        eng.remove_device(name, monitor=mon)
+                        recovered.append(name)
+            mon.check(now=float(steps))  # the monitor is not poisoned
+            if kill:
+                inj.revive("cxl-c")
+                eng.add_device("cxl-c")
+            return (eng, recovered,
+                    sorted((r.rid, tuple(r.generated)) for r in eng.done))
+
+    eng_kill, recovered, toks_kill = run(kill=True)
+    _, none_recovered, toks_clean = run(kill=False)
+    assert recovered == ["cxl-c"] and none_recovered == []
+    assert toks_kill == toks_clean  # zero dropped requests, exact tokens
+    assert len(toks_kill) == 3
+    # the control plane healed: controller and engine span 3 devices again
+    assert eng_kill.caption.topology.slow_names == topo.slow_names
+    assert eng_kill.caption.active_slow_device == "cxl-c"
+    assert eng_kill.topology.slow_names == topo.slow_names
+
+
+def test_kv_cache_drain_rejects_bad_targets(key):
+    from repro.models import registry
+    from repro.serving.kv_cache import TieredKVCache
+    arch = registry.get("internvl2-2b").tiny()
+    topo = paper_three_device_topology()
+    names = (topo.fast.name,) + topo.slow_names
+    cache = TieredKVCache.create(
+        arch.cfg, 2, 32, MemPolicy.weighted(names, (5, 1, 1, 1)), page_t=4)
+    with pytest.raises(ValueError):
+        cache.drain_device("cxl-b", weights=(0.2, 0.2, 0.0),
+                           telemetry=Telemetry())
+    with pytest.raises(KeyError):
+        cache.drain_device("nope", telemetry=Telemetry())
+    with pytest.raises(KeyError):
+        cache.drain_device(0, telemetry=Telemetry())  # fast is not drainable
+    drained = cache.drain_device("cxl-b", telemetry=Telemetry())
+    assert drained.weights()[1] == 0.0
+    assert sum(drained.weights()) == pytest.approx(sum(cache.weights()))
