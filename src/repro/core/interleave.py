@@ -31,10 +31,23 @@ Hot paths (the Caption loop's actuation and access costs, ISSUE 5):
   per device.  Traced (jit) calls keep the masked N-pass formulation,
   whose shapes are static.
 
-On the CPU dry-run backend every shard is a plain device array and the
-tier split is accounting (ledger + telemetry + perfmodel); on a TPU
-runtime the slow shards carry a ``pinned_host`` sharding (backend
-``memory_kind``) or are staged by the BulkMover (backend ``staged``).
+Memory backends (ISSUE 7 — ``backend=`` on :meth:`from_array`):
+
+* ``modeled`` — every shard is a plain device array; the tier split is
+  accounting (ledger + telemetry + perfmodel).  The CPU default.
+* ``staged`` — same allocation, but actuation payloads stay device-side
+  jax slabs so the mover's double-buffered Pallas ``stream_copy``
+  executor moves them (HBM -> VMEM staging -> HBM, overlapped DMAs).
+* ``memory_kind`` — slow shards physically live in ``pinned_host``
+  memory via JAX memory-kind shardings; fast stays in ``device``.
+  Requires a runtime exposing pinned-host memory (TPU/GPU); on CPU it
+  falls back to ``modeled`` (``resolve_backend`` / ``"auto"``).
+
+Donation (``donate=`` on the writers/repartitioners): when the caller
+provably drops the parent tensor, the stable-path update runs through a
+jitted ``donate_argnums`` scatter that reuses the receiving shard's
+buffer in place — the last full-shard copy-on-write in the probe-epoch
+loop goes away (see :mod:`repro.core.donation` for the contract).
 """
 from __future__ import annotations
 
@@ -46,9 +59,51 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.donation import FULL_SHARD_COPIES, donated_update
 from repro.core.ledger import TierLedger
 from repro.core.policy import MemPolicy, largest_remainder_split
 from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
+
+#: shard memory backends (see module docstring).
+BACKENDS = ("modeled", "staged", "memory_kind")
+
+
+def supports_memory_kinds() -> bool:
+    """True when the runtime exposes a ``pinned_host`` memory space
+    (TPU/GPU runtimes); plain CPU only has ``unpinned_host``."""
+    try:
+        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
+    except Exception:
+        return False
+    return "pinned_host" in kinds
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve a requested backend to one this runtime can honour.
+
+    ``auto`` and ``memory_kind`` degrade to ``modeled`` when the runtime
+    has no pinned-host memory space (the CPU-only fallback the README
+    backend matrix documents); ``modeled``/``staged`` pass through."""
+    if backend in ("auto", "memory_kind"):
+        return "memory_kind" if supports_memory_kinds() else "modeled"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of "
+                         f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+def _place_part(part: jax.Array, ordinal: int, backend: str) -> jax.Array:
+    """Pin a shard to its memory kind: ``device`` for the fast tier,
+    ``pinned_host`` for slow devices (``memory_kind`` backend only)."""
+    if backend != "memory_kind":
+        return part
+    try:
+        dev = next(iter(part.devices()))
+    except Exception:
+        dev = jax.devices()[0]
+    kind = "device" if ordinal == 0 else "pinned_host"
+    sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
+    return jax.device_put(part, sharding)
 
 #: default movement-run length (pages) the minimal-move planner clusters
 #: its picks into: one mover Descriptor ships one run, so a Δ-page shift
@@ -223,19 +278,25 @@ class InterleavedTensor:
     #: > 0 = shape-stable shards (repartitions that fit never reallocate,
     #: so jitted consumers never retrace across Caption probe epochs).
     headroom: int = 0
+    #: shard memory backend (see module docstring): ``modeled`` (plain
+    #: buffers, accounted tiers), ``staged`` (device-side actuation
+    #: payloads through the Pallas migration kernel), or ``memory_kind``
+    #: (physical ``pinned_host`` slow shards; TPU/GPU runtimes).
+    backend: str = "modeled"
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
         children = (tuple(self.parts), self.page_device, self.page_local)
-        aux = (self.page_rows, self.rows, self.device_names, self.headroom)
+        aux = (self.page_rows, self.rows, self.device_names, self.headroom,
+               self.backend)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         parts, page_device, page_local = children
-        page_rows, rows, device_names, headroom = aux
+        page_rows, rows, device_names, headroom, backend = aux
         return cls(tuple(parts), page_device, page_local, page_rows, rows,
-                   device_names, headroom)
+                   device_names, headroom, backend)
 
     # -- host-side map cache --------------------------------------------------
     def _host_map(self) -> tuple[np.ndarray, np.ndarray]:
@@ -304,9 +365,11 @@ class InterleavedTensor:
         page_rows: int = 256,
         *,
         headroom: int = 0,
+        backend: str = "modeled",
         ledger: Optional[TierLedger] = None,
         name: str = "interleaved",
     ) -> "InterleavedTensor":
+        backend = resolve_backend(backend)
         rows = array.shape[0]
         n_pages = max(1, math.ceil(rows / page_rows))
         assign, names = _policy_device_map(policy, n_pages)
@@ -328,9 +391,11 @@ class InterleavedTensor:
             return got
 
         parts = tuple(
-            take_pages(np.nonzero(dev == i)[0],
-                       counts[i] + max(int(headroom), 0))
-            .reshape((-1,) + feature)
+            _place_part(
+                take_pages(np.nonzero(dev == i)[0],
+                           counts[i] + max(int(headroom), 0))
+                .reshape((-1,) + feature),
+                i, backend)
             for i in range(len(names)))
         out = cls(
             parts=parts,
@@ -340,6 +405,7 @@ class InterleavedTensor:
             rows=rows,
             device_names=names,
             headroom=max(int(headroom), 0),
+            backend=backend,
         )
         out._with_map(dev, page_local)
         if ledger is not None:
@@ -466,10 +532,11 @@ class InterleavedTensor:
             out[mask] = view[rows]
         return jnp.asarray(out).reshape(idx.shape + feat)
 
-    def _scatter(self, idx: jax.Array, values: jax.Array, op: str
-                 ) -> "InterleavedTensor":
+    def _scatter(self, idx: jax.Array, values: jax.Array, op: str,
+                 donate: bool = False) -> "InterleavedTensor":
         if _is_concrete(idx, values, self.page_device, *self.parts):
-            return self._scatter_bucketed(np.asarray(idx), values, op)
+            return self._scatter_bucketed(np.asarray(idx), values, op,
+                                          donate=donate)
         return self._scatter_masked(idx, values, op)
 
     @staticmethod
@@ -496,12 +563,23 @@ class InterleavedTensor:
                          else ref.add(values, mode="drop"))
         return dataclasses.replace(self, parts=tuple(parts))
 
-    def _scatter_bucketed(self, idx: np.ndarray, values: jax.Array, op: str
-                          ) -> "InterleavedTensor":
+    def _donate_sharding(self, i: int):
+        """out_sharding pin for donated updates (memory_kind shards only)."""
+        if self.backend != "memory_kind":
+            return None
+        return self.parts[i].sharding
+
+    def _scatter_bucketed(self, idx: np.ndarray, values: jax.Array, op: str,
+                          donate: bool = False) -> "InterleavedTensor":
         # Same rationale as the bucketed gather: numpy fancy assignment
         # per owning shard, no XLA recompiles on changing index shapes.
+        # With ``donate`` the per-shard update is the jitted donated
+        # scatter instead — the shard buffer is patched in place, no
+        # full copy-on-write (caller drops the parent; see
+        # repro.core.donation for the contract).
         feat = self.parts[0].shape[1:]
-        if op == "add" and not self._np_number(self.parts[0].dtype):
+        if (op == "add" and not donate
+                and not self._np_number(self.parts[0].dtype)):
             return self._scatter_masked(jnp.asarray(idx), values, op)
         flat = np.asarray(idx).ravel()
         vals = np.asarray(values).reshape((flat.size,) + feat)
@@ -514,9 +592,25 @@ class InterleavedTensor:
             mask = dev == i
             if not mask.any():
                 continue  # shard untouched: no scatter pass at all
-            new_part = self._part_host(i).copy()  # one writable copy
             rows = local[mask]
-            keep = rows < new_part.shape[0]
+            keep = rows < part.shape[0]
+            if donate:
+                # Release live zero-copy host views of the receiving
+                # buffer first: any external reference blocks XLA input/
+                # output aliasing and donation silently degrades to a
+                # full copy (repro.core.donation VIEW HAZARD).
+                mirrors[i] = None
+                cache = self.__dict__.get("_parts_host")
+                if cache is not None:
+                    cache[i] = None
+                new_jax = donated_update(
+                    part, rows[keep], vals[mask][keep], op,
+                    out_sharding=self._donate_sharding(i))
+                parts[i] = new_jax
+                mirrors[i] = np.asarray(new_jax)
+                continue
+            FULL_SHARD_COPIES.bump()
+            new_part = self._part_host(i).copy()  # one writable copy
             if op == "set":
                 new_part[rows[keep]] = vals[mask][keep]
             else:
@@ -527,12 +621,18 @@ class InterleavedTensor:
         out._with_parts_host(mirrors)
         return out
 
-    def update_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
-        """Functional scatter-set of ``values`` at row ``idx``."""
-        return self._scatter(idx, values, "set")
+    def update_rows(self, idx: jax.Array, values: jax.Array, *,
+                    donate: bool = False) -> "InterleavedTensor":
+        """Functional scatter-set of ``values`` at row ``idx``.
 
-    def add_rows(self, idx: jax.Array, values: jax.Array) -> "InterleavedTensor":
-        return self._scatter(idx, values, "add")
+        ``donate=True`` patches the receiving shards in place through the
+        jitted donated scatter — only valid when the caller drops ``self``
+        (and every ancestor aliasing its shards) after the call."""
+        return self._scatter(idx, values, "set", donate)
+
+    def add_rows(self, idx: jax.Array, values: jax.Array, *,
+                 donate: bool = False) -> "InterleavedTensor":
+        return self._scatter(idx, values, "add", donate)
 
     def bag_reduce(
         self,
@@ -574,7 +674,7 @@ class InterleavedTensor:
         policy_like = _ExplicitAssignment(dev, self.device_names)
         return InterleavedTensor.from_array(
             jnp.asarray(dense), policy_like, self.page_rows,
-            headroom=self.headroom,
+            headroom=self.headroom, backend=self.backend,
         )
 
     def repartition(
@@ -587,6 +687,7 @@ class InterleavedTensor:
         telemetry: Telemetry = GLOBAL_TELEMETRY,
         source: Optional[str] = None,
         lane: Optional[int] = None,
+        donate: bool = False,
     ) -> "InterleavedTensor":
         """Re-tier under ``policy``, migrating ONLY the delta pages.
 
@@ -605,6 +706,11 @@ class InterleavedTensor:
         ``fast_tier``/``slow_tier`` override the first two route labels
         (the two-device compatibility path, e.g. hbm/host on v5e).
 
+        ``donate=True`` lets the stable path patch receiving shards in
+        place (jitted donated scatter, zero full-shard copies) — only
+        valid when the caller drops ``self`` after the call (the Caption
+        actuation pattern ``it = it.repartition(...)``).
+
         Numerically a no-op: ``to_array()`` before == after.
         """
         n = self.n_pages
@@ -616,7 +722,8 @@ class InterleavedTensor:
             self.device_names, max(len(names), len(self.parts)), names,
             fast_tier, slow_tier)
         return self._reassign(new_dev, names, mover=mover,
-                              telemetry=telemetry, source=source, lane=lane)
+                              telemetry=telemetry, source=source, lane=lane,
+                              donate=donate)
 
     # -- the vectorized O(Δ) actuation core ----------------------------------
     def _move_runs(self, delta: np.ndarray, old_dev: np.ndarray,
@@ -655,12 +762,21 @@ class InterleavedTensor:
         if mover is not None:
             from repro.core.mover import LANE_BULK, Descriptor
             pr = self.page_rows
+
+            def slab(s: int, l0: int, n_pages: int):
+                # modeled backend ships zero-copy host-mirror views; the
+                # staged / memory_kind backends keep the slab device-side
+                # so the mover's double-buffered stream_copy executor is
+                # the thing that actually moves it.
+                if self.backend == "modeled":
+                    return self._part_host(s)[l0 * pr: (l0 + n_pages) * pr]
+                return self.parts[s][l0 * pr: (l0 + n_pages) * pr]
+
             descs = [
                 Descriptor(
                     src_tier=route_name(s),
                     dst_tier=route_name(d),
-                    payload=self._part_host(s)[l0 * pr:
-                                               (l0 + len(pages)) * pr],
+                    payload=slab(s, l0, len(pages)),
                     lane=LANE_BULK if lane is None else lane,
                     source=source,
                 )
@@ -695,7 +811,8 @@ class InterleavedTensor:
     def _reassign(self, new_dev: np.ndarray, names: tuple[str, ...], *,
                   mover=None, telemetry: Telemetry = GLOBAL_TELEMETRY,
                   source: Optional[str] = None,
-                  lane: Optional[int] = None) -> "InterleavedTensor":
+                  lane: Optional[int] = None,
+                  donate: bool = False) -> "InterleavedTensor":
         n = self.n_pages
         new_dev = np.asarray(new_dev, np.int8)
         old_dev, old_local = self._host_map()
@@ -721,7 +838,8 @@ class InterleavedTensor:
                   and all(int(new_counts[d]) <= caps[d]
                           for d in range(n_devices)))
         if stable:
-            out = self._reassign_stable(delta, old_dev, old_local, new_dev)
+            out = self._reassign_stable(delta, old_dev, old_local, new_dev,
+                                        donate=donate)
         else:
             out = self._reassign_rebuild(old_dev, old_local, new_dev,
                                          n_devices)
@@ -732,23 +850,33 @@ class InterleavedTensor:
         return final
 
     def _reassign_stable(self, delta: np.ndarray, old_dev: np.ndarray,
-                         old_local: np.ndarray, new_dev: np.ndarray
-                         ) -> "InterleavedTensor":
+                         old_local: np.ndarray, new_dev: np.ndarray,
+                         donate: bool = False) -> "InterleavedTensor":
         """Shape-stable fast path: every moved page lands in a free slot
         of its destination shard — shard shapes, the treedef, and every
         unmoved page's slot are untouched, so jitted consumers keep their
         traces.  Planning, index updates, and metered movement are all
-        O(Δ); materializing the functional update still costs one
+        O(Δ).  Materializing the functional update is either one
         copy-on-write of each RECEIVING shard (non-receiving shards are
-        reused as-is), because immutable jax buffers cannot be patched
-        in place."""
+        reused as-is), or — with ``donate`` — a jitted donated scatter
+        that patches the receiving shard's buffer in place: zero full
+        copies, O(Δ) rows written (the caller must drop the parent).
+
+        ORDERING HAZARD: a leaving page's old slot counts as free in its
+        shard, so an in-place write could clobber it before another
+        destination gathers it — therefore every moved page's data is
+        gathered into staging FIRST, then all writes happen."""
         pr = self.page_rows
         new_local = old_local.copy()
         parts = list(self.parts)
         mirrors = self._inherit_parts_host()
         caps = self.capacity_pages
-        for d in np.unique(new_dev[delta]):
-            incoming = delta[new_dev[delta] == d]
+        feat = self.parts[0].shape[1:]
+        recv = new_dev[delta]
+        data_all = self._gather_pages(delta, old_dev, old_local)
+        for d in np.unique(recv):
+            sel = recv == d
+            incoming = delta[sel]
             # free slots = capacity minus the slots kept by staying pages
             staying = (old_dev == d) & (new_dev == d)
             used = np.zeros(caps[int(d)], bool)
@@ -756,7 +884,25 @@ class InterleavedTensor:
             free = np.nonzero(~used)[0]
             slots = free[: incoming.size]
             new_local[incoming] = slots.astype(np.int32)
-            data = self._gather_pages(incoming, old_dev, old_local)
+            data = data_all[sel]
+            if donate:
+                rows = (slots[:, None].astype(np.int64) * pr
+                        + np.arange(pr)).reshape(-1)
+                # Drop host views of the receiving buffer before the
+                # donated call — a live view blocks the in-place alias
+                # (repro.core.donation VIEW HAZARD).  ``data_all`` is a
+                # fancy-indexed copy, so staging survives the release.
+                mirrors[int(d)] = None
+                cache = self.__dict__.get("_parts_host")
+                if cache is not None:
+                    cache[int(d)] = None
+                new_jax = donated_update(
+                    parts[int(d)], rows, data.reshape((-1,) + feat), "set",
+                    out_sharding=self._donate_sharding(int(d)))
+                parts[int(d)] = new_jax
+                mirrors[int(d)] = np.asarray(new_jax)
+                continue
+            FULL_SHARD_COPIES.bump()
             new_part = self._part_host(int(d)).copy().reshape(
                 (-1, pr) + data.shape[2:])
             new_part[slots] = data
@@ -791,7 +937,8 @@ class InterleavedTensor:
             cap = counts[d] + self.headroom
             if cap == 0:
                 empty = np.zeros((0,) + tuple(feature), dtype)
-                parts.append(jnp.asarray(empty))
+                parts.append(_place_part(jnp.asarray(empty), d,
+                                         self.backend))
                 mirrors.append(empty)
                 continue
             pages_d = np.nonzero(dev2 == d)[0]  # page-id order == rank order
@@ -799,7 +946,8 @@ class InterleavedTensor:
             data[: counts[d]] = self._gather_pages(pages_d, old_dev,
                                                    old_local)
             flat = data.reshape((-1,) + tuple(feature))
-            parts.append(jnp.asarray(flat))
+            FULL_SHARD_COPIES.bump()
+            parts.append(_place_part(jnp.asarray(flat), d, self.backend))
             mirrors.append(flat)
         out = dataclasses.replace(
             self,
@@ -824,7 +972,8 @@ class InterleavedTensor:
                             telemetry: Telemetry = GLOBAL_TELEMETRY,
                             source: Optional[str] = None,
                             lane: Optional[int] = None,
-                            run_pages: int = DEFAULT_RUN_PAGES
+                            run_pages: int = DEFAULT_RUN_PAGES,
+                            donate: bool = False
                             ) -> "InterleavedTensor":
         """Re-tier to a per-slow-device weight vector with minimal moves.
 
@@ -846,7 +995,8 @@ class InterleavedTensor:
         names = resolve_device_names(self.device_names, n_devices,
                                      device_names, fast_tier, slow_tier)
         return self._reassign(new_dev, names, mover=mover,
-                              telemetry=telemetry, source=source, lane=lane)
+                              telemetry=telemetry, source=source, lane=lane,
+                              donate=donate)
 
     def drain_device(self, device, **kwargs) -> "InterleavedTensor":
         """Move every page off one slow device (elastic hot-remove drain).

@@ -1,23 +1,101 @@
-"""Pallas TPU streaming (cache-bypass) bulk copy.
+"""Pallas TPU double-buffered streaming (cache-bypass) migration kernel.
 
-The nt-store / movdir64B analogue from the paper's §6 guidelines: data
-moves HBM -> VMEM tile -> HBM with no reuse, so it cannot pollute any
-cache-like resource, and the tile size is the explicit analogue of the
-64 B cache-bypass granule (sized to VMEM instead).  Used by the
-BulkMover for page staging; optional dtype cast fuses the compressed-
-staging path (bf16 <-> fp32 moment pages) into the same single pass.
+The nt-store / movdir64B analogue from the paper's §6 guidelines, now a
+real migration pipeline instead of a blockwise memcpy: page runs move
+HBM -> VMEM staging -> HBM through explicitly double-buffered async
+DMAs, so chunk i's copy-out overlaps chunk i+1's copy-in and the whole
+transfer overlaps surrounding compute instead of serializing on it.
+Nothing is reused after the single pass, so no cache-like resource is
+polluted; the VMEM chunk is the explicit analogue of the 64 B
+cache-bypass granule.  The optional dtype cast (compressed-staging
+bf16 <-> fp32 moment pages) happens in VMEM between the in- and
+out-DMAs — still a single pass over the data.
+
+Pipeline structure (slots 0/1 double-buffer the full chunks; a ragged
+tail shorter than ``block_rows`` gets dedicated slot 2 whose in-DMA is
+issued up front so it rides under the whole full-chunk pipeline):
+
+    in-DMA(ci+1) ║ wait-in(ci) → cast in VMEM → out-DMA(ci) ║ wait-out(ci-2)
+
+Used by ``BulkMover``'s stream executor for page staging; arbitrary row
+counts are supported (no ``N % block_rows`` requirement — ISSUE 7
+satellite), so coalesced page runs ship without caller-side padding.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(src_ref, out_ref):
-    out_ref[...] = src_ref[...].astype(out_ref.dtype)
+def _migrate_kernel(src_ref, out_ref, *, n_full, tail, block_rows):
+    """Single-program kernel; the chunk loop plays the grid role so the
+    double-buffered DMA chain is explicit rather than compiler-implied."""
+    n_rows = n_full * block_rows + tail
+
+    def body(ins, outs, in_sems, out_sems):
+        def in_dma(slot, start, rows):
+            return pltpu.make_async_copy(
+                src_ref.at[pl.ds(start, rows)],
+                ins.at[slot, pl.ds(0, rows)],
+                in_sems.at[slot])
+
+        def out_dma(slot, start, rows):
+            return pltpu.make_async_copy(
+                outs.at[slot, pl.ds(0, rows)],
+                out_ref.at[pl.ds(start, rows)],
+                out_sems.at[slot])
+
+        if tail:
+            # tail in-DMA issued first: overlaps the full-chunk pipeline.
+            in_dma(2, n_full * block_rows, tail).start()
+
+        if n_full:
+            in_dma(0, 0, block_rows).start()
+
+            def step(ci, carry):
+                cur = jax.lax.rem(ci, 2)
+                nxt = jax.lax.rem(ci + 1, 2)
+
+                @pl.when(ci + 1 < n_full)
+                def _prefetch():
+                    in_dma(nxt, (ci + 1) * block_rows, block_rows).start()
+
+                in_dma(cur, ci * block_rows, block_rows).wait()
+
+                @pl.when(ci >= 2)
+                def _drain_prev():
+                    # outs[cur] still ships chunk ci-2; reclaim it.
+                    out_dma(cur, (ci - 2) * block_rows, block_rows).wait()
+
+                outs[cur, ...] = ins[cur, ...].astype(out_ref.dtype)
+                out_dma(cur, ci * block_rows, block_rows).start()
+                return carry
+
+            jax.lax.fori_loop(0, n_full, step, 0)
+
+            # Drain the last (up to) two in-flight out-DMAs.
+            for ci in range(max(0, n_full - 2), n_full):
+                out_dma(ci % 2, ci * block_rows, block_rows).wait()
+
+        if tail:
+            in_dma(2, n_full * block_rows, tail).wait()
+            outs[2, pl.ds(0, tail)] = (
+                ins[2, pl.ds(0, tail)].astype(out_ref.dtype))
+            out_dma(2, n_full * block_rows, tail).start()
+            out_dma(2, n_full * block_rows, tail).wait()
+
+    del n_rows
+    M = src_ref.shape[1]
+    pl.run_scoped(
+        body,
+        ins=pltpu.VMEM((3, block_rows, M), src_ref.dtype),
+        outs=pltpu.VMEM((3, block_rows, M), out_ref.dtype),
+        in_sems=pltpu.SemaphoreType.DMA((3,)),
+        out_sems=pltpu.SemaphoreType.DMA((3,)),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "out_dtype", "interpret"))
@@ -30,13 +108,13 @@ def stream_copy(
 ) -> jax.Array:
     out_dtype = out_dtype or src.dtype
     N, M = src.shape
-    block_rows = min(block_rows, N)
-    assert N % block_rows == 0, "rows must tile evenly"
+    block_rows = max(1, min(block_rows, N))
+    n_full, tail = divmod(N, block_rows)
     fn = pl.pallas_call(
-        _kernel,
-        grid=(N // block_rows,),
-        in_specs=[pl.BlockSpec((block_rows, M), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((block_rows, M), lambda i: (i, 0)),
+        functools.partial(_migrate_kernel, n_full=n_full, tail=tail,
+                          block_rows=block_rows),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct((N, M), out_dtype),
         interpret=interpret,
     )

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the streaming copy kernel."""
+"""Jit'd public wrapper for the streaming migration kernel.
+
+Arbitrary 2-D row counts go through the kernel (the double-buffered
+pipeline splits a ragged tail into a dedicated staging slot), so the
+old ``shape[0] % block_rows == 0`` fallback is gone.  Non-2-D payloads
+and empty arrays still use the reference path.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,7 +15,7 @@ from repro.kernels.stream_copy import kernel, ref
 
 def stream_copy(src: jax.Array, *, out_dtype=None, block_rows: int = 256,
                 use_kernel: bool = True) -> jax.Array:
-    if not use_kernel or src.ndim != 2 or src.shape[0] % block_rows:
+    if not use_kernel or src.ndim != 2 or src.shape[0] == 0 or src.shape[1] == 0:
         return ref.stream_copy(src, out_dtype)
     return kernel.stream_copy(
         src, block_rows=block_rows, out_dtype=out_dtype,

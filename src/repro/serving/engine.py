@@ -66,6 +66,7 @@ class ServingEngine:
         buffer_name: str = "kv",
         mover=None,
         telemetry=GLOBAL_TELEMETRY,
+        donate_kv: bool = True,
     ):
         self.cfg = cfg
         self.params = params
@@ -84,6 +85,14 @@ class ServingEngine:
         self.cache = TieredKVCache.create(
             cfg, max_batch, max_len, policy, page_t=page_t,
             slow_headroom=slow_headroom)
+        # Engine-owned actuations (Caption repartitions, SLO pins, elastic
+        # drains) always replace ``self.cache`` with the retiled cache, so
+        # the parent provably dies — exactly the donation contract.  With
+        # ``donate_kv`` those retiles patch the receiving pools in place
+        # (zero full-pool copies on the stable path) instead of paying one
+        # copy-on-write per receiving pool.  Direct ``cache.*`` calls made
+        # by outside code keep the safe donate=False default.
+        self.donate_kv = bool(donate_kv)
         # Trace accounting: the counter increments only when jit actually
         # retraces (the wrapped Python fn re-executes), so benchmarks and
         # tests can assert the walk stayed retrace-free.
@@ -208,7 +217,7 @@ class ServingEngine:
             self.cache = self.cache.drain_device(
                 name, self.pinned_slots, weights=target, mover=self.mover,
                 telemetry=self.telemetry, policy_names=self._device_names,
-                source=self.buffer_name)
+                source=self.buffer_name, donate=self.donate_kv)
         self.topology = new_topo
         if self.mover is not None and name in self.mover.topology.slow_names:
             self.mover.update_topology(
@@ -266,7 +275,7 @@ class ServingEngine:
                     self.cache = self.cache.pin_slot(
                         i, mover=self.mover, telemetry=self.telemetry,
                         fast_tier=self._fast_name, slow_tier=self._slow_name,
-                        source=self.buffer_name)
+                        source=self.buffer_name, donate=self.donate_kv)
                     self.pinned_slots.add(i)
                 # prefill by decode-replay into this slot (exact; slot-local)
                 self._reset_slot(i)
@@ -444,13 +453,15 @@ class ServingEngine:
                     self._expand_weights(decision.weights),
                     pinned_slots=self.pinned_slots,
                     mover=self.mover, telemetry=self.telemetry,
-                    policy_names=self._device_names, source=src)
+                    policy_names=self._device_names, source=src,
+                    donate=self.donate_kv)
             else:
                 self.cache = self.cache.repartition_fraction(
                     decision.fraction, pinned_slots=self.pinned_slots,
                     mover=self.mover,
                     telemetry=self.telemetry, fast_tier=self._fast_name,
-                    slow_tier=self._slow_name, source=src)
+                    slow_tier=self._slow_name, source=src,
+                    donate=self.donate_kv)
             # Page rounding may achieve less (or none) of the request: the
             # controller must continue from the real operating point.  With
             # zero tunable slots (everything SLO-pinned) there IS no

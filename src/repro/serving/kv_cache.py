@@ -1,17 +1,32 @@
 """Tiered, page-interleaved KV cache + decode step (the Redis §5.1 analogue).
 
-The KV time axis is split into pages placed across (fast, slow) tiers by
-a MemPolicy — the paper's N:M weighted interleave applied to serving
-state.  Decode attends over both partitions and merges exactly via
+The KV time axis is split into pages placed across (fast, slow...) devices
+by a MemPolicy — the paper's N:M weighted interleave applied to serving
+state.  Decode attends over every device partition and merges exactly via
 log-sum-exp (attention.merge_partials); per-step per-tier byte counts
 feed the perfmodel so benchmarks reproduce the paper's p99/QPS curves
 on this CPU-only box.
 
-Placement is **per slot**: each batch slot carries its own page->tier
+Placement is **per slot**: each batch slot carries its own page->device
 map, so a latency-SLO request can pin its pages fast (Fig. 7: any CXL
 fraction hurts a µs-SLO app) while batch-class neighbors tolerate slow
 pages.  Pinned slots are excluded from ``repartition_fraction`` — the
 Caption loop only tunes the batch-class population.
+
+Physical layout (ISSUE 7): storage is **per-device pools** — one
+``(L, B, T_d, K, hd)`` K/V pool pair per device ordinal, so storage
+bytes match the per-device accounting (``read_bytes_per_device``)
+instead of collapsing every slow device onto one shared pool.  The fast
+pool is sized for ALL pages (the fast tier is the home tier); each slow
+pool holds its own pages plus ``slow_headroom`` pages of capacity.  A
+retile whose per-device page counts fit the held capacities takes the
+**O(Δ) stable path**: moved pages land in free slots of their
+destination pool (gather-first, then write), unreceiving pools are
+reused as-is, and with ``donate=True`` the receiving pools are patched
+in place through the jitted donated scatter — zero full-pool copies.
+Only when a pool outgrows its capacity (or the device set changes) does
+the legacy full rebuild run, re-ranking locals and re-padding by the
+headroom (jitted decode retraces once, by design).
 
 Applies to the uniform-attention (dense/vlm/moe-attention) families;
 recurrent state (rwkv/rglru) is latency-bound and planner-pinned fast.
@@ -26,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.donation import FULL_SHARD_COPIES, donated_kv_update
 from repro.core.interleave import (_policy_device_map, minimal_delta_weights,
                                    resolve_device_names, route_pure_runs)
 from repro.core.mover import LANE_BULK, LANE_LATENCY
@@ -38,18 +54,16 @@ _INT32_MAX = np.iinfo(np.int32).max
 
 
 def _kv_layout_rows(assign: np.ndarray, page_t: int):
-    """Per-slot physical layout for a (B, n_pages) page->tier map: local
-    indices, shared part sizes, and per-slot per-part global positions
-    (INT32_MAX pads never validate in the attention masks).
+    """LEGACY two-pool storage view of a (B, n_pages) page->tier map:
+    local indices, shared part sizes, and per-slot per-part global
+    positions (INT32_MAX pads never validate in the attention masks).
 
-    The fast part is sized for ALL pages (the fast tier is the home tier)
-    so pinning a slot fast or shifting the interleave never reallocates
-    it — repartition and SLO admission only rewrite index maps and the
-    slow part, keeping the jitted decode step's shapes stable.
+    Physical storage is per-device (:func:`_kv_device_layout_rows`)
+    since ISSUE 7; this two-tier collapse remains the reference layout
+    the per-device one generalizes (equivalence with the per-slot
+    ``tier_page_map`` walk is asserted by tests/test_hotpaths.py).
 
-    Fully vectorized (argsort/cumsum over the whole B x P map — it runs
-    on every retile and SLO pin); equivalence with the per-slot
-    ``tier_page_map`` walk is asserted by tests/test_hotpaths.py."""
+    Fully vectorized (argsort/cumsum over the whole B x P map)."""
     assign = np.asarray(assign)
     B, P = assign.shape
     assign01 = np.minimum(assign, 1).astype(np.int8)
@@ -81,6 +95,42 @@ def _kv_layout_rows(assign: np.ndarray, page_t: int):
             pos_fast.astype(np.int32), pos_slow.astype(np.int32))
 
 
+def _kv_device_layout_rows(assign: np.ndarray, page_t: int, n_devices: int):
+    """Per-DEVICE physical layout for a (B, n_pages) page->device map.
+
+    Returns ``(local, counts, pos_list)``: ``local[b, p]`` is page p's
+    rank within its owning device (page order — the rank-order
+    discipline every full rebuild restores), ``counts[d, b]`` the page
+    count of device d in slot b, and ``pos_list[d]`` the
+    ``(B, max_b counts[d, b] * page_t)`` global position held by each
+    pool slot (INT32_MAX pads never validate in the attention masks).
+    The two-device case reproduces :func:`_kv_layout_rows` exactly."""
+    assign = np.asarray(assign)
+    B, P = assign.shape
+    local = np.zeros((B, P), np.int32)
+    counts = np.zeros((n_devices, B), np.int64)
+    pos_list = []
+    at = np.arange(page_t)
+    for d in range(n_devices):
+        mask = assign == d
+        counts[d] = mask.sum(axis=1)
+        local = np.where(mask, np.cumsum(mask, axis=1) - 1, local).astype(
+            np.int32)
+        need = int(counts[d].max(initial=0))
+        if need == 0:
+            pos_list.append(np.zeros((B, 0), np.int32))
+            continue
+        # pages of d first (stable keeps page order), then the rest
+        order = np.argsort(~mask, axis=1, kind="stable")[:, :need]
+        allpos = (order[:, :, None] * page_t + at).reshape(
+            B, need * page_t).astype(np.int32)
+        cols = np.arange(need * page_t)
+        pos_d = np.where(cols[None, :] < counts[d][:, None] * page_t,
+                         allpos, _INT32_MAX)
+        pos_list.append(pos_d.astype(np.int32))
+    return local, counts, pos_list
+
+
 def _pad_pos(pos: np.ndarray, T: int) -> np.ndarray:
     """Pad a (B, t) position map to (B, T) with never-valid sentinels."""
     if pos.shape[1] >= T:
@@ -92,43 +142,75 @@ def _pad_pos(pos: np.ndarray, T: int) -> np.ndarray:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class TieredKVCache:
-    k_fast: jax.Array  # (L, B, Tf, K, hd)
-    v_fast: jax.Array
-    k_slow: jax.Array  # (L, B, Ts, K, hd)
-    v_slow: jax.Array
+    #: per-device K/V pools: ``k_parts[d]`` is ``(L, B, T_d, K, hd)``.
+    #: ``T_0 = n_pages * page_t`` (the fast home tier never reallocates);
+    #: slow pools hold their own pages plus ``slow_headroom`` pages.
+    k_parts: tuple
+    v_parts: tuple
     lengths: jax.Array  # (B,)
     # static addressing (per-slot page assignment)
-    page_tier: jax.Array  # (B, n_pages) int8: STORAGE tier (0 fast, 1 slow)
-    page_local: jax.Array  # (B, n_pages)
-    pos_fast: jax.Array  # (B, Tf) global position held by each fast slot
-    pos_slow: jax.Array  # (B, Ts)
-    #: per-page owning DEVICE ordinal (0 = fast, i >= 1 = slow device i-1).
-    #: Physical storage keeps the shape-stable fast/slow pools (devices
-    #: beyond the second share the slow pool on this modeled backend), but
-    #: traffic routes and per-device accounting use the real device map.
+    page_local: jax.Array  # (B, n_pages): page slot within its OWN device pool
+    #: per-device (B, T_d) global position held by each pool slot.
+    pos_parts: tuple
+    #: per-page owning DEVICE ordinal (0 = fast, i >= 1 = slow device i-1);
+    #: storage AND accounting are per device (ISSUE 7).
     page_device: jax.Array  # (B, n_pages) int8
     page_t: int
     #: route labels per device ordinal (telemetry/mover tier names).
-    device_names: tuple[str, ...] = ("fast", "slow")
-    #: slow-pool capacity padding, in pages per slot.  0 = the slow part
-    #: is sized exactly for the current worst slot (every retile that
-    #: changes that resizes it — the legacy layout); > 0 = the slow part
-    #: keeps ``max_slow + slow_headroom`` pages of capacity, so Caption
-    #: repartitions and SLO pins that fit never change the decode step's
-    #: shapes (zero retraces across probe epochs).
+    device_names: tuple = ("fast", "slow")
+    #: slow-pool capacity padding, in pages per slot per device.  0 =
+    #: each slow pool is sized exactly for its current worst slot (every
+    #: retile that changes that resizes it — the legacy layout); > 0 =
+    #: each slow pool keeps ``max_count + slow_headroom`` pages of
+    #: capacity, so Caption repartitions and SLO pins that fit take the
+    #: O(Δ) stable path and never change the decode step's shapes (zero
+    #: retraces across probe epochs).
     slow_headroom: int = 0
 
     def tree_flatten(self):
-        children = (self.k_fast, self.v_fast, self.k_slow, self.v_slow,
-                    self.lengths, self.page_tier, self.page_local,
-                    self.pos_fast, self.pos_slow, self.page_device)
+        children = (tuple(self.k_parts), tuple(self.v_parts), self.lengths,
+                    self.page_local, tuple(self.pos_parts), self.page_device)
         return children, (self.page_t, self.device_names,
                           self.slow_headroom)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, page_t=aux[0], device_names=aux[1],
-                   slow_headroom=aux[2])
+        k_parts, v_parts, lengths, page_local, pos_parts, page_device = children
+        return cls(tuple(k_parts), tuple(v_parts), lengths, page_local,
+                   tuple(pos_parts), page_device, page_t=aux[0],
+                   device_names=aux[1], slow_headroom=aux[2])
+
+    # -- two-pool compatibility views ------------------------------------------
+    @property
+    def k_fast(self) -> jax.Array:
+        return self.k_parts[0]
+
+    @property
+    def v_fast(self) -> jax.Array:
+        return self.v_parts[0]
+
+    @property
+    def pos_fast(self) -> jax.Array:
+        return self.pos_parts[0]
+
+    @property
+    def k_slow(self) -> jax.Array:
+        """The FIRST slow device's pool (two-device compatibility view;
+        on wider topologies index ``.k_parts`` directly)."""
+        return self.k_parts[1]
+
+    @property
+    def v_slow(self) -> jax.Array:
+        return self.v_parts[1]
+
+    @property
+    def pos_slow(self) -> jax.Array:
+        return self.pos_parts[1]
+
+    @property
+    def page_tier(self) -> jax.Array:
+        """(B, n_pages) int8 0/1 fast-vs-slow view of the device map."""
+        return jnp.minimum(self.page_device, 1).astype(jnp.int8)
 
     # -- host-side map cache ----------------------------------------------------
     def _host_dev(self) -> np.ndarray:
@@ -154,19 +236,22 @@ class TieredKVCache:
         slow_headroom = min(max(int(slow_headroom), 0), n_pages)
         dev_row, names = _policy_device_map(policy, n_pages)
         dev = np.broadcast_to(dev_row.astype(np.int8), (batch, n_pages))
-        assign, page_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
-            dev, page_t)
-        Ts_cap = min(Ts + slow_headroom * page_t, n_pages * page_t)
+        n_devices = len(names)
+        local, counts, pos_list = _kv_device_layout_rows(dev, page_t,
+                                                         n_devices)
+        caps = [n_pages * page_t]  # fast pool holds every page
+        for d in range(1, n_devices):
+            caps.append(min(int(counts[d].max(initial=0)) + slow_headroom,
+                            n_pages) * page_t)
         out = cls(
-            k_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
-            v_fast=jnp.zeros((L, batch, Tf, K, hd), dt),
-            k_slow=jnp.zeros((L, batch, max(Ts_cap, 0), K, hd), dt),
-            v_slow=jnp.zeros((L, batch, max(Ts_cap, 0), K, hd), dt),
+            k_parts=tuple(jnp.zeros((L, batch, caps[d], K, hd), dt)
+                          for d in range(n_devices)),
+            v_parts=tuple(jnp.zeros((L, batch, caps[d], K, hd), dt)
+                          for d in range(n_devices)),
             lengths=jnp.zeros((batch,), jnp.int32),
-            page_tier=jnp.asarray(assign, jnp.int8),
-            page_local=jnp.asarray(page_local, jnp.int32),
-            pos_fast=jnp.asarray(pos_fast),
-            pos_slow=jnp.asarray(_pad_pos(pos_slow, Ts_cap)),
+            page_local=jnp.asarray(local, jnp.int32),
+            pos_parts=tuple(jnp.asarray(_pad_pos(pos_list[d], caps[d]))
+                            for d in range(n_devices)),
             page_device=jnp.asarray(dev, jnp.int8),
             page_t=page_t,
             device_names=names,
@@ -177,11 +262,12 @@ class TieredKVCache:
 
     # -- addressing -------------------------------------------------------------
     def _route(self, pos: jax.Array):
+        """token position -> (owning device ordinal, flat pool row)."""
         page = pos // self.page_t
-        page = jnp.minimum(page, self.page_tier.shape[1] - 1)[:, None]
-        tier = jnp.take_along_axis(self.page_tier, page, axis=1)[:, 0]
+        page = jnp.minimum(page, self.page_device.shape[1] - 1)[:, None]
+        dev = jnp.take_along_axis(self.page_device, page, axis=1)[:, 0]
         local = jnp.take_along_axis(self.page_local, page, axis=1)[:, 0]
-        return tier.astype(bool), local * self.page_t + pos % self.page_t
+        return dev, local * self.page_t + pos % self.page_t
 
     def slow_fraction(self, pinned_slots=()) -> float:
         """Slow-page share of the *tunable* slots (all slots minus
@@ -219,9 +305,9 @@ class TieredKVCache:
     def read_bytes_per_step(self) -> dict[str, int]:
         """Bytes streamed per decode step per tier (both K and V), from the
         per-slot page placement (pinned slots bill fast-only)."""
-        item = self.k_fast.dtype.itemsize
-        L = self.k_fast.shape[0]
-        K, hd = self.k_fast.shape[3:]
+        item = self.k_parts[0].dtype.itemsize
+        L = self.k_parts[0].shape[0]
+        K, hd = self.k_parts[0].shape[3:]
         tiers = np.minimum(self._host_dev(), 1)
         n_pages = tiers.shape[1]
         slow_pages = tiers.sum(axis=1)
@@ -237,9 +323,9 @@ class TieredKVCache:
         slow total splits across the real devices holding the pages (each
         device streams on its own link, so the modeled step time is the
         max, not the sum)."""
-        item = self.k_fast.dtype.itemsize
-        L = self.k_fast.shape[0]
-        K, hd = self.k_fast.shape[3:]
+        item = self.k_parts[0].dtype.itemsize
+        L = self.k_parts[0].shape[0]
+        K, hd = self.k_parts[0].shape[3:]
         dev = self._host_dev()
         out = {}
         for i, name in enumerate(self.device_names):
@@ -249,27 +335,46 @@ class TieredKVCache:
             out[name] = 2 * L * int(pages.sum()) * self.page_t * K * hd * item
         return out
 
+    def storage_bytes_per_device(self) -> dict[str, int]:
+        """Physically OCCUPIED bytes per device pool (valid page slots,
+        K and V, all layers), read off the pos maps' sentinel structure.
+        With per-device pools this equals the ``read_bytes_per_device``
+        accounting (modulo the fast tier's >= 1-page billing floor) —
+        the ISSUE 7 storage == accounting invariant."""
+        item = self.k_parts[0].dtype.itemsize
+        L = self.k_parts[0].shape[0]
+        K, hd = self.k_parts[0].shape[3:]
+        out = {}
+        for i, name in enumerate(self.device_names):
+            rows = int((np.asarray(self.pos_parts[i]) != _INT32_MAX).sum())
+            out[name] = 2 * L * rows * K * hd * item
+        return out
+
+    def capacity_pages(self) -> tuple:
+        """Per-device pool capacity in pages per slot."""
+        return tuple(kp.shape[2] // self.page_t for kp in self.k_parts)
+
     # -- append + attend --------------------------------------------------------
     def append_layer(self, layer: jax.Array, k_new: jax.Array, v_new: jax.Array):
         """Scatter one token's K/V for one layer. k_new: (B, K, hd)."""
         B = k_new.shape[0]
-        is_slow, local = self._route(self.lengths)
+        dev, local = self._route(self.lengths)
         bidx = jnp.arange(B)
-        f_idx = jnp.where(is_slow, self.k_fast.shape[2], local)
-        s_idx = jnp.where(is_slow, local, self.k_slow.shape[2] or 1)
-        k_fast = self.k_fast.at[layer, bidx, f_idx].set(
-            k_new.astype(self.k_fast.dtype), mode="drop")
-        v_fast = self.v_fast.at[layer, bidx, f_idx].set(
-            v_new.astype(self.v_fast.dtype), mode="drop")
-        if self.k_slow.shape[2]:
-            k_slow = self.k_slow.at[layer, bidx, s_idx].set(
-                k_new.astype(self.k_slow.dtype), mode="drop")
-            v_slow = self.v_slow.at[layer, bidx, s_idx].set(
-                v_new.astype(self.v_slow.dtype), mode="drop")
-        else:
-            k_slow, v_slow = self.k_slow, self.v_slow
+        k_parts = list(self.k_parts)
+        v_parts = list(self.v_parts)
+        for d in range(len(k_parts)):
+            T_d = k_parts[d].shape[2]
+            if T_d == 0:
+                continue
+            # rows owned by another device are pushed out of bounds and
+            # dropped — every pool sees one shape-static scatter.
+            idx = jnp.where(dev == d, local, T_d)
+            k_parts[d] = k_parts[d].at[layer, bidx, idx].set(
+                k_new.astype(k_parts[d].dtype), mode="drop")
+            v_parts[d] = v_parts[d].at[layer, bidx, idx].set(
+                v_new.astype(v_parts[d].dtype), mode="drop")
         return dataclasses.replace(
-            self, k_fast=k_fast, v_fast=v_fast, k_slow=k_slow, v_slow=v_slow)
+            self, k_parts=tuple(k_parts), v_parts=tuple(v_parts))
 
     # -- SLO pinning (per-request latency class) --------------------------------
     def pin_slot(self, i: int, **kwargs) -> "TieredKVCache":
@@ -371,141 +476,287 @@ class TieredKVCache:
     def _route_names(self, n_devices: int,
                      policy_names: Optional[tuple] = None,
                      fast_tier: Optional[str] = None,
-                     slow_tier: Optional[str] = None) -> tuple[str, ...]:
+                     slow_tier: Optional[str] = None) -> tuple:
         return resolve_device_names(self.device_names, n_devices,
                                     policy_names, fast_tier, slow_tier)
+
+    # -- retile internals -------------------------------------------------------
+    def _page_kv_bytes(self) -> int:
+        L = self.k_parts[0].shape[0]
+        K, hd = self.k_parts[0].shape[3:]
+        return 2 * L * self.page_t * K * hd * self.k_parts[0].dtype.itemsize
+
+    def _slot_groups(self, old_dev, new_dev, old_local) -> dict:
+        """Slots sharing (old row, new row, old locals) — the whole
+        batch-class population after a repartition — move as ONE batched
+        slice per run instead of per-slot-per-page.  The locals are part
+        of the key because the stable path's free-slot allocation makes
+        them history-dependent (equal device rows no longer imply equal
+        physical layouts)."""
+        groups: dict = {}
+        for b in range(old_dev.shape[0]):
+            key = (old_dev[b].tobytes() + new_dev[b].tobytes()
+                   + old_local[b].tobytes())
+            groups.setdefault(key, []).append(b)
+        return groups
+
+    def _ship_retile(self, groups, old_dev, new_dev, old_local, route, *,
+                     mover, telemetry, source, lane) -> None:
+        """Movement metering on real device routes — including
+        slow->slow hops (the paper's C2C class).  Moved pages coalesce
+        into route-pure runs of consecutive source locals; each run is
+        one contiguous slab of its source pool and ships as ONE batched
+        descriptor (billed bytes identical to per-page).  Runs before
+        any pool is written, so payloads slice pristine source data."""
+        pt = self.page_t
+        page_kv_bytes = self._page_kv_bytes()
+        k_np = [np.asarray(kp) for kp in self.k_parts]
+        v_np = [np.asarray(vp) for vp in self.v_parts]
+        descs = []
+        for slots in groups.values():
+            b0, sl = slots[0], np.asarray(slots)
+            od, nd = old_dev[b0].astype(np.int64), new_dev[b0].astype(np.int64)
+            ol = old_local[b0].astype(np.int64)
+            moved = np.nonzero(od != nd)[0]
+            if moved.size == 0:
+                continue
+            order, starts, ends = route_pure_runs(
+                od[moved], nd[moved], ol[moved])
+            mv = moved[order]
+            for s, e in zip(starts, ends):
+                p0 = mv[s]
+                d0, d1 = int(od[p0]), int(nd[p0])
+                l0, run = int(ol[p0]), int(e - s)
+                src, dst = route[d0], route[d1]
+                if mover is not None:
+                    from repro.core.mover import Descriptor
+                    k_slab = k_np[d0][:, sl, l0 * pt:(l0 + run) * pt]
+                    v_slab = v_np[d0][:, sl, l0 * pt:(l0 + run) * pt]
+                    descs.append(Descriptor(
+                        src, dst, (jnp.asarray(k_slab),
+                                   jnp.asarray(v_slab)),
+                        lane=lane, source=source))
+                elif telemetry is not None:
+                    telemetry.record_move(
+                        src, dst, page_kv_bytes * len(slots) * run,
+                        0.0, source=source)
+        if mover is not None:
+            mover.submit(descs)  # one submission: descriptors batch (§6)
+            if mover.asynchronous:
+                mover.wait_all()
 
     def _retile(self, new_dev: np.ndarray, *, mover=None,
                 fast_tier: Optional[str] = None,
                 slow_tier: Optional[str] = None,
                 policy_names: Optional[tuple] = None,
                 telemetry=GLOBAL_TELEMETRY, source: Optional[str] = None,
-                lane: int = LANE_BULK) -> "TieredKVCache":
+                lane: int = LANE_BULK, donate: bool = False
+                ) -> "TieredKVCache":
         old_dev = self._host_dev()
         if np.array_equal(new_dev, old_dev):
             return self
-        pt = self.page_t
+        n_old = len(self.k_parts)
         n_devices = max(len(self.device_names),
                         int(new_dev.max(initial=0)) + 1,
-                        len(policy_names or ()))
+                        len(policy_names or ()), n_old)
         route = self._route_names(n_devices, policy_names, fast_tier,
                                   slow_tier)
-        new01, new_local, Tf, Ts, pos_fast, pos_slow = _kv_layout_rows(
-            new_dev, pt)
-        P = old_dev.shape[1]
-        # Capacity-held slow pool: with headroom, a retile that fits the
-        # existing capacity keeps the decode step's shapes (no retrace);
-        # growing past it re-pads by the headroom so the NEXT walk fits.
-        cap = self.k_slow.shape[2]
-        if self.slow_headroom > 0:
-            Ts_cap = cap if cap >= Ts else min(
-                Ts + self.slow_headroom * pt, P * pt)
-        else:
-            Ts_cap = Ts
         old_local = np.asarray(self.page_local)
-        k_parts = (np.asarray(self.k_fast), np.asarray(self.k_slow))
-        v_parts = (np.asarray(self.v_fast), np.asarray(self.v_slow))
-
-        L, B = self.k_fast.shape[:2]
-        K, hd = self.k_fast.shape[3:]
-        dt = self.k_fast.dtype
-        new_k = (np.zeros((L, B, Tf, K, hd), dt),
-                 np.zeros((L, B, Ts_cap, K, hd), dt))
-        new_v = (np.zeros((L, B, Tf, K, hd), dt),
-                 np.zeros((L, B, Ts_cap, K, hd), dt))
-        page_kv_bytes = 2 * L * pt * K * hd * dt.itemsize  # one slot-page
-        # Slots sharing a (old row, new row) pair — the whole batch-class
-        # population after a repartition — copy as ONE batched slice per
-        # tier combo instead of per-slot-per-page (locals are a function
-        # of the row, so equal rows imply equal layouts).
-        groups: dict[bytes, list[int]] = {}
-        for b in range(B):
-            key = old_dev[b].tobytes() + new_dev[b].tobytes()
-            groups.setdefault(key, []).append(b)
-        descs = []
-        at = np.arange(pt)
-        L_idx = np.arange(L)
-        for slots in groups.values():
-            b0, sl = slots[0], np.asarray(slots)
-            od, nd = old_dev[b0].astype(np.int64), new_dev[b0].astype(np.int64)
-            ot, nt = np.minimum(od, 1), np.minimum(nd, 1)
-            ol, nl = old_local[b0].astype(np.int64), new_local[b0].astype(np.int64)
-            # Vectorized data placement: one fancy-indexed copy per
-            # (old storage tier, new storage tier) combination.
-            for t0 in (0, 1):
-                for t1 in (0, 1):
-                    sel = np.nonzero((ot == t0) & (nt == t1))[0]
-                    if sel.size == 0:
-                        continue
-                    src_rows = (ol[sel][:, None] * pt + at).ravel()
-                    dst_rows = (nl[sel][:, None] * pt + at).ravel()
-                    new_k[t1][np.ix_(L_idx, sl, dst_rows)] = \
-                        k_parts[t0][np.ix_(L_idx, sl, src_rows)]
-                    new_v[t1][np.ix_(L_idx, sl, dst_rows)] = \
-                        v_parts[t0][np.ix_(L_idx, sl, src_rows)]
-            # Movement metering on real device routes — including
-            # slow->slow hops (the paper's C2C class), which the storage
-            # tiers alone cannot distinguish.  Moved pages coalesce into
-            # route-pure runs of consecutive source locals; each run is
-            # one contiguous slab of its source pool and ships as ONE
-            # batched descriptor (billed bytes identical to per-page).
-            moved = np.nonzero(od != nd)[0]
-            if moved.size:
-                order, starts, ends = route_pure_runs(
-                    od[moved], nd[moved], ol[moved])
-                mv = moved[order]
-                for s, e in zip(starts, ends):
-                    p0 = mv[s]
-                    d0, d1 = int(od[p0]), int(nd[p0])
-                    t0 = min(d0, 1)
-                    l0, run = int(ol[p0]), int(e - s)
-                    src, dst = route[d0], route[d1]
-                    if mover is not None:
-                        from repro.core.mover import Descriptor
-                        k_slab = k_parts[t0][:, sl,
-                                             l0 * pt:(l0 + run) * pt]
-                        v_slab = v_parts[t0][:, sl,
-                                             l0 * pt:(l0 + run) * pt]
-                        descs.append(Descriptor(
-                            src, dst, (jnp.asarray(k_slab),
-                                       jnp.asarray(v_slab)),
-                            lane=lane, source=source))
-                    elif telemetry is not None:
-                        telemetry.record_move(
-                            src, dst, page_kv_bytes * len(slots) * run,
-                            0.0, source=source)
-        if mover is not None:
-            mover.submit(descs)  # one submission: descriptors batch (§6)
-            if mover.asynchronous:
-                mover.wait_all()
+        groups = self._slot_groups(old_dev, new_dev, old_local)
+        # Bill / ship the movement FIRST (payloads slice the CURRENT
+        # pools — required for the donated in-place path too).
+        self._ship_retile(groups, old_dev, new_dev, old_local, route,
+                          mover=mover, telemetry=telemetry, source=source,
+                          lane=lane)
+        caps = self.capacity_pages()
+        need = [int(max((new_dev == d).sum(axis=1).max(initial=0), 0))
+                for d in range(n_devices)]
+        stable = (self.slow_headroom > 0 and n_devices == n_old
+                  and all(need[d] <= caps[d] for d in range(n_devices)))
+        if stable:
+            out = self._retile_stable(groups, old_dev, new_dev, old_local,
+                                      donate=donate)
+        else:
+            out = self._retile_rebuild(groups, old_dev, new_dev, old_local,
+                                       n_devices)
         # Stored names: the policy's, widened with the cache's EXISTING
         # names for higher ordinals (a narrower policy must not rename a
         # pinned slot's real device to a placeholder), without the legacy
         # fast/slow route overrides.
-        device_names = self._route_names(n_devices, policy_names, None, None)
         out = dataclasses.replace(
-            self,
-            k_fast=jnp.asarray(new_k[0]), v_fast=jnp.asarray(new_v[0]),
-            k_slow=jnp.asarray(new_k[1]), v_slow=jnp.asarray(new_v[1]),
-            page_tier=jnp.asarray(new01, jnp.int8),
-            page_local=jnp.asarray(new_local, jnp.int32),
-            pos_fast=jnp.asarray(pos_fast),
-            pos_slow=jnp.asarray(_pad_pos(pos_slow, Ts_cap)),
-            page_device=jnp.asarray(new_dev, jnp.int8),
-            device_names=device_names,
-        )
+            out, device_names=self._route_names(n_devices, policy_names,
+                                                None, None))
         out.__dict__["_host_cache"] = np.asarray(new_dev)
         return out
 
+    def _retile_stable(self, groups, old_dev, new_dev, old_local, *,
+                       donate: bool = False) -> "TieredKVCache":
+        """O(Δ) retile: every moved page lands in a free slot of its
+        destination pool — pool shapes, the treedef, and every unmoved
+        page's slot are untouched, so the jitted decode step keeps its
+        trace.  Non-receiving pools are reused as-is; receiving pools
+        are either copy-on-write (one full copy each) or — with
+        ``donate`` — patched in place through the jitted donated scatter
+        (zero full-pool copies; the caller must drop the parent cache).
+
+        ORDERING HAZARD: a leaving page's old slot counts as free in its
+        pool, so writes could clobber data another destination has not
+        staged yet — every moved slab is gathered FIRST, then written."""
+        pt = self.page_t
+        at = np.arange(pt)
+        L_idx = np.arange(self.k_parts[0].shape[0])
+        caps = self.capacity_pages()
+        n_devices = len(self.k_parts)
+        new_local = old_local.copy()
+        k_np = [np.asarray(kp) for kp in self.k_parts]   # pristine views
+        v_np = [np.asarray(vp) for vp in self.v_parts]
+        pos_np = [np.asarray(p).copy() for p in self.pos_parts]
+        plan = []  # (dst_dev, slot ids, dst rows, k slab, v slab)
+        for slots in groups.values():
+            b0, sl = slots[0], np.asarray(slots)
+            od, nd = old_dev[b0].astype(np.int64), new_dev[b0].astype(np.int64)
+            ol = old_local[b0].astype(np.int64)
+            moved = np.nonzero(od != nd)[0]
+            if moved.size == 0:
+                continue
+            nl_row = ol.copy()
+            for d in np.unique(nd[moved]):
+                incoming = moved[nd[moved] == d]
+                # free slots = capacity minus the slots kept by staying
+                # pages (a leaving page's slot IS free — hence the
+                # gather-first discipline)
+                staying = (od == d) & (nd == d)
+                used = np.zeros(caps[int(d)], bool)
+                used[ol[staying]] = True
+                free = np.nonzero(~used)[0]
+                slots_free = free[: incoming.size]
+                nl_row[incoming] = slots_free
+                # stage the moved slabs per source pool, aligned with
+                # their destination slots
+                src_of = od[incoming]
+                for s in np.unique(src_of):
+                    sel = src_of == s
+                    pages = incoming[sel]
+                    src_rows = (ol[pages][:, None] * pt + at).ravel()
+                    dst_rows = (slots_free[sel][:, None] * pt + at).ravel()
+                    plan.append((int(d), sl, dst_rows,
+                                 k_np[int(s)][np.ix_(L_idx, sl, src_rows)],
+                                 v_np[int(s)][np.ix_(L_idx, sl, src_rows)]))
+            new_local[np.ix_(sl, np.arange(nl_row.size))] = \
+                nl_row[None, :].astype(np.int32)
+            # recompute the group's pos rows for every device (cheap:
+            # O(P) per group, pool widths unchanged)
+            for d in range(n_devices):
+                row = np.full(caps[d] * pt, _INT32_MAX, np.int32)
+                pages_d = np.nonzero(nd == d)[0]
+                if pages_d.size:
+                    row[(nl_row[pages_d][:, None] * pt + at).ravel()] = (
+                        pages_d[:, None] * pt + at).ravel().astype(np.int32)
+                pos_np[d][sl] = row
+        # All staging gathered (plan slabs are fancy-indexed copies) —
+        # release the zero-copy host views BEFORE writing: a live view
+        # blocks XLA aliasing and donation silently degrades to a full
+        # copy (repro.core.donation VIEW HAZARD).
+        k_np = v_np = None
+        k_pools = list(self.k_parts)
+        v_pools = list(self.v_parts)
+        writable_k: dict = {}
+        writable_v: dict = {}
+        for d, sl, dst_rows, k_slab, v_slab in plan:
+            if donate:
+                k_pools[d] = donated_kv_update(k_pools[d], sl, dst_rows,
+                                               k_slab)
+                v_pools[d] = donated_kv_update(v_pools[d], sl, dst_rows,
+                                               v_slab)
+                continue
+            if d not in writable_k:
+                FULL_SHARD_COPIES.bump(2)  # one full CoW per K and V pool
+                writable_k[d] = np.asarray(k_pools[d]).copy()
+                writable_v[d] = np.asarray(v_pools[d]).copy()
+            writable_k[d][np.ix_(L_idx, sl, dst_rows)] = k_slab
+            writable_v[d][np.ix_(L_idx, sl, dst_rows)] = v_slab
+        for d in writable_k:
+            k_pools[d] = jnp.asarray(writable_k[d])
+            v_pools[d] = jnp.asarray(writable_v[d])
+        return dataclasses.replace(
+            self,
+            k_parts=tuple(k_pools), v_parts=tuple(v_pools),
+            page_local=jnp.asarray(new_local, jnp.int32),
+            pos_parts=tuple(jnp.asarray(p) for p in pos_np),
+            page_device=jnp.asarray(new_dev, jnp.int8),
+        )
+
+    def _retile_rebuild(self, groups, old_dev, new_dev, old_local,
+                        n_devices: int) -> "TieredKVCache":
+        """Full rebuild: re-rank locals, reallocate every pool at its new
+        capacity (plus headroom), and copy every page — the path that
+        changes shapes, so the jitted decode retraces once, by design
+        (a pool outgrew its capacity or the device set changed)."""
+        pt = self.page_t
+        at = np.arange(pt)
+        L, B = self.k_parts[0].shape[:2]
+        K, hd = self.k_parts[0].shape[3:]
+        dt = self.k_parts[0].dtype
+        L_idx = np.arange(L)
+        P = old_dev.shape[1]
+        old_caps = self.capacity_pages()
+        new_local, counts, pos_list = _kv_device_layout_rows(
+            new_dev, pt, n_devices)
+        caps = [P]  # fast pool holds every page
+        for d in range(1, n_devices):
+            need = int(counts[d].max(initial=0))
+            if (self.slow_headroom > 0 and d < len(old_caps)
+                    and old_caps[d] >= need):
+                caps.append(old_caps[d])  # held capacity: no retrace churn
+            else:
+                caps.append(min(need + self.slow_headroom, P))
+        k_new = [np.zeros((L, B, caps[d] * pt, K, hd), dt)
+                 for d in range(n_devices)]
+        v_new = [np.zeros((L, B, caps[d] * pt, K, hd), dt)
+                 for d in range(n_devices)]
+        FULL_SHARD_COPIES.bump(2 * n_devices)
+        k_np = [np.asarray(kp) for kp in self.k_parts]
+        v_np = [np.asarray(vp) for vp in self.v_parts]
+        n_old = len(self.k_parts)
+        for slots in groups.values():
+            b0, sl = slots[0], np.asarray(slots)
+            od, nd = old_dev[b0].astype(np.int64), new_dev[b0].astype(np.int64)
+            ol = old_local[b0].astype(np.int64)
+            nl = new_local[b0].astype(np.int64)
+            # one fancy-indexed copy per (source pool, dest pool) pair
+            for s in range(n_old):
+                sel_s = od == s
+                if not sel_s.any():
+                    continue
+                for d in range(n_devices):
+                    sel = np.nonzero(sel_s & (nd == d))[0]
+                    if sel.size == 0:
+                        continue
+                    src_rows = (ol[sel][:, None] * pt + at).ravel()
+                    dst_rows = (nl[sel][:, None] * pt + at).ravel()
+                    k_new[d][np.ix_(L_idx, sl, dst_rows)] = \
+                        k_np[s][np.ix_(L_idx, sl, src_rows)]
+                    v_new[d][np.ix_(L_idx, sl, dst_rows)] = \
+                        v_np[s][np.ix_(L_idx, sl, src_rows)]
+        return dataclasses.replace(
+            self,
+            k_parts=tuple(jnp.asarray(k) for k in k_new),
+            v_parts=tuple(jnp.asarray(v) for v in v_new),
+            page_local=jnp.asarray(new_local, jnp.int32),
+            pos_parts=tuple(
+                jnp.asarray(_pad_pos(pos_list[d], caps[d] * pt))
+                for d in range(n_devices)),
+            page_device=jnp.asarray(new_dev, jnp.int8),
+        )
+
     def partitions(self, layer: int):
-        """[(k, v, valid)] per tier for decode attention (post-append)."""
+        """[(k, v, valid)] per device pool for decode attention
+        (post-append); zero-width pools contribute no partial."""
         upto = self.lengths[:, None] + 1
-        parts = [(self.k_fast[layer], self.v_fast[layer],
-                  self.pos_fast < upto)]
-        if self.k_slow.shape[2]:
-            parts.append((self.k_slow[layer], self.v_slow[layer],
-                          self.pos_slow < upto))
-        return parts
+        return [(self.k_parts[d][layer], self.v_parts[d][layer],
+                 self.pos_parts[d] < upto)
+                for d in range(len(self.k_parts))
+                if self.k_parts[d].shape[2]]
 
 
 def tiered_decode_step(cfg: ArchConfig, params: dict, cache: TieredKVCache,

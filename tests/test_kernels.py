@@ -53,6 +53,26 @@ def test_stream_copy_sweep(shape, block, dtype, out_dtype, key):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
+@pytest.mark.parametrize("shape", [(1, 8), (7, 16), (100, 16), (300, 8),
+                                   (513, 4), (5, 1), (64, 3), (1024, 128)])
+@pytest.mark.parametrize("block", [4, 64, 256])
+def test_stream_copy_ragged_sweep(shape, block, key):
+    """Row counts need not divide ``block_rows``: the double-buffered
+    migration kernel ships the ragged tail through its dedicated staging
+    slot, overlapped with the full-chunk pipeline (ISSUE 7)."""
+    x = jax.random.normal(key, shape, jnp.float32)
+    out = sc_ops.stream_copy(x, block_rows=block)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    # fused dtype casts on the same ragged shapes, both directions
+    down = sc_ops.stream_copy(x, out_dtype=jnp.bfloat16, block_rows=block)
+    np.testing.assert_array_equal(
+        np.asarray(down), np.asarray(sc_ref.stream_copy(x, jnp.bfloat16)))
+    xb = x.astype(jnp.bfloat16)
+    up = sc_ops.stream_copy(xb, out_dtype=jnp.float32, block_rows=block)
+    np.testing.assert_array_equal(
+        np.asarray(up), np.asarray(sc_ref.stream_copy(xb, jnp.float32)))
+
+
 @pytest.mark.parametrize("B,H,K,hd,T,block", [
     (2, 8, 2, 32, 128, 32), (1, 4, 4, 64, 256, 64),
     (3, 8, 1, 16, 64, 64), (2, 16, 16, 32, 128, 128)])
