@@ -12,3 +12,15 @@ for frac in (0.0, 0.5, 1.0):
         "--max-batch", "4", "--max-len", "64", "--new-tokens", "8",
         "--slow-fraction", str(frac), "--page-t", "8",
     ])
+
+# Shared-prefix batch: every request repeats the same 24-token system
+# prompt, so after the first request seeds the pool the rest attach the
+# prefix pages by reference and replay only their 4-token suffixes.
+print("\n== shared-prefix batch (prefix pool + cost admission) ==")
+serve_mod.main([
+    "--arch", "internvl2-2b", "--tiny", "--requests", "8",
+    "--max-batch", "4", "--max-len", "64", "--new-tokens", "8",
+    "--slow-fraction", "0.5", "--page-t", "8",
+    "--shared-prefix", "24", "--prefix-pages", "16",
+    "--admission", "cost", "--latency-every", "4",
+])

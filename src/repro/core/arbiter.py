@@ -361,17 +361,28 @@ class CaptionArbiter:
                  else tuple(slow_name))
         dt = max(counters.seconds, 1e-9)
         per_dev = {n: counters.bytes_into(n, source=name) for n in names}
+        per_dev_out = {n: counters.bytes_from(n, source=name) for n in names}
         billed = sum(per_dev.values())
         if billed == 0 and not any(counters.source_route_bytes.values()):
             # This window saw no attributed bytes at all (zero-delta keys
             # from past epochs don't count): legacy single-buffer telemetry,
             # bill the raw route bytes.
             per_dev = {n: counters.bytes_into(n) for n in names}
+            per_dev_out = {n: counters.bytes_from(n) for n in names}
             billed = sum(per_dev.values())
         # The drift signal must also be THIS buffer's traffic: raw route
         # bytes would let a co-tenant's ramp-up spuriously re-open a quiet
-        # buffer's converged walk.
-        metrics = dataclasses.replace(metrics, slow_bw=billed / dt)
+        # buffer's converged walk.  The per-device vectors get the same
+        # source-billed treatment so the guardrails' split stays coherent.
+        dev_bw = {}
+        dev_wr = {}
+        for n in names:
+            tot = per_dev[n] + per_dev_out[n]
+            dev_bw[n] = per_dev[n] / dt
+            dev_wr[n] = per_dev[n] / tot if tot else 0.0
+        metrics = dataclasses.replace(
+            metrics, slow_bw=billed / dt, device_slow_bw=dev_bw,
+            device_write_ratio=dev_wr)
         return self.observe(
             name, metrics, slow_bw=billed / dt,
             device_bw={n: b / dt for n, b in per_dev.items()})

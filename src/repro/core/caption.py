@@ -112,19 +112,46 @@ class CaptionConfig:
 
 @dataclasses.dataclass(frozen=True)
 class EpochMetrics:
-    """What one epoch tells the controller (derived from EpochCounters)."""
+    """What one epoch tells the controller (derived from EpochCounters).
+
+    ``write_ratio`` and ``slow_bw`` stay as POOL AGGREGATES for
+    back-compat (every pre-split constructor call keeps meaning what it
+    meant); the per-device vectors carry the same quantities split per
+    slow device, so one device's write storm no longer damps growth
+    toward all of them and the drift detector can tell WHICH device's
+    route shifted.  Use :meth:`write_ratio_for` / :meth:`slow_bw_for`,
+    which fall back to the aggregate when the split is absent (hand-built
+    metrics in older tests/benchmarks)."""
 
     #: application progress per second (tokens/s, samples/s, steps/s...).
     throughput: float
-    #: written / (read + written) bytes this epoch.
+    #: written / (read + written) bytes this epoch (whole slow pool).
     write_ratio: float = 0.0
     #: peak concurrent writers into the slow tier this epoch.
     writer_concurrency: int = 0
     #: fast-tier occupancy in [0, 1].
     fast_pressure: float = 0.0
     #: observed slow-route bandwidth this epoch (bytes/s, both directions)
-    #: — the workload-shift drift signal.
+    #: — the workload-shift drift signal (whole slow pool).
     slow_bw: float = 0.0
+    #: per-device write ratio: {device name: written/(read+written)}.
+    device_write_ratio: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    #: per-device slow-route bandwidth (bytes/s, both directions).
+    device_slow_bw: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def write_ratio_for(self, name: Optional[str]) -> float:
+        """Device ``name``'s write ratio; the pool aggregate when the
+        split was not populated (or no name is known)."""
+        if name is not None and name in self.device_write_ratio:
+            return self.device_write_ratio[name]
+        return self.write_ratio
+
+    def slow_bw_for(self, name: Optional[str]) -> float:
+        if name is not None and name in self.device_slow_bw:
+            return self.device_slow_bw[name]
+        return self.slow_bw
 
     @staticmethod
     def from_counters(counters, *, throughput: float,
@@ -132,11 +159,21 @@ class EpochMetrics:
         """Derive the guardrail inputs from an EpochCounters window.
 
         ``slow_name`` is one tier name or a sequence of them (multi-device
-        topologies bill every slow device into the same guardrails)."""
+        topologies get both the pool aggregate and the per-device split)."""
         names = ((slow_name,) if isinstance(slow_name, str)
                  else tuple(slow_name))
-        into_slow = sum(counters.bytes_into(n) for n in names)
-        from_slow = sum(counters.bytes_from(n) for n in names)
+        dt = max(counters.seconds, 1e-9)
+        dev_wr: dict[str, float] = {}
+        dev_bw: dict[str, float] = {}
+        into_slow = from_slow = 0
+        for n in names:
+            into = counters.bytes_into(n)
+            out = counters.bytes_from(n)
+            tot = into + out
+            dev_wr[n] = into / tot if tot else 0.0
+            dev_bw[n] = tot / dt
+            into_slow += into
+            from_slow += out
         total = into_slow + from_slow
         return EpochMetrics(
             throughput=throughput,
@@ -144,7 +181,9 @@ class EpochMetrics:
             writer_concurrency=int(
                 counters.gauges.get("writer_concurrency", 0)),
             fast_pressure=float(counters.gauges.get("fast_pressure", 0.0)),
-            slow_bw=total / max(counters.seconds, 1e-9),
+            slow_bw=total / dt,
+            device_write_ratio=dev_wr,
+            device_slow_bw=dev_bw,
         )
 
 
@@ -250,6 +289,7 @@ class CaptionController:
         self._coord_start = self.weights[0]
         self._stale = 0  # consecutive coords that converged without moving
         self._hold_bw: Optional[float] = None  # drift reference (CONVERGED)
+        self._hold_bw_dev: dict[str, float] = {}  # per-device references
         self.history: list[Decision] = []
 
     def _spread(self, fraction: float) -> tuple[float, ...]:
@@ -432,22 +472,45 @@ class CaptionController:
     def _check_drift(self, metrics: EpochMetrics) -> Optional[Decision]:
         """While CONVERGED, watch the EWMA slow-route bandwidth; a drift
         beyond ``drift_threshold`` re-opens the walk (the §7 follow-up:
-        Caption must notice the workload changed under it)."""
+        Caption must notice the workload changed under it).
+
+        With the per-device split each device's route is tracked against
+        its own hold reference, so the detector names WHICH device
+        shifted and a compensating shift (one route up, another down,
+        aggregate flat) still re-opens the walk."""
         if self.cfg.drift_threshold <= 0:
             return None
-        bw = metrics.slow_bw
+        # Per-device references when the split is populated; otherwise the
+        # aggregate route (hand-built metrics, single-device topologies).
+        samples = (dict(metrics.device_slow_bw) or
+                   {"<pool>": metrics.slow_bw})
         if self._hold_bw is None:
-            self._hold_bw = bw
+            self._hold_bw = metrics.slow_bw
+            self._hold_bw_dev = dict(samples)
             return None
-        rel = abs(bw - self._hold_bw) / max(self._hold_bw, 1.0)
-        if rel <= self.cfg.drift_threshold:
+        worst_rel, worst_dev = 0.0, None
+        for name, bw in samples.items():
+            held = self._hold_bw_dev.get(name)
+            if held is None:  # route appeared mid-hold (elastic add)
+                self._hold_bw_dev[name] = bw
+                continue
+            rel = abs(bw - held) / max(held, 1.0)
+            if rel > worst_rel:
+                worst_rel, worst_dev = rel, name
+        if worst_rel <= self.cfg.drift_threshold:
             a = self.cfg.ewma_alpha
-            self._hold_bw = a * bw + (1 - a) * self._hold_bw
+            self._hold_bw = (a * metrics.slow_bw
+                             + (1 - a) * self._hold_bw)
+            for name, bw in samples.items():
+                self._hold_bw_dev[name] = (
+                    a * bw + (1 - a) * self._hold_bw_dev[name])
             return None
         self._reopen()
+        where = "" if worst_dev in (None, "<pool>") else f" on {worst_dev}"
         return self._emit(
             False,
-            f"route-bw drift {rel*100:+.0f}%: workload shift, re-probing",
+            f"route-bw drift {worst_rel*100:+.0f}%{where}: workload "
+            "shift, re-probing",
             phase=Phase.MEASURE)
 
     def _reopen(self) -> None:
@@ -463,6 +526,7 @@ class CaptionController:
         self._coord = 0
         self._coord_start = self.weights[0]
         self._hold_bw = None
+        self._hold_bw_dev = {}
 
     # -- the hill-climb ------------------------------------------------------
     def _adjust(self, metrics: EpochMetrics) -> Decision:
@@ -534,10 +598,13 @@ class CaptionController:
             delta = 0.0
             notes.append(
                 f"writers {m.writer_concurrency} > {self.cfg.writer_limit}")
-        if delta > 0 and self.cfg.write_damp and m.write_ratio > 0:
+        if delta > 0 and self.cfg.write_damp:
             dev = self._active_spec()
-            if dev is not None:
-                damp = 1.0 - m.write_ratio * (1.0 - dev.store_bw / dev.load_bw)
+            # The damp is per ACTIVE device: only ITS write share matters
+            # (a write storm on CXL-B must not damp growth toward CXL-A).
+            wr = m.write_ratio_for(dev.name if dev is not None else None)
+            if dev is not None and wr > 0:
+                damp = 1.0 - wr * (1.0 - dev.store_bw / dev.load_bw)
                 delta *= max(damp, 0.0)
                 if damp < 1.0:
                     notes.append(f"write-damped x{damp:.2f}")
@@ -606,6 +673,7 @@ class CaptionController:
         self._epochs_here = 0
         if phase == Phase.CONVERGED:
             self._hold_bw = None  # fresh drift reference at the hold point
+            self._hold_bw_dev = {}
         return self._emit(changed, reason, phase=phase)
 
     def _emit(self, changed: bool, reason: str,

@@ -113,6 +113,18 @@ def _place_part(part: jax.Array, ordinal: int, backend: str) -> jax.Array:
 #: lower toward 1 for finer spreading (1 = legacy page-at-a-time).
 DEFAULT_RUN_PAGES = 16
 
+#: gather-crossover cost model (ISSUE 8 satellite), calibrated on the CPU
+#: backend: the masked gather pays one eager pass per non-empty shard
+#: (fixed dispatch + per-byte XLA work over the WHOLE batch each pass);
+#: the bucketed gather pays one host base (route + jnp.asarray hand-back)
+#: plus per-row numpy fancy-indexing overhead.  ``choose_gather_path``
+#: compares the two estimates per call.
+_GATHER_DISPATCH_S = 45e-6  #: per eager-op dispatch, per shard pass
+_GATHER_XLA_PER_BYTE = 0.0002e-6  #: masked per-byte cost, per shard pass
+_GATHER_HOST_BASE_S = 100e-6  #: bucketed fixed cost (route + hand-back)
+_GATHER_HOST_PER_ROW = 0.05e-6  #: numpy fancy-indexing per-row overhead
+_GATHER_HOST_PER_BYTE = 0.0003e-6  #: bucketed per-byte copy cost
+
 
 def device_page_map(assign: np.ndarray, n_devices: int
                     ) -> tuple[np.ndarray, np.ndarray, list[int]]:
@@ -478,19 +490,47 @@ class InterleavedTensor:
         return dev, local
 
     # -- access --------------------------------------------------------------
+    def choose_gather_path(self, n_rows: int) -> str:
+        """Size-based crossover: ``"masked"`` or ``"bucketed"`` for a
+        concrete gather of ``n_rows`` rows (ISSUE 8 satellite — the
+        bucketed path lost to masked at large batches).
+
+        The masked path pays one full eager pass PER NON-EMPTY SHARD
+        (dispatch + a batch-sized take/where), so its cost scales with
+        shard count and bytes; the bucketed path pays a fixed host base
+        (route + the jnp.asarray hand-back) plus per-row fancy-indexing
+        overhead, independent of shard count.  The constants are
+        calibrated from measured CPU crossovers (2 shards: masked wins
+        from ~1-2K rows; 4 shards: bucketed wins through ~4K rows and
+        keeps winning at any size once rows are wide).  The chosen path
+        is also what ``bench_hotpaths.py`` records in its JSON."""
+        shards = sum(1 for p in self.parts if p.shape[0] > 0) or 1
+        row_bytes = (int(np.prod(self.parts[0].shape[1:]))
+                     * self.parts[0].dtype.itemsize)
+        masked_est = shards * (_GATHER_DISPATCH_S
+                               + n_rows * row_bytes * _GATHER_XLA_PER_BYTE)
+        bucketed_est = (_GATHER_HOST_BASE_S
+                        + n_rows * (_GATHER_HOST_PER_ROW
+                                    + row_bytes * _GATHER_HOST_PER_BYTE))
+        return "bucketed" if bucketed_est < masked_est else "masked"
+
     def gather_rows(self, idx: jax.Array) -> jax.Array:
         """rows[idx] — routed gather across the device shards.
 
-        Concrete indices take the single-pass path: rows are bucketed by
-        owning device (stable argsort), each shard serves one compact
-        take over exactly the rows it owns, and the inverse permutation
-        restores request order — one pass of memory traffic instead of
-        one full masked pass per device.  Traced indices (inside jit)
-        use the masked formulation, which is shape-static.  The two are
-        value-identical (asserted bit-exact by tests/test_hotpaths.py).
+        Concrete indices pick masked vs bucketed per call through
+        :meth:`choose_gather_path`: the bucketed single-pass host gather
+        (rows bucketed by owning device, one compact take per shard, no
+        per-shard full pass) wins at small/mid batches and on many-shard
+        topologies, while the masked N-pass formulation wins at large
+        narrow batches where numpy's per-row overhead dominates.  Traced
+        indices (inside jit) always use the masked formulation, which is
+        shape-static.  The two are value-identical (asserted bit-exact
+        by tests/test_hotpaths.py).
         """
         if _is_concrete(idx, self.page_device, *self.parts):
-            return self._gather_rows_bucketed(np.asarray(idx))
+            if self.choose_gather_path(int(np.asarray(idx).size)) == "bucketed":
+                return self._gather_rows_bucketed(np.asarray(idx))
+            return self._gather_rows_masked(jnp.asarray(idx))
         return self._gather_rows_masked(idx)
 
     def _gather_rows_masked(self, idx: jax.Array) -> jax.Array:

@@ -60,6 +60,8 @@ class Descriptor:
     #: fused on-route dtype cast (compressed staging): the executor casts
     #: while moving, so the bytes on the wire are the POST-cast bytes.
     out_dtype: Optional[Any] = None
+    #: per-descriptor completion handle, set by :meth:`BulkMover.issue`.
+    future: Optional["MoveFuture"] = None
 
     @property
     def nbytes(self) -> int:
@@ -83,6 +85,35 @@ class Completion:
     result: Any
     wall_seconds: float
     modeled_seconds: float
+
+
+class MoveFuture:
+    """Per-descriptor completion handle (the non-blocking issue path).
+
+    ``BulkMover.issue`` attaches one of these to every descriptor and
+    returns them immediately; the drain worker fulfils each as its
+    descriptor executes.  Callers overlap the migration with compute and
+    either poll :meth:`done` at epoch boundaries or fence on
+    :meth:`result` when they genuinely need the moved bytes."""
+
+    __slots__ = ("_event", "_completion")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._completion: Optional[Completion] = None
+
+    def _fulfil(self, completion: Completion) -> None:
+        self._completion = completion
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float = 60.0) -> Completion:
+        if not self._event.wait(timeout):
+            raise TimeoutError("MoveFuture.result timed out")
+        assert self._completion is not None
+        return self._completion
 
 
 def _execute_copy(payload, out_dtype=None):
@@ -330,6 +361,8 @@ class BulkMover:
             comp = Completion(d, result, dt, modeled / len(batch))
             if d.on_done is not None:
                 d.on_done(result)
+            if d.future is not None:
+                d.future._fulfil(comp)
             out.append(comp)
         # One batch record per route present (submission batches are
         # route-pure, but sync callers may hand-build mixed batches; each
@@ -383,6 +416,30 @@ class BulkMover:
             for b in self._schedule(descs):
                 self._queue.put((b[0].lane, next(self._seq), b))
         return []
+
+    def issue(self, descs: Sequence[Descriptor]) -> list["MoveFuture"]:
+        """Non-blocking submit: returns one :class:`MoveFuture` per
+        descriptor instead of fencing.  In async mode the call returns as
+        soon as the batches are queued — the caller's decode steps run
+        while the drain pool streams the copies, and completions are
+        collected at the next epoch boundary (``poll`` /
+        ``Future.done``).  In sync mode the copies execute inline and the
+        futures come back already fulfilled, so callers need no mode
+        branch."""
+        descs = list(descs)
+        futures = []
+        for d in descs:
+            if d.future is None:
+                d.future = MoveFuture()
+            futures.append(d.future)
+        self.submit(descs)
+        return futures
+
+    @property
+    def pending(self) -> int:
+        """Descriptors submitted but not yet executed (async backlog)."""
+        with self._pending_lock:
+            return self._pending
 
     def take_peak_writers(self, device: Optional[str] = None) -> int:
         """Peak concurrent slow-tier writers since last call (then reset).

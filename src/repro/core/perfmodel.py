@@ -266,6 +266,41 @@ def pipelined_move_cost(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class OverlapCost:
+    """Hidden-vs-exposed split of a migration overlapped with compute.
+
+    ``hidden_s`` rides under concurrent decode steps (free); ``exposed_s``
+    is the tail that still stalls the issuing thread.  ``exposed_fraction``
+    is what the serving engine's modeled step time actually pays.
+    """
+
+    move_s: float
+    compute_s: float
+    hidden_s: float
+    exposed_s: float
+
+    @property
+    def exposed_fraction(self) -> float:
+        return self.exposed_s / self.move_s if self.move_s > 0 else 0.0
+
+
+def overlap_cost(move_s: float, compute_s: float) -> OverlapCost:
+    """Split a migration's ``move_s`` into hidden/exposed time given
+    ``compute_s`` of concurrent decode compute it can hide under.
+
+    The async mover issues descriptors non-blocking and drains completions
+    at epoch boundaries, so up to ``compute_s`` of wire time overlaps
+    decode; only the remainder is exposed as a stall (the emucxl-style
+    overlap the paper's DSA asynchrony result, Fig. 4b, predicts).
+    """
+    move_s = max(float(move_s), 0.0)
+    compute_s = max(float(compute_s), 0.0)
+    hidden = min(move_s, compute_s)
+    return OverlapCost(move_s=move_s, compute_s=compute_s,
+                       hidden_s=hidden, exposed_s=move_s - hidden)
+
+
 def chase_seconds(tier: TierSpec, n_hops: int) -> float:
     """Dependent pointer-chase time (Fig. 2 ptr-chase)."""
     return n_hops * _eff(tier).chase_latency_ns * 1e-9

@@ -56,6 +56,22 @@ class Telemetry:
         with self._lock:
             self.counters[name] += value
 
+    def record_overlap(self, hidden_s: float, exposed_s: float,
+                       source: Optional[str] = None) -> None:
+        """Bill one migration's hidden-vs-exposed split (async mover).
+
+        ``hidden_s`` rode under concurrent decode compute; ``exposed_s``
+        stalled the issuing thread.  Benchmarks read the counters
+        ``migration_hidden_s`` / ``migration_exposed_s`` (optionally
+        per-source) to audit how much wire time the overlap actually hid.
+        """
+        with self._lock:
+            self.counters["migration_hidden_s"] += float(hidden_s)
+            self.counters["migration_exposed_s"] += float(exposed_s)
+            if source is not None:
+                self.counters[f"migration_hidden_s|{source}"] += float(hidden_s)
+                self.counters[f"migration_exposed_s|{source}"] += float(exposed_s)
+
     def route(self, src: str, dst: str) -> RouteStats:
         return self.routes[(src, dst)]
 

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core.arbiter import CaptionArbiter, budgeted_config
 from repro.core.caption import CaptionConfig, CaptionController
+from repro.core.mover import BulkMover
 from repro.core.policy import MemPolicy
 from repro.core.tiers import topology_from_spec
 from repro.models.registry import get as get_arch
@@ -43,6 +44,18 @@ def main(argv=None):
     ap.add_argument("--latency-every", type=int, default=0,
                     help="every Nth request is latency-SLO class (pins its "
                          "KV pages fast); 0 = all batch-class")
+    ap.add_argument("--prefix-pages", type=int, default=0,
+                    help="shared-prefix page pool size; repeated prompt "
+                         "prefixes attach by reference instead of replaying")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of prompt prefix shared across requests "
+                         "(0 = fully independent prompts)")
+    ap.add_argument("--admission", choices=("none", "cost"), default="none",
+                    help="'cost': defer batch-class admissions the perf "
+                         "model predicts would pressure latency pins")
+    ap.add_argument("--async-mover", action="store_true",
+                    help="issue Caption migrations unfenced so they overlap "
+                         "decode compute (drained at epoch boundaries)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -74,19 +87,28 @@ def main(argv=None):
         # its KV controller under it (more buffers would share the pool).
         arbiter = CaptionArbiter(topology,
                                  budgeted_config(topology, args.slow_budget))
+    mover = (BulkMover(topology, asynchronous=True)
+             if args.async_mover else None)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         policy=policy, topology=topology, page_t=args.page_t,
-        caption=caption, arbiter=arbiter)
+        caption=caption, arbiter=arbiter, mover=mover,
+        prefix_pages=args.prefix_pages, admission=args.admission,
+        overlap=args.async_mover)
     rng = np.random.default_rng(0)
+    shared = (rng.integers(0, cfg.vocab_padded,
+                           size=args.shared_prefix).tolist()
+              if args.shared_prefix else [])
     t0 = time.perf_counter()
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_padded, size=4).tolist()
+        prompt = shared + rng.integers(0, cfg.vocab_padded, size=4).tolist()
         slo = ("latency" if args.latency_every
                and i % args.latency_every == 0 else "batch")
         engine.submit(prompt, max_new_tokens=args.new_tokens, slo=slo)
     done = engine.run_until_drained()
     wall = time.perf_counter() - t0
+    if mover is not None:
+        mover.close()
     lats = sorted(r.latency for r in done)
     modeled = sorted(r.modeled_seconds for r in done)
     p99 = lats[int(len(lats) * 0.99) - 1] if len(lats) > 1 else lats[0]
@@ -104,6 +126,19 @@ def main(argv=None):
         print(f"arbiter: budget={arbiter.cfg.slow_bw_budget:.3g} B/s "
               f"demand={arbiter.aggregate_demand_bw():.3g} B/s "
               f"grants={ {k: f'{v:.3g}' for k, v in arbiter.grants().items()} }")
+    if args.prefix_pages:
+        idx = engine.prefix_index
+        print(f"prefix: hits={idx.hits} misses={idx.misses} "
+              f"pages={idx.allocated_pages()} cow={idx.cow_copies} "
+              f"evictions={idx.evictions} "
+              f"prefill_avoided={engine.prefill_tokens_avoided}"
+              f"/{engine.prefill_tokens_total}")
+    if args.admission != "none":
+        print(f"admission: deferrals={engine.admission_deferrals}")
+    if args.async_mover:
+        print(f"overlap: stall={engine.migration_stall_s*1e3:.1f}ms "
+              f"hidden={engine.migration_hidden_s*1e3:.3f}ms "
+              f"exposed={engine.migration_exposed_s*1e3:.3f}ms")
     return done
 
 

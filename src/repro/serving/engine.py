@@ -24,6 +24,7 @@ from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY, EpochWindow
 from repro.core.tiers import OpClass, TierTopology
 from repro.serving.kv_cache import TieredKVCache, tiered_decode_step
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import sample_greedy
 
 
@@ -67,6 +68,12 @@ class ServingEngine:
         mover=None,
         telemetry=GLOBAL_TELEMETRY,
         donate_kv: bool = True,
+        prefix_pages: int = 0,
+        admission: str = "none",
+        admission_watermark: float = 0.9,
+        admission_max_defer: int = 64,
+        admission_capacity_bytes: Optional[int] = None,
+        overlap: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -85,6 +92,39 @@ class ServingEngine:
         self.cache = TieredKVCache.create(
             cfg, max_batch, max_len, policy, page_t=page_t,
             slow_headroom=slow_headroom)
+        # Shared-prefix paged KV (ISSUE 8): the pool is created up front
+        # (pytree child — the jitted decode treedef must not change
+        # mid-run) and indexed by a host-side refcounted radix trie.
+        self.prefix_index: Optional[PrefixCache] = None
+        if prefix_pages > 0:
+            self.cache = self.cache.with_prefix(int(prefix_pages))
+            self.prefix_index = PrefixCache(int(prefix_pages),
+                                            min(page_t, max_len))
+        self._slot_refs: dict[int, list] = {}
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_avoided = 0
+        # Cost-model admission (ISSUE 8): batch-class requests whose
+        # predicted fast-tier footprint would pressure latency-class
+        # pins are deferred (bounded by ``admission_max_defer`` steps).
+        if admission not in ("none", "cost"):
+            raise ValueError(f"admission must be 'none' or 'cost': "
+                             f"{admission!r}")
+        self.admission = admission
+        self.admission_watermark = float(admission_watermark)
+        self.admission_max_defer = int(admission_max_defer)
+        self.admission_capacity_bytes = admission_capacity_bytes
+        self.admission_deferrals = 0
+        self._defer_steps = 0
+        # Async migration/compute overlap (ISSUE 8): Caption actuations
+        # submit mover descriptors WITHOUT fencing; decode keeps running
+        # and completions drain at the next epoch boundary.  Hidden vs
+        # exposed migration time is modeled via perfmodel.overlap_cost.
+        self.overlap = bool(overlap)
+        self.migration_stall_s = 0.0
+        self.migration_hidden_s = 0.0
+        self.migration_exposed_s = 0.0
+        self._inflight_move_bytes = 0
+        self._inflight_compute_s = 0.0
         # Engine-owned actuations (Caption repartitions, SLO pins, elastic
         # drains) always replace ``self.cache`` with the retiled cache, so
         # the parent provably dies — exactly the donation contract.  With
@@ -218,6 +258,18 @@ class ServingEngine:
                 name, self.pinned_slots, weights=target, mover=self.mover,
                 telemetry=self.telemetry, policy_names=self._device_names,
                 source=self.buffer_name, donate=self.donate_kv)
+            if self.cache.prefix is not None:
+                # shared pool pages evacuate the dead device too — each
+                # page ships once (refcount-deduplicated), to fast
+                ord_ = self.cache.device_names.index(name)
+                pdev = np.asarray(self.cache.prefix.page_device)
+                if (pdev == ord_).any():
+                    new = pdev.copy()
+                    new[pdev == ord_] = 0
+                    self.cache = self.cache.retile_prefix(
+                        new, mover=self.mover, telemetry=self.telemetry,
+                        policy_names=self._device_names,
+                        source=self.buffer_name)
         self.topology = new_topo
         if self.mover is not None and name in self.mover.topology.slow_names:
             self.mover.update_topology(
@@ -267,7 +319,12 @@ class ServingEngine:
     def _admit(self) -> None:
         for i, s in enumerate(self.slots):
             if s is None and self.queue:
+                if not self._admission_ok(self.queue[0]):
+                    # FIFO head deferred: later requests wait behind it
+                    # (ordering preserved; starvation-bounded).
+                    break
                 req = self.queue.pop(0)
+                self._defer_steps = 0
                 self.slots[i] = req
                 # Latency-SLO admission: pin the slot's pages fast before
                 # prefill (migration rides the mover's latency lane).
@@ -277,10 +334,126 @@ class ServingEngine:
                         fast_tier=self._fast_name, slow_tier=self._slow_name,
                         source=self.buffer_name, donate=self.donate_kv)
                     self.pinned_slots.add(i)
-                # prefill by decode-replay into this slot (exact; slot-local)
                 self._reset_slot(i)
-                for tok in req.prompt[:-1]:
+                # Shared-prefix fast path: attach the longest cached
+                # prefix by reference and replay ONLY the suffix — the
+                # decode-replay prefill (exact; slot-local) starts at
+                # the shared boundary instead of token zero.
+                shared = 0
+                if self.prefix_index is not None:
+                    shared = self._attach_prefix(i, req)
+                for tok in req.prompt[shared:-1]:
                     self._step_slot_token(i, tok)
+                if self.prefix_index is not None:
+                    self._promote_prefix(i, req)
+                self.prefill_tokens_total += max(len(req.prompt) - 1, 0)
+                self.prefill_tokens_avoided += shared
+
+    # -- shared-prefix attach / CoW / promotion --------------------------------
+    def _attach_prefix(self, i: int, req: Request) -> int:
+        """Match ``req``'s prompt in the prefix index; map fully-matched
+        pages into slot ``i`` by reference and copy-on-write the head of
+        a partially-matched page into the slot's own tier.  Returns the
+        number of prompt tokens the replay loop can skip."""
+        idx = self.prefix_index
+        nodes, partial, plen = idx.match(req.prompt)
+        Pm = self.cache.prefix.slot_pages.shape[1]
+        nodes = nodes[:Pm]
+        full_rows = len(nodes) * self.cache.page_t
+        if nodes:
+            idx.acquire(nodes)
+            self._slot_refs[i] = nodes
+            self.cache = self.cache.attach_prefix(
+                i, [n.page for n in nodes])
+        if partial is not None and plen > 0:
+            # Copy-on-write at the divergence point: the writer gets a
+            # PRIVATE copy of the matched head in its own tier-placed
+            # pages; the shared page stays immutable for its readers.
+            idx.touch(partial)
+            idx.cow_copies += 1
+            blk = self.cache.prefix
+            k_rows = np.asarray(blk.k)[:, partial.page, :plen]
+            v_rows = np.asarray(blk.v)[:, partial.page, :plen]
+            self.cache = self.cache.write_token_rows(
+                i, full_rows, k_rows, v_rows)
+            src_ord = int(np.asarray(blk.page_device)[partial.page])
+            dst_ord = int(self.cache._host_dev()[i][full_rows
+                                                    // self.cache.page_t])
+            names = self._device_names
+            if src_ord != dst_ord and max(src_ord, dst_ord) < len(names):
+                row_b = (self.cache._page_kv_bytes()
+                         * plen // self.cache.page_t)
+                self.telemetry.record_move(
+                    names[src_ord], names[dst_ord], row_b, 0.0,
+                    source=self.buffer_name)
+        return full_rows + plen
+
+    def _promote_prefix(self, i: int, req: Request) -> None:
+        """After prefill, publish the prompt's novel full pages into the
+        shared pool so the NEXT request with this prefix shares them."""
+        placed = self.prefix_index.insert(req.prompt,
+                                          self._slot_refs.get(i, []))
+        if not placed:
+            return
+        pt = self.cache.page_t
+        ks, vs = [], []
+        for pno, _node in placed:
+            k_pg, v_pg = self.cache.gather_token_rows(i, pno * pt, pt)
+            ks.append(k_pg)
+            vs.append(v_pg)
+        self.cache = self.cache.write_prefix_pages(
+            [n.page for _, n in placed],
+            np.stack(ks, axis=1), np.stack(vs, axis=1), device=0)
+
+    # -- cost-model admission ---------------------------------------------------
+    def _admission_ok(self, req: Request) -> bool:
+        """Admit unless the predicted fast-tier footprint (per-device KV
+        bytes at the current operating point, plus this request's slot)
+        would crowd latency-class pins AND the demotion migration that
+        admission forces cannot hide inside an epoch of decode."""
+        if (self.admission != "cost" or req.slo == "latency"
+                or self.topology is None):
+            return True
+        if self._defer_steps >= self.admission_max_defer:
+            return True  # starvation bound: the head request gets in
+        item = self.cache.k_fast.dtype.itemsize
+        L, B = self.cache.k_fast.shape[:2]
+        K, hd = self.cache.k_fast.shape[3:]
+        slot_bytes = 2 * L * self.max_len * K * hd * item
+        f = self.cache.slow_fraction(self.pinned_slots)
+        n_lat = len(self.pinned_slots)
+        n_batch = sum(1 for j, r in enumerate(self.slots)
+                      if r is not None and j not in self.pinned_slots) + 1
+        pfx_fast = 0
+        if self.cache.prefix is not None:
+            pdev = np.asarray(self.cache.prefix.page_device)
+            pfx_fast = (int((pdev == 0).sum())
+                        * self.cache._page_kv_bytes())
+        predicted = (n_lat * slot_bytes
+                     + n_batch * slot_bytes * (1.0 - f) + pfx_fast)
+        cap = (self.admission_capacity_bytes
+               if self.admission_capacity_bytes is not None
+               else self.topology.fast.capacity_bytes)
+        cap *= self.admission_watermark
+        if predicted <= cap or n_lat == 0 or self.topology.slow is None:
+            return True
+        # Over the watermark with live pins: admission would force the
+        # excess fast bytes onto the slow tier.  Model that demotion as
+        # a pipelined stream_copy and admit only if it hides entirely
+        # under one epoch of decode compute.
+        excess = int(predicted - cap)
+        mc = perfmodel.pipelined_move_cost(
+            self.topology.fast, self.topology.slow, excess,
+            asynchronous=True)
+        epoch_steps = (self.caption.cfg.epoch_steps
+                       if self.caption is not None else 8)
+        oc = perfmodel.overlap_cost(
+            mc.seconds, self.modeled_step_seconds() * epoch_steps)
+        if oc.exposed_s <= 0.0:
+            return True
+        self.admission_deferrals += 1
+        self._defer_steps += 1
+        return False
 
     def _reset_slot(self, i: int) -> None:
         self.cache = dataclasses.replace(
@@ -359,19 +532,100 @@ class ServingEngine:
                 req.finished_at = now
                 self.done.append(req)
                 self.slots[i] = None
+                if self.prefix_index is not None:
+                    # drop the slot's shared-page references (refcounts
+                    # fall; pages stay cached for the next match)
+                    self.prefix_index.release(self._slot_refs.pop(i, []))
+                    self.cache = self.cache.detach_prefix(i)
                 self._reset_slot(i)
                 # slot rejoins the batch-class repartition population
                 self.pinned_slots.discard(i)
         self._steps += 1
         self._epoch_tokens += len(active)
         self._epoch_modeled_s += step_model_s
+        if self._inflight_move_bytes:
+            self._inflight_compute_s += step_model_s
         if (self.caption is not None
                 and self._steps % self.caption.cfg.epoch_steps == 0):
             self._caption_epoch()
         return len(active)
 
+    # -- async migration/compute overlap (ISSUE 8) ----------------------------
+    def _modeled_move_seconds(self, nbytes: int) -> float:
+        """Modeled duration of an in-flight bulk migration (fast<->slow
+        pipelined stream_copy on the primary slow route)."""
+        if nbytes <= 0 or self.topology is None or self.topology.slow is None:
+            return 0.0
+        return perfmodel.pipelined_move_cost(
+            self.topology.fast, self.topology.slow, int(nbytes),
+            asynchronous=True).seconds
+
+    def _drain_migrations(self) -> None:
+        """Epoch-boundary fence for overlap mode: collect completions of
+        migrations issued without a fence, charge the wall time actually
+        spent waiting as stall, and split the modeled move time into
+        hidden (ran under decode compute) vs exposed."""
+        if self._inflight_move_bytes == 0:
+            return
+        if self.mover is not None and self.mover.asynchronous:
+            t0 = time.perf_counter()
+            self.mover.wait_all()
+            self.migration_stall_s += time.perf_counter() - t0
+        oc = perfmodel.overlap_cost(
+            self._modeled_move_seconds(self._inflight_move_bytes),
+            self._inflight_compute_s)
+        self.telemetry.record_overlap(oc.hidden_s, oc.exposed_s,
+                                      source=self.buffer_name)
+        self.migration_hidden_s += oc.hidden_s
+        self.migration_exposed_s += oc.exposed_s
+        self._inflight_move_bytes = 0
+        self._inflight_compute_s = 0.0
+
+    def _account_actuation(self, moved_bytes: int, stall_s: float) -> None:
+        if moved_bytes <= 0:
+            return
+        if self.overlap and self.mover is not None \
+                and self.mover.asynchronous:
+            # unfenced: the move runs under the next epoch's decode
+            self._inflight_move_bytes += moved_bytes
+        else:
+            # fenced: the whole move is exposed decode stall
+            move_s = self._modeled_move_seconds(moved_bytes)
+            self.telemetry.record_overlap(0.0, move_s,
+                                          source=self.buffer_name)
+            self.migration_exposed_s += move_s
+            self.migration_stall_s += stall_s
+
+    def _retier_prefix(self, fraction: float, *, wait: bool = True) -> None:
+        """Tier-aware shared-page placement, actuated with the epoch's
+        Caption decision: pages referenced by live slots are
+        latency-critical and stay fast; unreferenced (cached-only) pages
+        follow the batch population onto the slow tier.  Moves bill each
+        page ONCE whatever its refcount — deduplicated traffic."""
+        blk = self.cache.prefix
+        if blk is None or self.prefix_index is None:
+            return
+        if len(self.cache.device_names) < 2:
+            return
+        pdev = np.asarray(blk.page_device)
+        alloc = np.nonzero(pdev >= 0)[0]
+        if alloc.size == 0:
+            return
+        rc = self.prefix_index.page_refcounts()
+        new = pdev.copy()
+        for pg in alloc:
+            hot = rc.get(int(pg), 0) > 0
+            new[pg] = 0 if (hot or fraction <= 0.0) else 1
+        self.cache = self.cache.retile_prefix(
+            new, mover=self.mover, telemetry=self.telemetry,
+            policy_names=self._device_names, source=self.buffer_name,
+            wait=wait)
+
     # -- Caption control loop (§7): sample -> decide -> re-tier ---------------
     def _caption_epoch(self) -> None:
+        # Previous epoch's unfenced migrations ran under this epoch's
+        # decode steps — drain them before issuing new movement.
+        self._drain_migrations()
         # Surface this epoch's modeled KV traffic as route counters, then
         # close the observation window: the controller reads EpochCounters
         # (bandwidths, write share, gauges), not hand-rolled numbers.
@@ -443,6 +697,9 @@ class ServingEngine:
         if abs(decision.fraction - before) > 1e-9 or (
                 multi and decision.changed):
             active = self._active_slow_names()
+            b0 = self.mover.bytes_submitted if self.mover is not None else 0
+            t0 = time.perf_counter()
+            wait = not self.overlap
             if multi and (len(decision.weights) > 1
                           or (active and active[0] in self._device_names)):
                 # Expand the controller's live-device weight vector onto
@@ -454,14 +711,19 @@ class ServingEngine:
                     pinned_slots=self.pinned_slots,
                     mover=self.mover, telemetry=self.telemetry,
                     policy_names=self._device_names, source=src,
-                    donate=self.donate_kv)
+                    donate=self.donate_kv, wait=wait)
             else:
                 self.cache = self.cache.repartition_fraction(
                     decision.fraction, pinned_slots=self.pinned_slots,
                     mover=self.mover,
                     telemetry=self.telemetry, fast_tier=self._fast_name,
                     slow_tier=self._slow_name, source=src,
-                    donate=self.donate_kv)
+                    donate=self.donate_kv, wait=wait)
+            if self.cache.prefix is not None:
+                self._retier_prefix(decision.fraction, wait=wait)
+            moved = ((self.mover.bytes_submitted - b0)
+                     if self.mover is not None else 0)
+            self._account_actuation(moved, time.perf_counter() - t0)
             # Page rounding may achieve less (or none) of the request: the
             # controller must continue from the real operating point.  With
             # zero tunable slots (everything SLO-pinned) there IS no
@@ -481,4 +743,5 @@ class ServingEngine:
         while (self.queue or any(self.slots)) and steps < max_steps:
             self.step()
             steps += 1
+        self._drain_migrations()
         return self.done

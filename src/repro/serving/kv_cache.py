@@ -49,6 +49,7 @@ from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY
 from repro.models import attention as attn
 from repro.models.common import apply_norm, dtype_of, mlp_apply
+from repro.serving.prefix_cache import NO_PAGE, PrefixBlock
 
 _INT32_MAX = np.iinfo(np.int32).max
 
@@ -166,19 +167,27 @@ class TieredKVCache:
     #: O(Δ) stable path and never change the decode step's shapes (zero
     #: retraces across probe epochs).
     slow_headroom: int = 0
+    #: shared-prefix page pool (ISSUE 8) — ``None`` disables sharing and
+    #: keeps the legacy treedef.  When set, decode attends one extra
+    #: partition of referenced pool pages; a slot's own pool rows below
+    #: its ``slot_shared`` boundary are pos-sentineled out of attention
+    #: (the reference serves those positions instead).
+    prefix: Optional[PrefixBlock] = None
 
     def tree_flatten(self):
         children = (tuple(self.k_parts), tuple(self.v_parts), self.lengths,
-                    self.page_local, tuple(self.pos_parts), self.page_device)
+                    self.page_local, tuple(self.pos_parts), self.page_device,
+                    self.prefix)
         return children, (self.page_t, self.device_names,
                           self.slow_headroom)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        k_parts, v_parts, lengths, page_local, pos_parts, page_device = children
+        (k_parts, v_parts, lengths, page_local, pos_parts, page_device,
+         prefix) = children
         return cls(tuple(k_parts), tuple(v_parts), lengths, page_local,
                    tuple(pos_parts), page_device, page_t=aux[0],
-                   device_names=aux[1], slow_headroom=aux[2])
+                   device_names=aux[1], slow_headroom=aux[2], prefix=prefix)
 
     # -- two-pool compatibility views ------------------------------------------
     @property
@@ -313,10 +322,16 @@ class TieredKVCache:
         slow_pages = tiers.sum(axis=1)
         fast_rows = int(np.maximum((n_pages - slow_pages), 1).sum()) * self.page_t
         slow_rows = int(slow_pages.sum()) * self.page_t
-        return {
+        out = {
             "fast": 2 * L * fast_rows * K * hd * item,
             "slow": 2 * L * slow_rows * K * hd * item,
         }
+        # Prefix references READ per referencing slot (every reader
+        # streams the rows), unlike storage/migration, billed once.
+        for dev_ord, n_refs in self._prefix_ref_pages().items():
+            key = "fast" if dev_ord == 0 else "slow"
+            out[key] += n_refs * self._page_kv_bytes()
+        return out
 
     def read_bytes_per_device(self) -> dict[str, int]:
         """Per-device decode-step read bytes, keyed by device name — the
@@ -328,11 +343,14 @@ class TieredKVCache:
         K, hd = self.k_parts[0].shape[3:]
         dev = self._host_dev()
         out = {}
+        ref_pages = self._prefix_ref_pages()
         for i, name in enumerate(self.device_names):
             pages = (dev == i).sum(axis=1)
             if i == 0:
                 pages = np.maximum(pages, 1)  # >= 1 fast page per slot
-            out[name] = 2 * L * int(pages.sum()) * self.page_t * K * hd * item
+            out[name] = (2 * L * int(pages.sum()) * self.page_t * K * hd
+                         * item
+                         + ref_pages.get(i, 0) * self._page_kv_bytes())
         return out
 
     def storage_bytes_per_device(self) -> dict[str, int]:
@@ -345,10 +363,32 @@ class TieredKVCache:
         L = self.k_parts[0].shape[0]
         K, hd = self.k_parts[0].shape[3:]
         out = {}
+        pfx_dev = (np.asarray(self.prefix.page_device)
+                   if self.prefix is not None else None)
         for i, name in enumerate(self.device_names):
             rows = int((np.asarray(self.pos_parts[i]) != _INT32_MAX).sum())
             out[name] = 2 * L * rows * K * hd * item
+            if pfx_dev is not None:
+                # shared pool pages occupy storage ONCE, however many
+                # slots reference them — the dedup Caption observes.
+                out[name] += (int((pfx_dev == i).sum())
+                              * self._page_kv_bytes())
         return out
+
+    def _prefix_ref_pages(self) -> dict[int, int]:
+        """Per-device ordinal count of prefix-page REFERENCES held by
+        slots (a page referenced by r slots counts r times — every
+        reader streams it each decode step)."""
+        if self.prefix is None:
+            return {}
+        sp = np.asarray(self.prefix.slot_pages)
+        pdev = np.asarray(self.prefix.page_device)
+        refs = sp[sp >= 0]
+        if refs.size == 0:
+            return {}
+        devs = pdev[refs]
+        return {int(d): int((devs == d).sum()) for d in np.unique(devs)
+                if d >= 0}
 
     def capacity_pages(self) -> tuple:
         """Per-device pool capacity in pages per slot."""
@@ -501,7 +541,7 @@ class TieredKVCache:
         return groups
 
     def _ship_retile(self, groups, old_dev, new_dev, old_local, route, *,
-                     mover, telemetry, source, lane) -> None:
+                     mover, telemetry, source, lane, wait=True) -> None:
         """Movement metering on real device routes — including
         slow->slow hops (the paper's C2C class).  Moved pages coalesce
         into route-pure runs of consecutive source locals; each run is
@@ -541,8 +581,13 @@ class TieredKVCache:
                         src, dst, page_kv_bytes * len(slots) * run,
                         0.0, source=source)
         if mover is not None:
-            mover.submit(descs)  # one submission: descriptors batch (§6)
-            if mover.asynchronous:
+            # One submission: descriptors batch (§6).  ``wait=False`` is
+            # the overlap path — descriptor payloads are fancy-indexed
+            # copies, so the drain pool can stream them while the caller
+            # keeps decoding; the engine drains completions at the next
+            # epoch boundary and accounts hidden vs exposed time.
+            mover.submit(descs)
+            if wait and mover.asynchronous:
                 mover.wait_all()
 
     def _retile(self, new_dev: np.ndarray, *, mover=None,
@@ -550,8 +595,8 @@ class TieredKVCache:
                 slow_tier: Optional[str] = None,
                 policy_names: Optional[tuple] = None,
                 telemetry=GLOBAL_TELEMETRY, source: Optional[str] = None,
-                lane: int = LANE_BULK, donate: bool = False
-                ) -> "TieredKVCache":
+                lane: int = LANE_BULK, donate: bool = False,
+                wait: bool = True) -> "TieredKVCache":
         old_dev = self._host_dev()
         if np.array_equal(new_dev, old_dev):
             return self
@@ -567,7 +612,7 @@ class TieredKVCache:
         # pools — required for the donated in-place path too).
         self._ship_retile(groups, old_dev, new_dev, old_local, route,
                           mover=mover, telemetry=telemetry, source=source,
-                          lane=lane)
+                          lane=lane, wait=wait)
         caps = self.capacity_pages()
         need = [int(max((new_dev == d).sum(axis=1).max(initial=0), 0))
                 for d in range(n_devices)]
@@ -586,8 +631,19 @@ class TieredKVCache:
         out = dataclasses.replace(
             out, device_names=self._route_names(n_devices, policy_names,
                                                 None, None))
+        # Both retile paths recompute moved slots' pos rows from the page
+        # layout, which revives own-pool rows a prefix reference serves —
+        # re-sentinel everything below each slot's shared boundary.
+        if out.prefix is not None:
+            out = out._apply_prefix_sentinels()
         out.__dict__["_host_cache"] = np.asarray(new_dev)
         return out
+
+    def _apply_prefix_sentinels(self) -> "TieredKVCache":
+        shared = self.prefix.slot_shared[:, None]
+        pos_new = tuple(jnp.where(p < shared, _INT32_MAX, p)
+                        for p in self.pos_parts)
+        return dataclasses.replace(self, pos_parts=pos_new)
 
     def _retile_stable(self, groups, old_dev, new_dev, old_local, *,
                        donate: bool = False) -> "TieredKVCache":
@@ -749,14 +805,198 @@ class TieredKVCache:
             page_device=jnp.asarray(new_dev, jnp.int8),
         )
 
+    # -- shared-prefix pool (ISSUE 8) -------------------------------------------
+    def with_prefix(self, pool_pages: int) -> "TieredKVCache":
+        """Attach an (empty) shared-prefix page pool of ``pool_pages``
+        pages.  Done once at engine construction: the pool is a pytree
+        child, so creating it later would change the jitted decode
+        treedef mid-run."""
+        L, B = self.k_parts[0].shape[:2]
+        K, hd = self.k_parts[0].shape[3:]
+        blk = PrefixBlock.create(
+            B, pool_pages, self.page_device.shape[1], self.page_t,
+            L, K, hd, self.k_parts[0].dtype)
+        return dataclasses.replace(self, prefix=blk)
+
+    def attach_prefix(self, i: int, pages) -> "TieredKVCache":
+        """Map shared pool pages into slot ``i`` BY REFERENCE: the slot's
+        leading positions are served by the pool partition, its own pool
+        rows below the boundary are sentineled out of attention (they
+        hold no data — the dedup), and ``lengths`` jumps to the shared
+        boundary so prefill replays only the suffix."""
+        assert self.prefix is not None
+        pages = [int(p) for p in pages]
+        Pm = self.prefix.slot_pages.shape[1]
+        assert len(pages) <= Pm
+        full_rows = len(pages) * self.page_t
+        row = np.full(Pm, NO_PAGE, np.int32)
+        row[:len(pages)] = pages
+        blk = dataclasses.replace(
+            self.prefix,
+            slot_pages=self.prefix.slot_pages.at[i].set(jnp.asarray(row)),
+            slot_shared=self.prefix.slot_shared.at[i].set(full_rows))
+        out = dataclasses.replace(
+            self, prefix=blk, lengths=self.lengths.at[i].set(full_rows))
+        pos_new = []
+        for p in out.pos_parts:
+            rowv = p[i]
+            pos_new.append(p.at[i].set(
+                jnp.where(rowv < full_rows, _INT32_MAX, rowv)))
+        return dataclasses.replace(out, pos_parts=tuple(pos_new))
+
+    def detach_prefix(self, i: int) -> "TieredKVCache":
+        """Drop slot ``i``'s references (request finished) and restore
+        its own-pool pos rows from the page layout, so the slot is
+        reusable by a reference-free request."""
+        if self.prefix is None:
+            return self
+        blk = dataclasses.replace(
+            self.prefix,
+            slot_pages=self.prefix.slot_pages.at[i].set(NO_PAGE),
+            slot_shared=self.prefix.slot_shared.at[i].set(0))
+        out = dataclasses.replace(self, prefix=blk)
+        return out._restore_slot_pos(i)
+
+    def _restore_slot_pos(self, i: int) -> "TieredKVCache":
+        pt = self.page_t
+        at = np.arange(pt)
+        dev = self._host_dev()[i]
+        loc = np.asarray(self.page_local)[i]
+        pos_new = list(self.pos_parts)
+        for d in range(len(self.k_parts)):
+            T_d = self.k_parts[d].shape[2]
+            row = np.full(T_d, _INT32_MAX, np.int32)
+            pages_d = np.nonzero(dev == d)[0]
+            if pages_d.size:
+                row[(loc[pages_d][:, None] * pt + at).ravel()] = (
+                    pages_d[:, None] * pt + at).ravel().astype(np.int32)
+            pos_new[d] = pos_new[d].at[i].set(jnp.asarray(row))
+        return dataclasses.replace(self, pos_parts=tuple(pos_new))
+
+    def _slot_row_route(self, i: int, start: int, n: int):
+        """(per-position device, own-pool row) for slot ``i`` positions
+        ``[start, start + n)`` — host-side fancy-index plumbing for the
+        CoW and promotion copies."""
+        positions = np.arange(start, start + n)
+        page = positions // self.page_t
+        dev = self._host_dev()[i][page]
+        rows = (np.asarray(self.page_local)[i][page] * self.page_t
+                + positions % self.page_t)
+        return dev, rows
+
+    def gather_token_rows(self, i: int, start: int, n: int):
+        """Copy slot ``i``'s own K/V rows for positions ``[start,
+        start + n)`` out of the per-device pools: ``(L, n, K, hd)``
+        numpy pair (promotion of freshly-prefilled pages into the shared
+        pool)."""
+        L = self.k_parts[0].shape[0]
+        K, hd = self.k_parts[0].shape[3:]
+        dev, rows = self._slot_row_route(i, start, n)
+        out_k = np.zeros((L, n, K, hd), self.k_parts[0].dtype)
+        out_v = np.zeros_like(out_k)
+        for d in np.unique(dev):
+            sel = np.nonzero(dev == d)[0]
+            out_k[:, sel] = np.asarray(self.k_parts[d])[:, i, rows[sel]]
+            out_v[:, sel] = np.asarray(self.v_parts[d])[:, i, rows[sel]]
+        return out_k, out_v
+
+    def write_token_rows(self, i: int, start: int, k_rows,
+                         v_rows) -> "TieredKVCache":
+        """Write ``(L, n, K, hd)`` rows into slot ``i``'s OWN pools at
+        positions ``[start, ...)`` — the copy-on-write landing: a
+        diverging request's private copy goes into whatever tier its
+        own pages occupy."""
+        n = k_rows.shape[1]
+        dev, rows = self._slot_row_route(i, start, n)
+        k_parts = list(self.k_parts)
+        v_parts = list(self.v_parts)
+        for d in np.unique(dev):
+            sel = np.nonzero(dev == d)[0]
+            idx = jnp.asarray(rows[sel])
+            k_parts[d] = k_parts[d].at[:, i, idx].set(
+                jnp.asarray(k_rows[:, sel], k_parts[d].dtype))
+            v_parts[d] = v_parts[d].at[:, i, idx].set(
+                jnp.asarray(v_rows[:, sel], v_parts[d].dtype))
+        return dataclasses.replace(
+            self, k_parts=tuple(k_parts), v_parts=tuple(v_parts),
+            lengths=self.lengths.at[i].set(start + n))
+
+    def write_prefix_pages(self, pool_slots, k_pages, v_pages, *,
+                           device: int = 0) -> "TieredKVCache":
+        """Fill shared pool pages (promotion): ``k_pages`` is
+        ``(L, n, page_t, K, hd)`` for ``n`` pool slots, landing on
+        device ordinal ``device`` (new prefixes are born fast; the
+        epoch-level prefix retier demotes cold ones)."""
+        assert self.prefix is not None
+        idx = jnp.asarray(np.asarray(pool_slots, np.int32))
+        blk = dataclasses.replace(
+            self.prefix,
+            k=self.prefix.k.at[:, idx].set(
+                jnp.asarray(k_pages, self.prefix.k.dtype)),
+            v=self.prefix.v.at[:, idx].set(
+                jnp.asarray(v_pages, self.prefix.v.dtype)),
+            page_device=self.prefix.page_device.at[idx].set(device))
+        return dataclasses.replace(self, prefix=blk)
+
+    def retile_prefix(self, new_dev, *, mover=None,
+                      telemetry=GLOBAL_TELEMETRY,
+                      policy_names: Optional[tuple] = None,
+                      source: Optional[str] = None, lane: int = LANE_BULK,
+                      wait: bool = True) -> "TieredKVCache":
+        """Re-tier the shared pool's per-page placement.  Each moved page
+        bills its bytes ONCE on its real route however many slots
+        reference it — refcount-weighted (deduplicated) migration, vs
+        the per-slot billing private pages pay in ``_retile``."""
+        assert self.prefix is not None
+        old = np.asarray(self.prefix.page_device)
+        new_dev = np.asarray(new_dev, np.int32)
+        moved = np.nonzero((old >= 0) & (new_dev >= 0)
+                           & (old != new_dev))[0]
+        if moved.size == 0:
+            return self
+        n_devices = max(len(self.device_names), int(new_dev.max()) + 1)
+        route = self._route_names(n_devices, policy_names, None, None)
+        page_b = self._page_kv_bytes()
+        routes: dict[tuple, list] = {}
+        for pg in moved:
+            routes.setdefault((int(old[pg]), int(new_dev[pg])),
+                              []).append(int(pg))
+        if mover is not None:
+            from repro.core.mover import Descriptor
+            k_np = np.asarray(self.prefix.k)
+            v_np = np.asarray(self.prefix.v)
+            descs = [Descriptor(route[d0], route[d1],
+                                (jnp.asarray(k_np[:, pages]),
+                                 jnp.asarray(v_np[:, pages])),
+                                lane=lane, source=source)
+                     for (d0, d1), pages in routes.items()]
+            mover.submit(descs)
+            if wait and mover.asynchronous:
+                mover.wait_all()
+        elif telemetry is not None:
+            for (d0, d1), pages in routes.items():
+                telemetry.record_move(route[d0], route[d1],
+                                      page_b * len(pages), 0.0,
+                                      source=source)
+        out = old.copy()
+        out[moved] = new_dev[moved]
+        blk = dataclasses.replace(self.prefix,
+                                  page_device=jnp.asarray(out))
+        return dataclasses.replace(self, prefix=blk)
+
     def partitions(self, layer: int):
         """[(k, v, valid)] per device pool for decode attention
-        (post-append); zero-width pools contribute no partial."""
+        (post-append); zero-width pools contribute no partial.  With a
+        shared-prefix pool attached, its referenced pages form one more
+        partition — merged exactly, like any other device split."""
         upto = self.lengths[:, None] + 1
-        return [(self.k_parts[d][layer], self.v_parts[d][layer],
-                 self.pos_parts[d] < upto)
-                for d in range(len(self.k_parts))
-                if self.k_parts[d].shape[2]]
+        parts = [(self.k_parts[d][layer], self.v_parts[d][layer],
+                  self.pos_parts[d] < upto)
+                 for d in range(len(self.k_parts))
+                 if self.k_parts[d].shape[2]]
+        if self.prefix is not None and self.prefix.pool_pages:
+            parts.append(self.prefix.partition(layer))
+        return parts
 
 
 def tiered_decode_step(cfg: ArchConfig, params: dict, cache: TieredKVCache,

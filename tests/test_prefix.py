@@ -1,0 +1,234 @@
+"""Shared-prefix paged KV (ISSUE 8): reference sharing, copy-on-write
+divergence, survival across re-tiering, refcount-safe eviction, and the
+cost-model admission / migration-overlap engine paths."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.caption import CaptionConfig, CaptionController
+from repro.core.policy import MemPolicy
+from repro.models import registry
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import _INT32_MAX, TieredKVCache
+from repro.serving.prefix_cache import PrefixCache
+
+
+def _setup(arch_id="starcoder2-3b", seed=0):
+    arch = registry.get(arch_id).tiny()
+    cfg = arch.cfg
+    params = arch.module.init(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _engine(cfg, params, *, prefix_pages=16, slow=0.5, **kw):
+    policy = MemPolicy.from_slow_fraction("fast", "slow", slow)
+    return ServingEngine(cfg, params, max_batch=3, max_len=64,
+                         policy=policy, page_t=8,
+                         prefix_pages=prefix_pages, **kw)
+
+
+def _prompts(cfg, n=6, pre_len=24, suf_len=5, seed=7):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_padded, size=pre_len).tolist()
+    return [pre + rng.integers(0, cfg.vocab_padded, size=suf_len).tolist()
+            for _ in range(n)]
+
+
+def test_identical_prompts_share_pages_with_refcounts():
+    cfg, params = _setup()
+    eng = _engine(cfg, params)
+    prompt = _prompts(cfg, n=1)[0]
+    eng.submit(prompt, max_new_tokens=4)
+    eng.run_until_drained()
+    assert eng.prefix_index.allocated_pages() == 3  # 24 prefix tokens / 8
+    assert eng.prefill_tokens_avoided == 0  # first request seeds the pool
+
+    # two identical prompts in flight: both reference the SAME pool pages
+    eng.submit(prompt, max_new_tokens=8)
+    eng.submit(prompt, max_new_tokens=8)
+    eng.step()
+    sp = np.asarray(eng.cache.prefix.slot_pages)
+    refs0 = sorted(int(p) for p in sp[0] if p >= 0)
+    refs1 = sorted(int(p) for p in sp[1] if p >= 0)
+    assert refs0 == refs1 and len(refs0) == 3
+    rc = eng.prefix_index.page_refcounts()
+    assert all(rc[p] == 2 for p in refs0)
+    assert eng.prefix_index.dedup_pages() == 3  # one stored, one saved
+    eng.run_until_drained()
+    assert all(c == 0 for c in eng.prefix_index.page_refcounts().values())
+    assert eng.prefill_tokens_avoided >= 2 * 24
+
+
+def test_sharing_and_cow_match_unshared_decode():
+    """Shared / CoW attention must reproduce the no-sharing engine's
+    generated tokens exactly, including prompts diverging mid-page."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    pre = rng.integers(0, cfg.vocab_padded, size=20).tolist()  # 2.5 pages
+    prompts = [pre + rng.integers(0, cfg.vocab_padded, size=7).tolist()
+               for _ in range(5)]
+
+    def run(prefix_pages):
+        eng = _engine(cfg, params, prefix_pages=prefix_pages)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=6)
+        done = eng.run_until_drained()
+        return eng, {r.rid: r.generated for r in done}
+
+    e0, base = run(0)
+    e1, shared = run(16)
+    assert base == shared
+    assert e1.prefill_tokens_avoided > 0
+    # prompts share 20 tokens but full pages cover only 16: the tail 4
+    # rows arrive by copy-on-write into each diverging slot's own tier
+    assert e1.prefix_index.cow_copies >= 1
+    assert e1.decode_traces == 1  # attach/detach never change the treedef
+
+
+def test_shared_pages_survive_repartition_and_drain():
+    cfg, params = _setup()
+    policy = MemPolicy.from_tier_fractions("fast", ["cxl-a", "cxl-b"],
+                                           [0.25, 0.25])
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, policy=policy,
+                        page_t=8, prefix_pages=8)
+    prompt = _prompts(cfg, n=1, pre_len=16, suf_len=4)[0]
+    eng.submit(prompt, max_new_tokens=4)
+    eng.run_until_drained()
+    eng.submit(prompt, max_new_tokens=12)
+    eng.step()
+    assert int(np.asarray(eng.cache.prefix.slot_shared)[0]) == 16
+
+    def no_revived_rows(cache):
+        shared = np.asarray(cache.prefix.slot_shared)
+        for p in cache.pos_parts:
+            pn = np.asarray(p)
+            assert not ((pn < shared[:, None]) & (pn != _INT32_MAX)).any()
+
+    tok_before = list(eng.slots[0].generated)
+    eng.cache = eng.cache.repartition_fraction(0.75, telemetry=None)
+    no_revived_rows(eng.cache)
+    eng.step()
+    eng.cache = eng.cache.drain_device("cxl-a", telemetry=None)
+    no_revived_rows(eng.cache)
+    done = eng.run_until_drained()
+    # decode across both re-tierings matches the undisturbed engine
+    ref = _engine(cfg, params, prefix_pages=0, slow=0.5)
+    ref.submit(prompt, max_new_tokens=4)
+    ref.run_until_drained()
+    ref.submit(prompt, max_new_tokens=12)
+    ref_done = ref.run_until_drained()
+    assert done[-1].generated == ref_done[-1].generated
+    assert done[-1].generated[:len(tok_before)] == tok_before
+
+
+def test_eviction_never_frees_referenced_pages():
+    idx = PrefixCache(pool_pages=4, page_t=4)
+    live = list(range(0, 12))  # 3 pages
+    nodes = idx.insert(live + [99], [])
+    assert len(nodes) == 3
+    idx.acquire([n for _, n in nodes])
+    referenced = {n.page for _, n in nodes}
+    # a fourth page fills the pool; further inserts must only ever evict
+    # refcount-zero leaves — the referenced chain survives every attempt
+    for seed in range(5):
+        other = [1000 + seed * 16 + i for i in range(17)]
+        idx.insert(other, [])
+        assert referenced <= set(idx.nodes.keys())
+    assert idx.evictions > 0
+    m, _, _ = idx.match(live + [99])
+    assert [n.page for n in m] == [n.page for _, n in nodes]
+    idx.release(m)
+
+
+def test_prefix_storage_deduplicated_reads_per_reference():
+    cfg, params = _setup()
+    eng = _engine(cfg, params, slow=0.0)
+    prompt = _prompts(cfg, n=1)[0]
+    eng.submit(prompt, max_new_tokens=4)
+    eng.run_until_drained()
+    page_b = eng.cache._page_kv_bytes()
+    store0 = eng.cache.storage_bytes_per_device()["fast"]
+    reads0 = eng.cache.read_bytes_per_device()["fast"]
+    eng.submit(prompt, max_new_tokens=8)
+    eng.submit(prompt, max_new_tokens=8)
+    eng.step()
+    sp = np.asarray(eng.cache.prefix.slot_pages)
+    assert (sp >= 0).sum() == 6  # 2 slots x 3 shared pages, by reference
+    # reads bill PER REFERENCE (every reader streams the shared rows)...
+    reads1 = eng.cache.read_bytes_per_device()["fast"]
+    assert reads1 - reads0 == 6 * page_b
+    # ...but storage bills each shared page ONCE: the referencing slots'
+    # own rows below the boundary are sentineled holes, so attaching two
+    # 3-page references REMOVES 6 private pages from occupied storage.
+    store1 = eng.cache.storage_bytes_per_device()["fast"]
+    assert store0 - store1 == 6 * page_b
+    pdev = np.asarray(eng.cache.prefix.page_device)
+    assert (pdev >= 0).sum() == 3  # the pool holds each page exactly once
+
+
+def test_admission_defers_batch_requests_under_pin_pressure():
+    from repro.core.tiers import paper_topology
+    cfg, params = _setup()
+    topo = paper_topology()
+    item = 2 * cfg.n_layers * 64 * cfg.n_kv_heads * cfg.resolved_head_dim * 4
+    eng = ServingEngine(
+        cfg, params, max_batch=3, max_len=64,
+        policy=MemPolicy.from_slow_fraction("fast", "slow", 0.0),
+        page_t=8, topology=topo, admission="cost",
+        admission_capacity_bytes=int(item * 1.5), admission_max_defer=6)
+    prompts = _prompts(cfg, n=4, pre_len=8, suf_len=4)
+    eng.submit(prompts[0], max_new_tokens=16, slo="latency")
+    for p in prompts[1:]:
+        eng.submit(p, max_new_tokens=4, slo="batch")
+    done = eng.run_until_drained()
+    assert len(done) == 4  # starvation bound: everyone completes
+    assert eng.admission_deferrals > 0
+
+
+def test_overlap_engine_accounts_hidden_migration_time():
+    from repro.core.mover import BulkMover
+    from repro.core.telemetry import Telemetry
+    from repro.core.tiers import paper_topology
+    cfg, params = _setup()
+    topo = paper_topology()
+    mover = BulkMover(topo, asynchronous=True, batch_size=16)
+    tel = Telemetry()
+    try:
+        eng = ServingEngine(
+            cfg, params, max_batch=3, max_len=64,
+            policy=MemPolicy.from_slow_fraction(topo.fast.name,
+                                                topo.slow.name, 0.5),
+            page_t=8, topology=topo, mover=mover, telemetry=tel,
+            prefix_pages=8, overlap=True)
+        for p in _prompts(cfg, n=3, pre_len=16, suf_len=4):
+            eng.submit(p, max_new_tokens=8)
+        eng.step()
+        # actuate a re-tier WITHOUT fencing (the overlap issue path)...
+        b0 = mover.bytes_submitted
+        eng.cache = eng.cache.repartition_fraction(
+            0.25, pinned_slots=eng.pinned_slots, mover=mover,
+            telemetry=tel, fast_tier=topo.fast.name,
+            slow_tier=topo.slow.name, wait=False)
+        eng._account_actuation(mover.bytes_submitted - b0, 0.0)
+        assert eng._inflight_move_bytes > 0
+        # ...decode keeps running while the drain pool streams the copy
+        for _ in range(4):
+            eng.step()
+        assert eng._inflight_compute_s > 0
+        eng._drain_migrations()
+        assert eng.migration_hidden_s > 0  # move time hid under decode
+        assert mover.pending == 0
+        counters = tel.snapshot()["counters"]
+        assert counters.get("migration_hidden_s", 0) > 0
+        # generated tokens are unaffected by the unfenced migration
+        done = eng.run_until_drained()
+        ref = _engine(cfg, params, prefix_pages=8)
+        for p in _prompts(cfg, n=3, pre_len=16, suf_len=4):
+            ref.submit(p, max_new_tokens=8)
+        ref_done = ref.run_until_drained()
+        assert ([r.generated for r in done]
+                == [r.generated for r in ref_done])
+    finally:
+        mover.close()
