@@ -21,7 +21,10 @@ access, preserved below as ``_legacy_*``), and emits
   (repartition + row scatter per epoch) through the donated in-place
   path vs the PR 5 copy-on-write baseline: the donated stable path must
   perform ZERO full receiving-shard copies (asserted in the smoke lane
-  too) and win >= 2x at full size.
+  too) and win >= 2x at full size.  Smoke-lane actuation TIMING is
+  informational only (``"gated": false`` in the JSON): the shrunken
+  tensor is noise-bound, so only the full size gates the >= 2x claim —
+  the zero-copy invariant is still asserted in both lanes.
 
 ``--smoke`` shrinks the tensor for the CI tier-1 lane; the nightly
 workflow runs the full size and uploads the JSON artifact next to the
@@ -436,6 +439,9 @@ def run(smoke: bool = False) -> tuple[list[str], dict]:
     assert gs["gather_speedup"] >= 1.0, gs
     assert gs["gather_multidev_speedup"] >= 1.0, gs
     act = out["actuation"]
+    # Smoke timing is informational: the perf-trajectory consumer must
+    # not regress-gate on an ungated sample (zero-copy asserts always).
+    act["gated"] = not smoke
     if not smoke:
         # ISSUE 7 acceptance: donated >= 2x over the CoW baseline on the
         # write-heavy loop at full size (smoke sizes are noise-bound; the

@@ -178,6 +178,11 @@ def run(smoke: bool = False) -> tuple[list[str], dict]:
             (m["overlap"]["migration_stall_s"],
              m["sync"]["migration_stall_s"])
         assert m["overlap"]["migration_hidden_s"] > 0
+        # hiding migrations must show up end-to-end, not just in the
+        # stall split: unfenced churn serves at least sync's goodput
+        assert (m["overlap"]["goodput_tok_s"]
+                >= m["sync"]["goodput_tok_s"]), \
+            (m["overlap"]["goodput_tok_s"], m["sync"]["goodput_tok_s"])
 
     rows = [
         f"serving/goodput,0,sharing=x{speedup:.2f};"

@@ -21,7 +21,9 @@ against BulkMover telemetry) and is numerically a no-op.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +38,7 @@ from repro.core.policy import MemPolicy
 from repro.core.telemetry import EpochWindow, Telemetry
 from repro.core.tiers import (CXL_A, CXL_B, DDR5_L8, TierTopology,
                               paper_topology, tpu_v5e_topology)
+from repro.core.warmstart import WarmStartMemo
 
 THREADS = 32
 EPOCHS = 64
@@ -333,5 +336,282 @@ def run() -> list[str]:
     return rows
 
 
-if __name__ == "__main__":
+# -- control plane: dueling probes, warm-start memo, joint moves -------------
+#: injected relative telemetry noise (std) for the regret comparison.
+NOISE_STD = 0.06
+#: paired duels per candidate point in the noise-robust configuration.
+DUEL_COUNT = 3
+#: seeds averaged by the regret gate (smoke uses the first 3).
+REGRET_SEEDS = (0, 1, 2, 3, 4)
+REGRET_EPOCHS = 280
+
+
+def _control_cfg(duels: int = 0) -> CaptionConfig:
+    return CaptionConfig(probe_epochs=2, step=0.05, min_step=0.01,
+                         hysteresis=0.01, duel_count=duels)
+
+
+def _sweep_threads(topo: TierTopology, threads: int) -> tuple[float, float]:
+    best_f, best_t = 0.0, throughput(topo.fast, topo.slow, 0.0, threads)
+    for f in np.linspace(0.0, 0.6, 121):
+        t = throughput(topo.fast, topo.slow, float(f), threads)
+        if t > best_t:
+            best_f, best_t = float(f), t
+    return best_f, best_t
+
+
+def _noisy_regret(topo: TierTopology, best_t: float, seed: int,
+                  duels: int, epochs: int) -> tuple[float, float]:
+    """Closed loop on the SNC hill with multiplicative telemetry noise;
+    returns (final fraction, cumulative relative regret vs the best
+    static split).  Regret is charged on the TRUE throughput at each
+    operating point — the controller only ever sees the noisy signal."""
+    rng = np.random.default_rng(seed)
+    ctl = CaptionController(topo, _control_cfg(duels), initial_fraction=0.0)
+    regret = 0.0
+    for _ in range(epochs):
+        t_true = throughput(topo.fast, topo.slow, ctl.fraction, THREADS)
+        regret += (best_t - t_true) / best_t
+        ctl.observe(EpochMetrics(
+            throughput=t_true * (1.0 + rng.normal(0.0, NOISE_STD))))
+    return ctl.fraction, regret
+
+
+def _regret_section(topo: TierTopology, smoke: bool,
+                    rows: list[str]) -> dict:
+    """Dueling probes vs single-sample hill-climb under injected noise.
+
+    The single-sample climb is bimodal under noise: one unlucky window
+    at cold start rejects the first (real) gradient and parks the walk
+    at f=0 for the whole run.  Paired duels average the noise down and
+    retry before shrinking, so every seed converges near the optimum —
+    the seed-averaged cumulative regret must be strictly lower."""
+    seeds = REGRET_SEEDS[:3] if smoke else REGRET_SEEDS
+    epochs = 200 if smoke else REGRET_EPOCHS
+    best_f, best_t = _static_sweep(topo)
+    single, duel = {}, {}
+    for seed in seeds:
+        sf, sr = _noisy_regret(topo, best_t, seed, 0, epochs)
+        df, dr = _noisy_regret(topo, best_t, seed, DUEL_COUNT, epochs)
+        single[seed] = {"final_f": sf, "regret": sr}
+        duel[seed] = {"final_f": df, "regret": dr}
+        rows.append(f"fig11/control/regret/seed{seed},0,"
+                    f"single_f={sf:.3f};single_regret={sr:.1f}"
+                    f";duel_f={df:.3f};duel_regret={dr:.1f}")
+    s_mean = sum(v["regret"] for v in single.values()) / len(seeds)
+    d_mean = sum(v["regret"] for v in duel.values()) / len(seeds)
+    rows.append(f"fig11/control/regret/mean,0,single={s_mean:.1f}"
+                f";duel={d_mean:.1f};noise={NOISE_STD};epochs={epochs}")
+    # Acceptance: dueling cumulative regret strictly below the
+    # single-sample baseline in the same run, and the dueling walk lands
+    # near the true optimum on EVERY seed (no stuck-at-zero runs).
+    assert d_mean < s_mean, (d_mean, s_mean)
+    for seed, v in duel.items():
+        assert abs(v["final_f"] - best_f) <= 0.05, (seed, v, best_f)
+    return {"noise": NOISE_STD, "epochs": epochs, "best_f": best_f,
+            "seeds": list(seeds), "duel_count": DUEL_COUNT,
+            "single": single, "duel": duel,
+            "single_mean_regret": s_mean, "duel_mean_regret": d_mean}
+
+
+def _warmstart_section(topo: TierTopology, rows: list[str]) -> dict:
+    """Cold walk records its converged weights under the workload
+    fingerprint; a rerun of the same workload must warm-start from the
+    memo — at the remembered optimum from the first decision, converged
+    within one confirmation stint instead of re-walking the hill."""
+    cfg = _control_cfg()
+    memo = WarmStartMemo()
+    cold = CaptionController(topo, cfg, initial_fraction=0.0)
+    cold.attach_memo(memo)
+    cold_epochs = None
+    for epoch in range(4 * REGRET_EPOCHS):
+        t = throughput(topo.fast, topo.slow, cold.fraction, THREADS)
+        cold.observe(EpochMetrics(throughput=t))
+        if cold.converged:
+            cold_epochs = epoch + 1
+            break
+    assert cold.converged and len(memo) == 1, (cold.phase, len(memo))
+
+    # The rerun loads the memo through a JSON roundtrip (what --memo-path
+    # persists to disk between driver invocations).
+    memo2 = WarmStartMemo.from_json(memo.to_json())
+    warm = CaptionController(topo, cfg, initial_fraction=0.0)
+    warm.attach_memo(memo2)
+    reach_epoch = None
+    warm_epochs = None
+    for epoch in range(cold_epochs):
+        t = throughput(topo.fast, topo.slow, warm.fraction, THREADS)
+        warm.observe(EpochMetrics(throughput=t))
+        gap = max(abs(a - b) for a, b in zip(warm.weights, cold.weights))
+        if reach_epoch is None and gap <= 0.02:
+            reach_epoch = epoch + 1
+        if warm.converged:
+            warm_epochs = epoch + 1
+            break
+    gap_pp = 100 * max(abs(a - b)
+                       for a, b in zip(warm.weights, cold.weights))
+    rows.append(f"fig11/control/warmstart,0,cold_epochs={cold_epochs}"
+                f";warm_epochs={warm_epochs};reach_epoch={reach_epoch}"
+                f";gap_pp={gap_pp:.2f};hits={memo2.hits}")
+    # Acceptance: the warm-started rerun is within 2pp per device of the
+    # cold walk's converged weights within 2 probe epochs (it lands
+    # there on the memo-hit decision), holds converged after one
+    # confirmation stint, and beats the cold walk outright.
+    assert warm.converged, warm.phase
+    assert memo2.hits == 1, (memo2.hits, memo2.misses)
+    assert reach_epoch is not None and reach_epoch <= 2, reach_epoch
+    assert gap_pp <= 2.0, gap_pp
+    assert warm_epochs <= 2 * cfg.probe_epochs, (warm_epochs, cold_epochs)
+    assert warm_epochs < cold_epochs, (warm_epochs, cold_epochs)
+    return {"cold_epochs": cold_epochs, "warm_epochs": warm_epochs,
+            "reach_epoch": reach_epoch, "gap_pp": gap_pp,
+            "memo_hits": memo2.hits}
+
+
+def _drift_section(topo: TierTopology, smoke: bool,
+                   rows: list[str]) -> dict:
+    """Drifting workload: after the dueling walk converges on workload A
+    (32 threads), the app shifts to a write-heavier, lower-parallelism
+    phase (B).  The slow-route bandwidth at the held point shifts with
+    it, the drift detector re-opens the walk, and the controller
+    re-converges near B's own static optimum."""
+    threads_b = 16  # B's static optimum is ~0.09: nonzero AND != A's
+    demand_scale_b = 3.0  # B pushes 3x the slow-tier bytes per inference
+    best_f_a, _ = _sweep_threads(topo, THREADS)
+    best_f_b, _ = _sweep_threads(topo, threads_b)
+    ctl = CaptionController(topo, _control_cfg(DUEL_COUNT),
+                            initial_fraction=0.0)
+    reopen_epoch = None
+    switch_epoch = None
+    epochs = 360 if smoke else 600
+    for epoch in range(epochs):
+        if switch_epoch is None and ctl.converged:
+            switch_epoch = epoch + 8  # hold a few epochs, then drift
+        on_b = switch_epoch is not None and epoch >= switch_epoch
+        threads = threads_b if on_b else THREADS
+        scale = demand_scale_b if on_b else 1.0
+        t = throughput(topo.fast, topo.slow, ctl.fraction, threads)
+        d = ctl.observe(EpochMetrics(
+            throughput=t,
+            slow_bw=scale * t * ctl.fraction * BYTES_PER_INFER))
+        if on_b and reopen_epoch is None and "drift" in d.reason:
+            reopen_epoch = epoch
+    rows.append(f"fig11/control/drift,0,switch={switch_epoch}"
+                f";reopen={reopen_epoch};final_f={ctl.fraction:.3f}"
+                f";best_a={best_f_a:.3f};best_b={best_f_b:.3f}")
+    # Acceptance: converged on A near A's optimum, re-opened after the
+    # shift, re-converged near B's optimum (which must actually differ).
+    assert switch_epoch is not None  # converged on A at all
+    assert abs(best_f_a - best_f_b) > 0.02, (best_f_a, best_f_b)
+    assert reopen_epoch is not None and reopen_epoch >= switch_epoch
+    assert ctl.converged, ctl.phase
+    assert abs(ctl.fraction - best_f_b) <= 0.05, (ctl.fraction, best_f_b)
+    return {"switch_epoch": switch_epoch, "reopen_epoch": reopen_epoch,
+            "final_f": ctl.fraction, "best_f_a": best_f_a,
+            "best_f_b": best_f_b}
+
+
+def _joint_section(topo: TierTopology, smoke: bool,
+                   rows: list[str]) -> dict:
+    """Arbiter joint moves: growth is frozen locally and granted through
+    utility-per-cost-ordered propose/commit rounds against the shared
+    budget — coordination by allocation instead of clip-the-greedy."""
+    fast, slow = topo.fast, topo.slow
+    greedy = {}
+    for n, th in MB_BUFFERS.items():
+        grid = np.linspace(0.0, 0.6, 121)
+        greedy[n] = float(grid[int(np.argmax(
+            [throughput(fast, slow, float(f), th) for f in grid]))])
+    xs_greedy, _ = _shared_throughput(topo, greedy)
+    agg_greedy = sum(xs_greedy.values())
+    membind = sum(throughput(fast, slow, 0.0, th)
+                  for th in MB_BUFFERS.values())
+
+    tel = Telemetry()
+    arb = CaptionArbiter(topo, ArbiterConfig(slow_bw_budget=MB_BUDGET,
+                                             starvation_floor=0.1,
+                                             joint_moves=True))
+    ctls = {n: arb.register(n, CaptionController(topo, _control_cfg()))
+            for n in MB_BUFFERS}
+    wins = {n: EpochWindow(tel) for n in MB_BUFFERS}
+    rounds = 0
+    granted_total = 0.0
+    epochs = 64 if smoke else 96
+    for epoch in range(epochs):
+        fracs = {n: c.fraction for n, c in ctls.items()}
+        xs, _ = _shared_throughput(topo, fracs)
+        for n in MB_BUFFERS:
+            tel.record_move("engine", slow.name,
+                            int(xs[n] * fracs[n] * BYTES_PER_INFER), 0.0,
+                            source=n)
+            arb.observe_window(n, wins[n], xs[n], slow_name=slow.name,
+                               seconds=1.0)
+        grants = arb.joint_move()
+        if grants:
+            rounds += 1
+            granted_total += sum(grants.values())
+
+    fracs = {n: c.fraction for n, c in ctls.items()}
+    xs_arb, off_arb = _shared_throughput(topo, fracs)
+    agg_arb = sum(xs_arb.values())
+    for n in MB_BUFFERS:
+        rows.append(f"fig11/control/joint/{n},0,f={fracs[n]:.3f}"
+                    f";tput={xs_arb[n]:.0f}")
+    rows.append(f"fig11/control/joint/aggregate,0,arb={agg_arb:.0f}"
+                f";greedy={agg_greedy:.0f};membind={membind:.0f}"
+                f";slow_bw={off_arb:.3g};budget={MB_BUDGET:.3g}"
+                f";rounds={rounds};granted={granted_total:.3f}")
+    # Acceptance: growth happened ONLY through committed joint grants,
+    # the fleet lands under budget, and coordinated allocation does at
+    # least as well as uncoordinated greed (and membind-fast).
+    assert rounds > 0 and granted_total > 0
+    assert abs(sum(fracs.values()) - granted_total) <= granted_total + 1e-9
+    assert off_arb <= MB_BUDGET * 1.05, (off_arb, MB_BUDGET)
+    assert agg_arb >= membind, (agg_arb, membind)
+    assert agg_arb >= agg_greedy, (agg_arb, agg_greedy)
+    return {"fractions": fracs, "aggregate": agg_arb, "greedy": agg_greedy,
+            "membind": membind, "slow_bw": off_arb, "budget": MB_BUDGET,
+            "rounds": rounds, "granted_total": granted_total}
+
+
+def run_control(smoke: bool = False) -> tuple[list[str], dict]:
+    """Convergence-time + cumulative-regret gate for the control plane
+    (noisy and drifting workloads), emitted as BENCH_control.json."""
+    rows: list[str] = []
+    topo = snc_topology()
+    bench = {
+        "bench": "control",
+        "smoke": smoke,
+        "regret": _regret_section(topo, smoke, rows),
+        "warmstart": _warmstart_section(topo, rows),
+        "drift": _drift_section(topo, smoke, rows),
+        "joint": _joint_section(topo, smoke, rows),
+    }
+    return rows, bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--control", action="store_true",
+                    help="run the control-plane gate (dueling regret, "
+                         "warm-start, drift re-probe, joint moves) instead "
+                         "of the legacy Fig. 11 sections")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized control-plane gate (implies --control)")
+    ap.add_argument("--out", default=None,
+                    help="write the control-plane results as JSON "
+                         "(BENCH_control.json)")
+    args = ap.parse_args(argv)
+    if args.control or args.smoke:
+        rows, bench = run_control(smoke=args.smoke)
+        print("\n".join(rows))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(bench, f, indent=2, sort_keys=True)
+            print(f"wrote {args.out}")
+        return
     print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,12 @@ class ArbiterConfig:
     #: controller), so each device carries its own ceiling; None keeps the
     #: single aggregate pool of the two-device era.
     device_budgets: Optional[dict[str, float]] = None
+    #: coordinated growth: freeze every buffer's unilateral slow-share
+    #: growth and grant it through :meth:`CaptionArbiter.joint_move`
+    #: propose/commit rounds instead (clipping independent greed is
+    #: replaced by a marginal-utility-ordered joint allocation under the
+    #: same budgets).  Shrink steps stay local either way.
+    joint_moves: bool = False
 
     def __post_init__(self):
         if self.slow_bw_budget <= 0:
@@ -231,6 +237,10 @@ class CaptionArbiter:
     def _gate(self, name: str):
         def gate(ctl: CaptionController, metrics: EpochMetrics
                  ) -> tuple[float, str]:
+            if self.cfg.joint_moves:
+                # Growth is coordinated: buffers propose, joint_move
+                # commits.  Local climbs keep full authority to shrink.
+                return 0.0, "arbiter: joint-move round"
             e = self._entries[name]
             total = self.aggregate_demand_bw()
             budget = self.cfg.slow_bw_budget
@@ -321,6 +331,83 @@ class CaptionArbiter:
             decision, fraction=sum(weights), weights=tuple(weights),
             changed=True,
             reason=decision.reason + f" [device clip {', '.join(clipped)}]")
+
+    # -- joint moves (propose/commit) ----------------------------------------
+    def _growth_cost_bw(self, e: _Entry) -> float:
+        """Estimated slow-tier write-bandwidth cost of one slow-fraction
+        point for buffer ``e`` — its billed demand scaled by its current
+        share.  A cold buffer (nothing billed yet, or a ~zero fraction)
+        borrows the fleet average; with no evidence at all, one fraction
+        point is conservatively priced at the whole budget, so the first
+        round still grants but cannot blow through the ceiling."""
+        f = e.controller.fraction
+        if e.demand_bw > 0 and f > 1e-3:
+            return e.demand_bw / f
+        known = [x.demand_bw / x.controller.fraction
+                 for x in self._entries.values()
+                 if x.demand_bw > 0 and x.controller.fraction > 1e-3]
+        if known:
+            return sum(known) / len(known)
+        return self.cfg.slow_bw_budget
+
+    def joint_move(self, utilities: Optional[dict[str, float]] = None
+                   ) -> dict[str, float]:
+        """One propose/commit round of coordinated growth.
+
+        PROPOSE: every registered buffer reports the slow-share step it
+        would take next (:meth:`CaptionController.propose_growth`) and
+        its marginal utility — Δthroughput per Δfraction from its recent
+        duel outcomes / accepted moves, overridable per buffer via
+        ``utilities`` (e.g. a perfmodel estimate).  COMMIT: proposals
+        are granted in utility-per-bandwidth-cost order against the
+        remaining budget headroom (global and per device), partially
+        when headroom runs short, and applied with
+        :meth:`CaptionController.commit_joint`.
+
+        This replaces clip-the-greedy coordination: instead of every
+        buffer growing independently and the over-budget ones being
+        scaled back after the fact, the fleet's growth is allocated
+        where a byte of slow-tier bandwidth buys the most throughput.
+        Returns {buffer: granted fraction points} (committed proposals
+        only)."""
+        headroom = self.cfg.slow_bw_budget - self.aggregate_demand_bw()
+        dev_free: dict[str, float] = {}
+        if self.cfg.device_budgets:
+            dev_demand = self.device_demands()
+            dev_free = {d: max(b - dev_demand.get(d, 0.0), 0.0)
+                        for d, b in self.cfg.device_budgets.items()}
+        proposals = []
+        for name, e in self._entries.items():
+            want = e.controller.propose_growth()
+            if want <= 1e-12:
+                continue
+            u = (utilities or {}).get(name, e.controller.marginal_utility())
+            cost = max(self._growth_cost_bw(e), 1e-12)
+            proposals.append((u / cost, name, want, cost, e.controller))
+        grants: dict[str, float] = {}
+        headroom = max(headroom, 0.0)
+        for _, name, want, cost, ctl in sorted(
+                proposals, key=lambda p: (-p[0], p[1])):
+            afford = headroom / cost
+            dev = ctl.active_slow_device
+            if dev in dev_free:
+                afford = min(afford, dev_free[dev] / cost)
+            granted = min(want, max(afford, 0.0))
+            if granted <= 1e-12:
+                continue
+            decision = ctl.commit_joint(granted)
+            if not decision.changed:
+                continue
+            grants[name] = granted
+            headroom -= granted * cost
+            if dev in dev_free:
+                dev_free[dev] = max(dev_free[dev] - granted * cost, 0.0)
+        self.history.append({
+            "joint_grants": dict(grants),
+            "headroom_bw": headroom,
+            "aggregate_bw": self.aggregate_demand_bw(),
+        })
+        return grants
 
     # -- the loop ------------------------------------------------------------
     def observe(self, name: str, metrics: EpochMetrics, *,

@@ -53,11 +53,13 @@ import enum
 import math
 from typing import TYPE_CHECKING, Optional, Sequence
 
-from repro.core.classifier import Boundedness
+from repro.core.classifier import (AccessProfile, Boundedness,
+                                   classify_pool)
 from repro.core.tiers import TierTopology
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.planner import Plan
+    from repro.core.warmstart import WarmStartMemo
 
 
 class Phase(enum.Enum):
@@ -94,6 +96,19 @@ class CaptionConfig:
     #: relative EWMA slow-route bandwidth drift that re-opens a CONVERGED
     #: walk (workload-shift re-probing); 0 disables.
     drift_threshold: float = 0.35
+    #: paired probe duels per candidate point (noise-robust probing):
+    #: the controller alternates ``probe_epochs``-long stints at the
+    #: incumbent w and the candidate w±δ, and accepts the candidate only
+    #: on a significant majority of duel wins.  0 keeps the legacy
+    #: single-sample accept/reject.
+    duel_count: int = 0
+    #: adaptive step sizing: multiplier applied to the step after
+    #: consecutive duel wins (1.0 disables expansion).  Rejections halve
+    #: the step as always (expand on wins, shrink on reversals).
+    step_expand: float = 2.0
+    #: ceiling for the adaptively expanded step (the walk never probes
+    #: coarser than this, whatever the win streak).
+    max_step: float = 0.2
 
     def __post_init__(self):
         if self.epoch_steps < 1:
@@ -108,6 +123,12 @@ class CaptionConfig:
             raise ValueError("max_fraction must be in [0, 1]")
         if self.drift_threshold < 0.0:
             raise ValueError("drift_threshold must be >= 0")
+        if self.duel_count < 0:
+            raise ValueError("duel_count must be >= 0")
+        if self.step_expand < 1.0:
+            raise ValueError("step_expand must be >= 1")
+        if self.max_step <= 0.0:
+            raise ValueError("max_step must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,6 +311,18 @@ class CaptionController:
         self._stale = 0  # consecutive coords that converged without moving
         self._hold_bw: Optional[float] = None  # drift reference (CONVERGED)
         self._hold_bw_dev: dict[str, float] = {}  # per-device references
+        #: active duel: incumbent/candidate points + their stint samples.
+        self._duel: Optional[dict] = None
+        self._duel_wins = 0  # consecutive accepted duels (step expansion)
+        self._duel_rejects = 0  # consecutive rejected duels (shrink patience)
+        self._duel_losses = 0  # consecutive significant losses (reversal)
+        #: EWMA marginal utility: Δthroughput per Δslow-fraction, from
+        #: recent duel outcomes / accepted moves (arbiter joint rounds).
+        self._utility: Optional[float] = None
+        self._memo: Optional["WarmStartMemo"] = None
+        self._memo_fp = None  # fingerprint of the workload being walked
+        self._memo_checked = False
+        self._confirm_hold = False  # warm-started: one stint, then hold
         self.history: list[Decision] = []
 
     def _spread(self, fraction: float) -> tuple[float, ...]:
@@ -359,6 +392,73 @@ class CaptionController:
             boundedness=d.boundedness,
             initial_weights=weights,
         )
+
+    @classmethod
+    def from_profile(cls, profile: AccessProfile, topology: TierTopology,
+                     config: Optional[CaptionConfig] = None, *,
+                     initial_fraction: float = 0.0,
+                     min_fraction: float = 0.0) -> "CaptionController":
+        """Seed the loop straight from a buffer's :class:`AccessProfile`
+        — the §6.1 taxonomy applied on the controller-seeding path.
+
+        The profile is classified against the ACTIVE slow tier; a
+        LATENCY_BOUND verdict gets fast-pin seeding automatically (zero
+        initial share, zero slow floor — Fig. 7: any slow fraction hurts
+        a µs-SLO buffer), and the latency guardrail then keeps the walk
+        monotone toward fast.  Anything else keeps the caller's prior.
+        The drivers use this so a serving KV cache or optimizer state is
+        never cold-started onto a tier its access pattern cannot
+        amortize."""
+        bd = classify_pool(profile, topology)
+        if bd == Boundedness.LATENCY_BOUND:
+            initial_fraction = 0.0
+            min_fraction = 0.0
+        return cls(topology, config,
+                   initial_fraction=initial_fraction,
+                   min_fraction=min_fraction, boundedness=bd)
+
+    # -- warm-start memo -----------------------------------------------------
+    def attach_memo(self, memo: "WarmStartMemo") -> None:
+        """Attach a :class:`~repro.core.warmstart.WarmStartMemo`.
+
+        The first observed epoch fingerprints the workload (telemetry
+        features + topology signature); on a memo hit the controller
+        seeds at the remembered weight vector and enters MEASURE
+        directly — one confirmation stint, then hold — skipping the
+        walk.  On a miss the walk runs cold and the converged weights
+        are filed under the fingerprint for next time.  Topology changes
+        (hot remove/add) and drift re-probes reset the fingerprint, so a
+        re-opened walk re-files under the workload it actually measured."""
+        self._memo = memo
+        self._memo_fp = None
+        self._memo_checked = False
+
+    def _memo_probe(self, metrics: EpochMetrics) -> Optional[Decision]:
+        """First-epoch memo check: fingerprint, look up, maybe warm-start."""
+        from repro.core.warmstart import fingerprint_metrics
+        self._memo_checked = True
+        self._memo_fp = fingerprint_metrics(
+            metrics, self.topology, boundedness=self.boundedness.value)
+        remembered = self._memo.lookup(self._memo_fp)
+        if remembered is None or len(remembered) != self.n_slow:
+            return None
+        target = [min(max(w, mw), 1.0)
+                  for w, mw in zip(remembered, self.min_weights)]
+        total = sum(target)
+        if total > self.cfg.max_fraction > 0:
+            target = [w * self.cfg.max_fraction / total for w in target]
+        elif total < self.min_fraction:
+            # The capacity floor outranks the memory: what does not fit
+            # fast must stay placed, remembered optimum or not.
+            if total > 0:
+                target = [w * self.min_fraction / total for w in target]
+            else:
+                target = list(self._spread(self.min_fraction))
+        self._confirm_hold = True
+        return self._move_to(
+            tuple(target), Phase.MEASURE,
+            f"warm-start: memo hit -> {sum(target):.3f} "
+            "(MEASURE, walk skipped)")
 
     # -- the loop ------------------------------------------------------------
     def observe_window(self, window, throughput: float, *,
@@ -459,6 +559,10 @@ class CaptionController:
         self._ewma = (metrics.throughput if self._ewma is None
                       else a * metrics.throughput + (1 - a) * self._ewma)
         self._epochs_here += 1
+        if self._memo is not None and not self._memo_checked:
+            warm = self._memo_probe(metrics)
+            if warm is not None:
+                return warm
         if self.phase == Phase.CONVERGED:
             drifted = self._check_drift(metrics)
             if drifted is not None:
@@ -527,15 +631,36 @@ class CaptionController:
         self._coord_start = self.weights[0]
         self._hold_bw = None
         self._hold_bw_dev = {}
+        self._duel = None
+        self._duel_wins = 0
+        self._duel_rejects = 0
+        self._duel_losses = 0
+        self._confirm_hold = False
+        # The workload (or topology) changed under us: the next observe
+        # re-fingerprints, so the memo files the walk under what it
+        # actually measured — and may warm-start if the NEW workload is
+        # itself a remembered one.
+        self._memo_fp = None
+        self._memo_checked = False
 
     # -- the hill-climb ------------------------------------------------------
     def _adjust(self, metrics: EpochMetrics) -> Decision:
+        if self._confirm_hold:
+            # Warm-started from the memo: the remembered optimum measured
+            # one full stint without surprises — hold (drift re-probing
+            # guards staleness from here, exactly like a walked optimum).
+            self._confirm_hold = False
+            return self._move_to(tuple(self.weights), Phase.CONVERGED,
+                                 "warm-start confirmed; holding")
+        if self.cfg.duel_count > 0:
+            return self._adjust_duel(metrics)
         cur_t = float(self._ewma)
         c = self._coord
         reason = ""
         if self._prev is not None:
             prev_w, prev_t = self._prev
             rel = (cur_t - prev_t) / max(abs(prev_t), 1e-12)
+            self._note_utility(sum(prev_w), prev_t, self.fraction, cur_t)
             if rel < -self.cfg.hysteresis:
                 # Regression: back off to the better point, reverse, shrink.
                 # A latency-bound buffer may only ever revert DOWNWARD (the
@@ -578,6 +703,177 @@ class CaptionController:
             return self._move_to(tuple(target), Phase.ADJUST,
                                  reason + "; immovable")
         return self._move_to(tuple(target), Phase.ADJUST, reason)
+
+    # -- noise-robust probing: paired duels ----------------------------------
+    def _adjust_duel(self, metrics: EpochMetrics) -> Decision:
+        """Dueling replacement for the single-sample accept/reject.
+
+        A candidate point w±δ is judged by ``duel_count`` PAIRED stints:
+        the controller alternates ``probe_epochs``-long holds at the
+        incumbent and the candidate, compares each pair, and accepts
+        only on a significant majority of wins — one lucky (or noisy)
+        window never moves the operating point.  The step expands on
+        consecutive accepted duels and shrinks on rejections (adaptive
+        step sizing), bounded by ``max_step``/``min_step``."""
+        cur_t = float(self._ewma)
+        n = self.cfg.duel_count
+        d = self._duel
+        if d is not None:
+            if d["at"] == "cand":
+                d["cand_t"].append(cur_t)
+                if len(d["cand_t"]) >= n:
+                    return self._duel_decide()
+                d["at"] = "base"
+                return self._move_to(
+                    d["base_w"], Phase.ADJUST,
+                    f"duel {len(d['cand_t']) + 1}/{n}: re-measure incumbent")
+            d["base_t"].append(cur_t)
+            d["at"] = "cand"
+            return self._move_to(
+                d["cand_w"], Phase.ADJUST,
+                f"duel {len(d['cand_t']) + 1}/{n}: probe candidate")
+        # Fresh duel: the stint just measured is the incumbent's first
+        # sample; pick the candidate exactly like the legacy climb does.
+        c = self._coord
+        delta = self._dir * self._step
+        delta, guard = self._guardrails(delta, metrics)
+        target = list(self.weights)
+        target[c] = self._clamp_coord(c, self.weights[c] + delta)
+        reason = f"duel 1/{n}: probe candidate"
+        if guard:
+            reason = f"{reason} [{guard}]"
+        if abs(target[c] - self.weights[c]) <= 1e-12:
+            # Pinned/frozen: no candidate to duel.  Without the legacy
+            # flat-shrink (duels never consult _prev) the step must decay
+            # here, or a guardrail-frozen coordinate would spin forever.
+            self._step /= 2
+            if self._at_bound() or self._step < self.cfg.min_step:
+                return self._finish_coord(tuple(self.weights),
+                                          reason + "; immovable")
+            return self._move_to(tuple(self.weights), Phase.ADJUST,
+                                 reason + "; immovable")
+        self._duel = {"base_w": tuple(self.weights),
+                      "cand_w": tuple(target),
+                      "base_t": [cur_t], "cand_t": [], "at": "cand"}
+        return self._move_to(tuple(target), Phase.ADJUST, reason)
+
+    def _duel_decide(self) -> Decision:
+        """All paired stints are in: the candidate must beat the
+        incumbent on the PAIRED MEAN beyond the hysteresis band (noise
+        averages down across the duels where a single sample cannot),
+        and a significant majority of individual losses reverses the
+        walk direction."""
+        d, self._duel = self._duel, None
+        wins = losses = 0
+        rels = []
+        for b, c in zip(d["base_t"], d["cand_t"]):
+            rel = (c - b) / max(abs(b), 1e-12)
+            rels.append(rel)
+            if rel > self.cfg.hysteresis:
+                wins += 1
+            elif rel < -self.cfg.hysteresis:
+                losses += 1
+        n = len(d["cand_t"])
+        mean_rel = sum(rels) / n
+        base_w, cand_w = d["base_w"], d["cand_w"]
+        self._note_utility(sum(base_w), sum(d["base_t"]) / len(d["base_t"]),
+                           sum(cand_w), sum(d["cand_t"]) / n)
+        tag = f"duel {wins}W-{losses}L/{n} mean {mean_rel*100:+.1f}%"
+        if mean_rel > self.cfg.hysteresis and wins >= losses:
+            # Significant paired win: commit the candidate; consecutive
+            # wins expand the step (a clean gradient deserves coarser
+            # probes).
+            self._duel_wins += 1
+            self._duel_rejects = 0
+            self._duel_losses = 0
+            if self._duel_wins >= 2 and self.cfg.step_expand > 1.0:
+                cap = max(self.cfg.max_step, self.cfg.step)
+                self._step = min(self._step * self.cfg.step_expand, cap)
+                tag += f"; step up to {self._step:.3f}"
+            return self._move_to(cand_w, Phase.ADJUST, tag + "; accept")
+        self._duel_wins = 0
+        sig_loss = (mean_rel < -self.cfg.hysteresis
+                    and losses >= (n + 1) // 2)
+        self._duel_losses = self._duel_losses + 1 if sig_loss else 0
+        self._duel_rejects += 1
+        if self._duel_losses >= 2:
+            # TWO consecutive significant majority losses: real gradient
+            # pointing the other way (a true overshoot loses every duel;
+            # a single loss can be a noise blip) — reverse and shrink.
+            self._dir = -self._dir
+            self._duel_losses = 0
+            self._duel_rejects = 0
+            self._step /= 2
+            if self._step < self.cfg.min_step:
+                return self._finish_coord(base_w, tag + "; step underflow")
+            return self._move_to(base_w, Phase.ADJUST,
+                                 tag + "; confirmed loss, reverse")
+        # A tie (or one loss) is not yet gradient: retry once at the same
+        # step before shrinking (shrink patience).  A single unlucky duel
+        # would otherwise halve the step, weaken the next duel's signal,
+        # and spiral to a premature hold; a true peak still rejects twice
+        # in a row and converges.
+        if self._duel_rejects < 2:
+            return self._move_to(base_w, Phase.ADJUST, tag + "; reject (retry)")
+        self._duel_rejects = 0
+        self._step /= 2
+        if self._step < self.cfg.min_step:
+            return self._finish_coord(base_w, tag + "; step underflow")
+        return self._move_to(base_w, Phase.ADJUST, tag + "; reject")
+
+    def _note_utility(self, prev_f: float, prev_t: float,
+                      cur_f: float, cur_t: float) -> None:
+        """EWMA the measured marginal utility (Δthroughput/Δfraction) —
+        the controller's contribution to the arbiter's joint rounds."""
+        df = cur_f - prev_f
+        if abs(df) <= 1e-9:
+            return
+        u = (cur_t - prev_t) / df
+        self._utility = (u if self._utility is None
+                         else 0.5 * u + 0.5 * self._utility)
+
+    # -- arbiter joint rounds (propose/commit) -------------------------------
+    def propose_growth(self) -> float:
+        """Slow-share growth this buffer would take next on its active
+        coordinate, in fraction points (the PROPOSE half of the
+        arbiter's joint round).  Zero while converged, mid-duel,
+        walking down, or latency-bound — those states have no growth
+        appetite to coordinate."""
+        if (self.converged or self.latency_bound or self._duel is not None
+                or self._confirm_hold or self._dir <= 0):
+            return 0.0
+        c = self._coord
+        target = self._clamp_coord(c, self.weights[c] + self._step)
+        return max(target - self.weights[c], 0.0)
+
+    def marginal_utility(self) -> float:
+        """Recent Δthroughput per Δslow-fraction (>= 0); 0 when the walk
+        has not yet measured a move."""
+        return max(self._utility or 0.0, 0.0)
+
+    def commit_joint(self, delta: float) -> Decision:
+        """COMMIT an arbiter-granted joint move: apply ``delta`` on the
+        active coordinate (clamped to the same bounds the walk honors)
+        and keep measuring from the new point.
+
+        A grant is evidence of budget headroom, so the probe step is
+        restored to at least its initial size — the walk only anneals to
+        convergence once grants stop coming.  A bad grant is not
+        terminal either: the next measured stint sees the regression and
+        the local climb reverts it (shrink steps are never gated)."""
+        if self._duel is not None or self.latency_bound:
+            return self._emit(False, "joint grant ignored (mid-duel or "
+                                     "latency-bound)")
+        c = self._coord
+        target = list(self.weights)
+        target[c] = self._clamp_coord(c, self.weights[c] + float(delta))
+        if abs(target[c] - self.weights[c]) <= 1e-12:
+            return self._emit(False, "joint grant clamped to no-op")
+        self._step = max(self._step, self.cfg.step)
+        return self._move_to(
+            tuple(target), Phase.ADJUST,
+            f"arbiter joint grant {target[c] - self.weights[c]:+.3f} "
+            f"on {self.active_slow_device or 'slow'}")
 
     def _clamp_coord(self, c: int, value: float) -> float:
         """Clamp one coordinate to its floor, the simplex ceiling, and the
@@ -639,6 +935,9 @@ class CaptionController:
                       ) -> Decision:
         """This coordinate's walk ended: converge (single device or a full
         stale pass) or hand the walk to the next device."""
+        self._duel_wins = 0
+        self._duel_rejects = 0
+        self._duel_losses = 0
         if self.n_slow == 1:
             return self._move_to(weights, Phase.CONVERGED, reason)
         # "Moved" means net progress beyond the walk's own probe
@@ -666,7 +965,10 @@ class CaptionController:
                  reason: str) -> Decision:
         changed = any(abs(a - b) > 1e-12
                       for a, b in zip(weights, self.weights))
-        self._prev = (tuple(self.weights), float(self._ewma))
+        # A joint grant can land before this stint measured anything; a
+        # missing EWMA means there is no baseline worth remembering.
+        self._prev = (None if self._ewma is None
+                      else (tuple(self.weights), float(self._ewma)))
         self.weights = list(weights)
         self.phase = phase
         self._ewma = None
@@ -674,6 +976,10 @@ class CaptionController:
         if phase == Phase.CONVERGED:
             self._hold_bw = None  # fresh drift reference at the hold point
             self._hold_bw_dev = {}
+            if self._memo is not None and self._memo_fp is not None:
+                # File (or refresh) the converged answer under the
+                # fingerprint taken when this walk opened.
+                self._memo.record(self._memo_fp, tuple(self.weights))
         return self._emit(changed, reason, phase=phase)
 
     def _emit(self, changed: bool, reason: str,

@@ -76,3 +76,21 @@ def classify(profile: AccessProfile, tier: TierSpec) -> Boundedness:
 def tolerates_slow_tier(profile: AccessProfile, slow: TierSpec) -> bool:
     """Paper guideline: offload only what amortizes the far tier's latency."""
     return classify(profile, slow) != Boundedness.LATENCY_BOUND
+
+
+def classify_pool(profile: AccessProfile, topology) -> Boundedness:
+    """Classify a profile against a topology's ACTIVE slow pool.
+
+    Worst case across the slow devices: a buffer that is latency-bound
+    against ANY device it could be interleaved onto must be treated as
+    latency-bound for seeding (guideline 5 — one slow hop in a dependent
+    chain is enough to show up in the tail).  With no slow devices the
+    fast tier itself is the candidate (degenerate, never latency-bound
+    in practice)."""
+    tiers = topology.slows or (topology.fast,)
+    verdicts = [classify(profile, t) for t in tiers]
+    if Boundedness.LATENCY_BOUND in verdicts:
+        return Boundedness.LATENCY_BOUND
+    if Boundedness.BANDWIDTH_BOUND in verdicts:
+        return Boundedness.BANDWIDTH_BOUND
+    return verdicts[0]

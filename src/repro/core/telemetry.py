@@ -141,6 +141,21 @@ class EpochCounters:
         return sum(v for k, v in self.route_bytes.items()
                    if k.startswith(f"{src}->"))
 
+    def workload_features(self, slow, source: Optional[str] = None
+                          ) -> dict[str, float]:
+        """AccessProfile-style features of this window against the slow
+        pool (``slow``: one tier name or a sequence) — the warm-start
+        fingerprint inputs: write share, slow-route bandwidth, writer
+        parallelism.  Optionally source-scoped (per-buffer billing)."""
+        into = self.bytes_into(slow, source)
+        out = self.bytes_from(slow, source)
+        total = into + out
+        return {
+            "write_ratio": into / total if total else 0.0,
+            "slow_bw": total / max(self.seconds, 1e-9),
+            "parallelism": float(self.gauges.get("writer_concurrency", 0)),
+        }
+
 
 class EpochWindow:
     """Windowed view over a :class:`Telemetry`: per-route epoch counters.

@@ -17,8 +17,9 @@ from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.mover import BulkMover
 from repro.core.policy import MemPolicy
 from repro.core.tiers import topology_from_spec
+from repro.core.warmstart import WarmStartMemo
 from repro.models.registry import get as get_arch
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ServingEngine, kv_access_profile
 
 
 def main(argv=None):
@@ -56,6 +57,14 @@ def main(argv=None):
     ap.add_argument("--async-mover", action="store_true",
                     help="issue Caption migrations unfenced so they overlap "
                          "decode compute (drained at epoch boundaries)")
+    ap.add_argument("--memo-path", default=None,
+                    help="JSON warm-start memo: converged Caption weights "
+                         "are filed under a workload fingerprint and a "
+                         "recurring workload seeds at its remembered "
+                         "optimum, skipping the walk")
+    ap.add_argument("--duels", type=int, default=0,
+                    help="paired probe duels per Caption candidate point "
+                         "(noise-robust probing); 0 = single-sample")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -78,11 +87,21 @@ def main(argv=None):
                                               args.slow_fraction)
     caption = None
     arbiter = None
+    memo = None
     if args.caption:
-        caption = CaptionController(
-            topology,
-            CaptionConfig(epoch_steps=args.caption_epoch_steps),
+        # §6.1 seeding: classify the KV cache's access profile against
+        # the active slow pool — a latency-bound shape is fast-pinned
+        # automatically (from_profile zeroes the prior and the floor).
+        profile = kv_access_profile(cfg, args.max_batch, args.max_len,
+                                    page_t=args.page_t)
+        caption = CaptionController.from_profile(
+            profile, topology,
+            CaptionConfig(epoch_steps=args.caption_epoch_steps,
+                          duel_count=args.duels),
             initial_fraction=args.slow_fraction)
+        if args.memo_path:
+            memo = WarmStartMemo.load(args.memo_path)
+            caption.attach_memo(memo)
         # One arbiter owns the slow-tier write budget; the engine registers
         # its KV controller under it (more buffers would share the pool).
         arbiter = CaptionArbiter(topology,
@@ -122,6 +141,11 @@ def main(argv=None):
     if caption is not None:
         traj = " -> ".join(f"{f:.2f}" for _, f in engine.caption_trace[-8:])
         print(f"caption: phase={caption.phase.value} trajectory {traj}")
+    if memo is not None:
+        memo.save(args.memo_path)
+        print(f"warmstart: entries={len(memo)} hits={memo.hits} "
+              f"misses={memo.misses} drift_misses={memo.drift_misses} "
+              f"-> {args.memo_path}")
     if arbiter is not None:
         print(f"arbiter: budget={arbiter.cfg.slow_bw_budget:.3g} B/s "
               f"demand={arbiter.aggregate_demand_bw():.3g} B/s "

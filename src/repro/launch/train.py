@@ -24,6 +24,7 @@ from repro.core.arbiter import CaptionArbiter, budgeted_config
 from repro.core.caption import CaptionConfig, CaptionController
 from repro.core.classifier import AccessProfile
 from repro.core.telemetry import EpochWindow
+from repro.core.warmstart import WarmStartMemo
 from repro.core.planner import BufferReq, plan as plan_placement
 from repro.core.policy import BufferClass
 from repro.data.pipeline import DataConfig, TokenPipeline
@@ -103,6 +104,12 @@ def main(argv=None):
     ap.add_argument("--slow-budget", type=float, default=0.0,
                     help="aggregate slow-tier write budget in bytes/s for "
                          "the CaptionArbiter (0 = slow tier's nt-store bw)")
+    ap.add_argument("--memo-path", default=None,
+                    help="JSON warm-start memo: a recurring workload seeds "
+                         "Caption at its remembered converged weights")
+    ap.add_argument("--duels", type=int, default=0,
+                    help="paired probe duels per Caption candidate point "
+                         "(noise-robust probing); 0 = single-sample")
     args = ap.parse_args(argv)
 
     arch, opt_cfg, opt, params, opt_state, n_params, placement, topo = build(
@@ -117,8 +124,10 @@ def main(argv=None):
     caption = None
     caption_window = None
     arbiter = None
+    memo = None
     if args.caption and opt is not None:
-        ccfg = CaptionConfig(epoch_steps=args.caption_epoch_steps)
+        ccfg = CaptionConfig(epoch_steps=args.caption_epoch_steps,
+                             duel_count=args.duels)
         if placement is not None:
             caption = CaptionController.from_plan(
                 placement, "opt_state", topo, ccfg)
@@ -133,6 +142,9 @@ def main(argv=None):
         arbiter = CaptionArbiter(topo, budgeted_config(topo, args.slow_budget))
         arbiter.register("opt_state", caption)
         caption_window = EpochWindow(opt.telemetry)
+        if args.memo_path:
+            memo = WarmStartMemo.load(args.memo_path)
+            caption.attach_memo(memo)
 
     data = TokenPipeline(DataConfig(
         vocab=cfg.vocab_padded, batch=args.batch, seq=args.seq, seed=17))
@@ -223,6 +235,10 @@ def main(argv=None):
             ckpt.save(step + 1, (params, opt_state), metadata={"arch": cfg.name})
     ckpt.wait()
     strag.close()
+    if memo is not None:
+        memo.save(args.memo_path)
+        print(f"warmstart: entries={len(memo)} hits={memo.hits} "
+              f"misses={memo.misses} -> {args.memo_path}")
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
           f"redispatched={strag.stats.redispatched}")
     return losses

@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import perfmodel
 from repro.core.caption import CaptionController
+from repro.core.classifier import AccessProfile
 from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY, EpochWindow
 from repro.core.tiers import OpClass, TierTopology
@@ -49,6 +50,34 @@ class Request:
     @property
     def latency(self) -> float:
         return (self.finished_at or time.perf_counter()) - self.submitted_at
+
+
+def kv_access_profile(cfg: ArchConfig, max_batch: int, max_len: int, *,
+                      page_t: int = 64, item_bytes: int = 4,
+                      compute_seconds: float = 0.0,
+                      deadline_seconds: Optional[float] = None
+                      ) -> AccessProfile:
+    """AccessProfile of the tiered KV cache under steady decode.
+
+    One decode step streams the whole live KV window once (attention
+    reads every cached token) and appends one token row per sequence —
+    massively parallel page gathers, shallow dependent chains.  The
+    drivers feed this to :meth:`CaptionController.from_profile` so the
+    §6.1 taxonomy drives controller seeding: against a latency-class
+    deadline (µs SLO) the profile classifies LATENCY_BOUND and the KV
+    controller is fast-pinned; the ordinary batch-serving shape
+    classifies bandwidth-bound and keeps the planner's slow prior."""
+    hd = cfg.resolved_head_dim
+    row = 2 * cfg.n_layers * cfg.n_kv_heads * hd * item_bytes  # K+V, 1 tok
+    return AccessProfile(
+        bytes_read_per_step=float(row * max_len * max_batch),
+        bytes_written_per_step=float(row * max_batch),
+        dependent_chain=1,  # page gathers are independent across heads
+        parallelism=max(max_batch * cfg.n_kv_heads, 1),
+        granularity=max(page_t * hd * item_bytes, 1),
+        compute_seconds=compute_seconds,
+        deadline_seconds=deadline_seconds,
+    )
 
 
 class ServingEngine:

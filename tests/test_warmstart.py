@@ -1,0 +1,222 @@
+"""Warm-start memo tests: JSON persistence roundtrip, fingerprint
+stability across equivalent windows, structural invalidation (topology
+signature + drift signature), the CaptionController warm-start flow,
+and the elastic remove/add_device interaction."""
+import dataclasses
+
+import pytest
+
+from repro.core.caption import CaptionConfig, CaptionController, EpochMetrics
+from repro.core.telemetry import EpochWindow, Telemetry
+from repro.core.tiers import CXL_A, CXL_B, TierTopology, paper_topology
+from repro.core.warmstart import (WarmStartMemo, WorkloadFingerprint,
+                                  fingerprint_counters, fingerprint_metrics,
+                                  topology_signature)
+
+from benchmarks.fig8_dlrm import throughput as _fig8_throughput
+from benchmarks.fig11_caption import snc_topology as _snc_topology
+
+CFG = CaptionConfig(probe_epochs=2, step=0.05, min_step=0.01,
+                    hysteresis=0.01)
+
+
+def _tput(topo, f):
+    return _fig8_throughput(topo.fast, topo.slow, f, 32)
+
+
+def _converge(ctl, topo, epochs=256):
+    for epoch in range(epochs):
+        ctl.observe(EpochMetrics(throughput=_tput(topo, ctl.fraction)))
+        if ctl.converged:
+            return epoch + 1
+    raise AssertionError(f"did not converge: {ctl.phase}")
+
+
+# -- fingerprints --------------------------------------------------------------
+def test_fingerprint_stable_across_equivalent_windows():
+    """Sampling jitter within a quantization bucket maps to one key."""
+    topo = paper_topology()
+    a = fingerprint_metrics(
+        EpochMetrics(throughput=1.0, write_ratio=0.24, slow_bw=100e9,
+                     writer_concurrency=8), topo)
+    b = fingerprint_metrics(
+        EpochMetrics(throughput=2.0, write_ratio=0.26, slow_bw=120e9,
+                     writer_concurrency=9), topo)
+    assert a.key() == b.key()
+    # ... and a genuinely different workload maps elsewhere
+    c = fingerprint_metrics(
+        EpochMetrics(throughput=1.0, write_ratio=0.9, slow_bw=1e9,
+                     writer_concurrency=64), topo)
+    assert c.key() != a.key()
+
+
+def test_fingerprint_counters_matches_metrics_features():
+    tel = Telemetry()
+    win = EpochWindow(tel)
+    tel.record_move("fast", "slow", 3000, 0.0)
+    tel.record_move("slow", "fast", 1000, 0.0)
+    win.gauge("writer_concurrency", 4)
+    counters = win.tick(seconds=1.0)
+    feats = counters.workload_features("slow")
+    assert feats["write_ratio"] == pytest.approx(0.75)
+    assert feats["slow_bw"] == pytest.approx(4000.0)
+    assert feats["parallelism"] == 4
+    fp = fingerprint_counters(counters, paper_topology(), slow="slow")
+    assert fp.write_ratio == pytest.approx(0.75)
+    assert fp.topology == topology_signature(paper_topology())
+
+
+def test_memo_json_roundtrip(tmp_path):
+    topo = paper_topology()
+    fp = fingerprint_metrics(
+        EpochMetrics(throughput=1.0, write_ratio=0.25, slow_bw=10e9,
+                     writer_concurrency=8), topo)
+    memo = WarmStartMemo(drift_threshold=0.4)
+    memo.record(fp, (0.15, 0.05))
+    path = tmp_path / "memo.json"
+    memo.save(str(path))
+    loaded = WarmStartMemo.load(str(path))
+    assert loaded.drift_threshold == pytest.approx(0.4)
+    assert len(loaded) == 1
+    assert loaded.lookup(fp) == (0.15, 0.05)
+    assert loaded.hits == 1
+    # a missing file is an empty memo, never a crash
+    empty = WarmStartMemo.load(str(tmp_path / "nope.json"))
+    assert len(empty) == 0 and empty.lookup(fp) is None
+
+
+def test_memo_invalidation_topology_and_drift():
+    topo = TierTopology(fast=paper_topology().fast, slows=(CXL_A, CXL_B))
+    fp = fingerprint_metrics(
+        EpochMetrics(throughput=1.0, write_ratio=0.25, slow_bw=100e9,
+                     writer_concurrency=8), topo)
+    memo = WarmStartMemo(drift_threshold=0.2)
+    memo.record(fp, (0.1, 0.1))
+    # topology change (hot-remove) -> different signature -> miss
+    fp_removed = dataclasses.replace(
+        fp, topology=topology_signature(topo.remove_device(CXL_B.name)))
+    assert memo.lookup(fp_removed) is None
+    assert memo.misses == 1 and memo.drift_misses == 0
+    # same quantization bucket but raw route bandwidth drifted -> miss
+    fp_drift = dataclasses.replace(fp, slow_bw=130e9)
+    assert fp_drift.key() == fp.key()
+    assert memo.lookup(fp_drift) is None
+    assert memo.drift_misses == 1
+    # the undrifted workload still hits
+    assert memo.lookup(fp) == (0.1, 0.1)
+
+
+def test_memo_validation():
+    with pytest.raises(ValueError):
+        WarmStartMemo(drift_threshold=-0.1)
+
+
+# -- controller warm-start flow ------------------------------------------------
+def test_cold_walk_records_and_warm_run_skips_the_walk():
+    topo = _snc_topology()
+    memo = WarmStartMemo()
+    cold = CaptionController(topo, CFG, initial_fraction=0.0)
+    cold.attach_memo(memo)
+    cold_epochs = _converge(cold, topo)
+    assert len(memo) == 1
+    (entry,) = memo.entries().values()
+    assert entry["weights"] == pytest.approx(list(cold.weights))
+
+    warm = CaptionController(topo, CFG, initial_fraction=0.0)
+    warm.attach_memo(WarmStartMemo.from_json(memo.to_json()))
+    d0 = warm.observe(EpochMetrics(throughput=_tput(topo, 0.0)))
+    # first decision lands AT the remembered optimum (<= 2pp per device)
+    assert "warm-start" in d0.reason
+    assert all(abs(a - b) <= 0.02
+               for a, b in zip(warm.weights, cold.weights))
+    warm_epochs = 1 + _converge(warm, topo)
+    # one confirmation stint, then hold — not a re-walk
+    assert warm_epochs <= 2 * CFG.probe_epochs
+    assert warm_epochs < cold_epochs
+
+
+def test_memo_miss_walks_cold_and_different_workload_files_new_entry():
+    topo = _snc_topology()
+    memo = WarmStartMemo()
+    ctl = CaptionController(topo, CFG, initial_fraction=0.0)
+    ctl.attach_memo(memo)
+    d0 = ctl.observe(EpochMetrics(throughput=_tput(topo, 0.0)))
+    assert "warm-start" not in d0.reason  # nothing remembered yet
+    _converge(ctl, topo)
+    assert len(memo) == 1
+
+    # a different workload (distinct fingerprint) walks cold and files a
+    # SECOND entry instead of clobbering the first
+    ctl2 = CaptionController(topo, CFG, initial_fraction=0.0)
+    ctl2.attach_memo(memo)
+    for _ in range(256):
+        ctl2.observe(EpochMetrics(
+            throughput=_tput(topo, ctl2.fraction),
+            write_ratio=0.9, slow_bw=5e9, writer_concurrency=64))
+        if ctl2.converged:
+            break
+    assert ctl2.converged and len(memo) == 2
+
+
+def test_warm_start_respects_capacity_floor():
+    """Remembered weights below the plan's floor are clamped up."""
+    topo = _snc_topology()
+    memo = WarmStartMemo()
+    fp = fingerprint_metrics(EpochMetrics(throughput=1.0), topo)
+    memo.record(fp, (0.05,))
+    ctl = CaptionController(topo, CFG, initial_fraction=0.3,
+                            min_fraction=0.2)
+    ctl.attach_memo(memo)
+    d = ctl.observe(EpochMetrics(throughput=_tput(topo, 0.3)))
+    assert "warm-start" in d.reason
+    assert ctl.fraction == pytest.approx(0.2)
+
+
+# -- elastic interaction -------------------------------------------------------
+def test_remove_device_reopens_and_refingerprints():
+    topo = TierTopology(fast=_snc_topology().fast, slows=(CXL_A, CXL_B))
+    memo = WarmStartMemo()
+    fp = fingerprint_metrics(EpochMetrics(throughput=1.0), topo)
+    memo.record(fp, (0.12, 0.08))
+    ctl = CaptionController(topo, CFG, initial_fraction=0.0)
+    ctl.attach_memo(memo)
+    d = ctl.observe(EpochMetrics(throughput=1.0))
+    assert "warm-start" in d.reason and ctl.weights == [0.12, 0.08]
+
+    ctl.remove_device(CXL_B.name)
+    assert not ctl.converged  # the walk re-opened
+    # next epoch re-fingerprints against the SHRUNKEN topology: the old
+    # entry's signature no longer matches, so no stale warm-start
+    d2 = ctl.observe(EpochMetrics(throughput=1.0))
+    assert "warm-start" not in d2.reason
+    assert memo.misses >= 1
+    # a converged walk on the new topology files under the new signature
+    for _ in range(256):
+        ctl.observe(EpochMetrics(
+            throughput=_fig8_throughput(ctl.topology.fast,
+                                        ctl.topology.slows[0],
+                                        ctl.fraction, 32)))
+        if ctl.converged:
+            break
+    assert ctl.converged and len(memo) == 2
+    sigs = {e["topology"] for e in memo.entries().values()}
+    assert topology_signature(ctl.topology) in sigs
+
+
+def test_add_device_reopens_and_new_topology_can_warm_start():
+    """After hot-add, the re-fingerprint may itself warm-start — if the
+    GROWN pool was seen (and converged) before, its entry hits."""
+    topo2 = TierTopology(fast=_snc_topology().fast, slows=(CXL_A,))
+    topo3 = topo2.add_device(CXL_B)
+    memo = WarmStartMemo()
+    memo.record(fingerprint_metrics(EpochMetrics(throughput=1.0), topo3),
+                (0.1, 0.1))
+    ctl = CaptionController(topo2, CFG, initial_fraction=0.2)
+    ctl.attach_memo(memo)
+    ctl.observe(EpochMetrics(throughput=1.0))  # fingerprints topo2: miss
+    assert memo.hits == 0
+    ctl.add_device(CXL_B)
+    assert not ctl.converged
+    d = ctl.observe(EpochMetrics(throughput=1.0))
+    assert "warm-start" in d.reason and memo.hits == 1
+    assert ctl.weights == [0.1, 0.1]
