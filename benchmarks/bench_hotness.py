@@ -1,0 +1,377 @@
+"""Hotness-driven semantic tiering benchmark (ISSUE 10).
+
+The paper's DLRM experiments (Figs. 8/9) fix WHERE pages live but not
+WHICH pages: placement is address-anonymous.  Under Zipf-skewed access
+— embedding rows in a recommender, experts under a hot routing mix —
+the same fast-tier page budget buys far more served traffic when the
+hot keys are pinned fast and only the cold tail interleaves across the
+CXL devices.  This benchmark gates the semantic layer end-to-end:
+
+* ``placement`` — a Zipf-skewed row ledger over a three-CXL-device
+  topology: hotness-aware placement must STRICTLY beat the
+  hotness-blind N:M uniform interleave on modeled throughput (the
+  Fig. 8 closed-loop model fed with each placement's real per-device
+  traffic shares), at the identical page budget.
+* ``dlrm`` — the real Pallas ``embedding_reduce`` kernel through a
+  :class:`SemanticTensor`: blind and hotness-aware placements produce
+  byte-identical bag reductions (and match the dense reference).
+* ``moe`` — deepseek-moe-16b-style routed MLP with a skewed router:
+  ``aux["expert_counts"]`` feeds the ledger, per-expert weight pages
+  re-tier, and reconstructed-parameter logits stay bit-exact.
+* ``flip`` — a mid-run skew flip re-tiers in O(moved-keys)
+  run-coalesced descriptors (``descriptors <= moved_keys <
+  moved_pages``) with ZERO retraces of a jitted consumer.
+* ``caption`` — the hot-set size as a walked coordinate: the
+  controller converges onto the fast-tier budget floor, a hotness
+  flip re-opens the converged walk via membership drift, and the walk
+  re-converges with the new hot set pinned fast.
+
+``--smoke`` runs the CI-sized lane; the nightly uploads
+``BENCH_hotness.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.fig8_dlrm import throughput_nd
+from repro.core.caption import CaptionConfig, CaptionController, EpochMetrics
+from repro.core.hotness import HotnessLedger, HotSetCoordinator, SemanticTensor
+from repro.core.mover import BulkMover
+from repro.core.telemetry import Telemetry
+from repro.core.tiers import paper_three_device_topology
+
+THREADS = 32
+#: fast tier holds this fraction of the table; the rest must live on CXL.
+FAST_BUDGET = 0.25
+
+SMOKE = dict(n_keys=64, rows_per_key=8, page_rows=2, dim=8, alpha=1.1,
+             n_experts=16, walk_epochs=40, flip_epochs=10)
+FULL = dict(n_keys=512, rows_per_key=8, page_rows=2, dim=32, alpha=1.1,
+            n_experts=32, walk_epochs=64, flip_epochs=16)
+
+
+def _zipf_scores(n_keys: int, alpha: float, rng) -> np.ndarray:
+    """Zipf popularity over a RANDOM key permutation — hot keys are
+    scattered in address space, so rank order != address order and a
+    blind interleave cannot pin them fast by accident."""
+    s = np.zeros(n_keys)
+    s[rng.permutation(n_keys)] = 1.0 / (1.0 + np.arange(n_keys)) ** alpha
+    return s / s.sum()
+
+
+def _traffic_weights(st: SemanticTensor, topo) -> tuple[float, ...]:
+    """Per-slow-device share of OBSERVED traffic under the current
+    placement — what the closed-loop model actually serves from each
+    device (page shares are what blind placement optimizes; traffic
+    shares are what the memory system sees)."""
+    dev = st.key_device()
+    s = st.ledger.scores()
+    total = max(float(s.sum()), 1e-12)
+    return tuple(float(s[dev == i + 1].sum()) / total
+                 for i in range(len(topo.slows)))
+
+
+def _modeled(st: SemanticTensor, topo) -> float:
+    return throughput_nd(topo.fast, topo.slows, _traffic_weights(st, topo),
+                         THREADS)
+
+
+def _budget_weights(topo, budget: float = FAST_BUDGET) -> tuple[float, ...]:
+    """Slow-share vector for a fixed fast-tier page budget, split
+    bandwidth-proportionally across the CXL devices (Fig. 10 prior)."""
+    bw = topo.bandwidth_weights()
+    return tuple((1.0 - budget) * b for b in bw)
+
+
+def _section_placement(p, topo, names, payload) -> tuple[list[str], object]:
+    """Same page budget, same data, same traffic — placement is the only
+    variable.  Returns the semantic tensor for the flip section."""
+    rng = np.random.default_rng(0)
+    arr = jnp.asarray(
+        rng.normal(size=(p["n_keys"] * p["rows_per_key"], p["dim"])),
+        jnp.float32)
+    led = HotnessLedger(p["n_keys"], decay=0.5)
+    led.record(_zipf_scores(p["n_keys"], p["alpha"], rng) * 1e6)
+    weights = _budget_weights(topo)
+    st = SemanticTensor.from_array(
+        arr, rows_per_key=p["rows_per_key"], weights=weights,
+        device_names=names, page_rows=p["page_rows"], ledger=led,
+        headroom=p["n_keys"] * p["rows_per_key"] // p["page_rows"],
+        placement="blind")
+    ref = np.asarray(st.to_array())
+    blind_share, t_blind = st.hot_traffic_share(), _modeled(st, topo)
+
+    mover = BulkMover(topo)
+    telem = Telemetry()
+    try:
+        st = st.retier(weights, mover=mover, telemetry=telem)
+    finally:
+        mover.close()
+    sem_share, t_sem = st.hot_traffic_share(), _modeled(st, topo)
+
+    assert np.array_equal(ref, np.asarray(st.to_array())), \
+        "re-tier corrupted the table"
+    assert sem_share > blind_share, (sem_share, blind_share)
+    assert t_sem > t_blind, \
+        f"hotness-aware {t_sem:.0f} <= blind {t_blind:.0f} inf/s"
+    counters = telem.snapshot()["counters"]
+    payload["placement"] = {
+        "fast_budget": FAST_BUDGET,
+        "blind": {"hot_traffic": blind_share, "modeled_inf_s": t_blind},
+        "semantic": {"hot_traffic": sem_share, "modeled_inf_s": t_sem},
+        "speedup": t_sem / t_blind,
+        "promoted_pages": counters.get("semantic_promoted_pages", 0),
+        "demoted_pages": counters.get("semantic_demoted_pages", 0),
+        "retier": st.last_retier,
+    }
+    rows = [
+        f"hotness/placement/win,0,blind={t_blind:.0f};sem={t_sem:.0f}"
+        f";x{t_sem / t_blind:.2f};hot_traffic={blind_share:.2f}"
+        f"->{sem_share:.2f}",
+    ]
+    return rows, st
+
+
+def _section_dlrm(p, topo, names, payload) -> list[str]:
+    """Real Pallas kernel through both placements: byte-identical."""
+    from repro.kernels.embedding_reduce import ops
+    rng = np.random.default_rng(1)
+    rows_total = p["n_keys"] * p["rows_per_key"]
+    # integer-valued fp32: bag sums are exact under ANY accumulation
+    # order, so cross-placement equality is bitwise — a single
+    # misplaced row changes the result, fp rounding never does
+    table = jnp.asarray(rng.integers(-8, 9, size=(rows_total, 64)),
+                        jnp.float32)
+    # Zipf-skewed bag lookups over ROWS (the DLRM access pattern)
+    row_p = np.repeat(_zipf_scores(p["n_keys"], p["alpha"], rng),
+                      p["rows_per_key"])
+    idx = jnp.asarray(rng.choice(rows_total, p=row_p / row_p.sum(),
+                                 size=(32, 16)))
+    w = jnp.ones((32, 16), jnp.float32)
+    weights = _budget_weights(topo)
+    st = SemanticTensor.from_array(
+        table, rows_per_key=p["rows_per_key"], weights=weights,
+        device_names=names, page_rows=p["page_rows"],
+        headroom=rows_total // p["page_rows"], placement="blind")
+    # bag_reduce records the touched rows into the ledger for free
+    out_blind = st.bag_reduce(idx, w, reduce_fn=ops.embedding_reduce)
+    st.ledger.tick()
+    t0 = time.perf_counter()
+    st = st.retier(weights)
+    dt = time.perf_counter() - t0
+    out_sem = st.bag_reduce(idx, w, reduce_fn=ops.embedding_reduce)
+    dense = (jnp.take(table, idx, axis=0) * w[..., None]).sum(axis=1)
+    assert np.array_equal(np.asarray(out_blind), np.asarray(out_sem)), \
+        "DLRM bag reduction drifted across placements"
+    assert np.array_equal(np.asarray(out_sem), np.asarray(dense))
+    payload["dlrm"] = {
+        "hot_traffic": st.hot_traffic_share(),
+        "retier": st.last_retier,
+        "retier_s": dt,
+        "bitexact": True,
+    }
+    return [
+        f"hotness/dlrm/bitexact,{dt * 1e6:.0f},"
+        f"hot_traffic={st.hot_traffic_share():.2f}"
+        f";moved_keys={st.last_retier.get('moved_keys', 0)}",
+    ]
+
+
+def _section_moe(p, topo, names, payload) -> list[str]:
+    """Router dispatch counts -> ledger -> per-expert re-tier; logits
+    bit-exact with the expert stack reconstructed from either layout."""
+    from repro.models import moe, registry
+    arch = registry.get("deepseek-moe-16b").tiny()
+    cfg = dataclasses.replace(
+        arch.cfg,
+        moe=dataclasses.replace(arch.cfg.moe, n_experts=p["n_experts"],
+                                top_k=2))
+    params = moe.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    # unit 0's stacked expert up-projection: (E, d, f) -> E keys of d rows
+    w_up = params["units"]["moe"]["experts"]["w_up"][0]
+    E, d, f = w_up.shape
+    led = HotnessLedger(p["n_experts"], decay=0.5)
+    weights = _budget_weights(topo)
+    st = SemanticTensor.from_array(
+        w_up.reshape(E * d, f), rows_per_key=d, weights=weights,
+        device_names=names, page_rows=d // 4, ledger=led,
+        headroom=E * 4, placement="blind")
+    # Skew the routing mix: bias the router toward a hot subset drawn
+    # from the experts the blind interleave put on SLOW devices — the
+    # adversarial case the semantic layer exists for (heavily-routed
+    # experts serving their dispatches over the CXL link).
+    cold_placed = np.nonzero(st.key_device() != 0)[0]
+    hot = rng.choice(cold_placed, size=max(2, p["n_experts"] // 8),
+                     replace=False)
+    bias = np.zeros(p["n_experts"], np.float32)
+    bias[hot] = 4.0
+    params["units"]["moe"]["router"] = (
+        params["units"]["moe"]["router"] + jnp.asarray(bias))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_padded, size=(2, 16)))
+    logits0, aux = moe.forward_with_aux(cfg, params, tokens)
+    counts = np.asarray(aux["expert_counts"])
+    assert counts.sum() > 0
+    led.record(counts)
+
+    def with_stack(stack):
+        p2 = jax.tree_util.tree_map(lambda x: x, params)
+        p2["units"]["moe"]["experts"] = dict(
+            params["units"]["moe"]["experts"])
+        p2["units"]["moe"]["experts"]["w_up"] = (
+            params["units"]["moe"]["experts"]["w_up"].at[0].set(stack))
+        return p2
+
+    lb = moe.forward(cfg, with_stack(st.to_array().reshape(E, d, f)), tokens)
+    st = st.retier(weights)
+    ls = moe.forward(cfg, with_stack(st.to_array().reshape(E, d, f)), tokens)
+    assert np.array_equal(np.asarray(lb), np.asarray(logits0))
+    assert np.array_equal(np.asarray(ls), np.asarray(logits0)), \
+        "MoE logits drifted across expert placements"
+    assert st.last_retier.get("promoted_pages", 0) > 0, \
+        "hot experts were never promoted off the CXL devices"
+    hot_share = st.hot_traffic_share()
+    # the skewed routing concentrates on few experts; pinning them fast
+    # captures well above the page budget's worth of dispatches
+    assert hot_share > FAST_BUDGET + 0.1, hot_share
+    payload["moe"] = {
+        "n_experts": E,
+        "hot_router_experts": sorted(int(x) for x in hot),
+        "dispatch_top4": np.argsort(-counts)[:4].tolist(),
+        "hot_traffic": hot_share,
+        "retier": st.last_retier,
+        "bitexact": True,
+    }
+    return [
+        f"hotness/moe/bitexact,0,E={E};hot_traffic={hot_share:.2f}"
+        f";promoted={st.last_retier.get('promoted_pages', 0)}",
+    ]
+
+
+def _section_flip(p, topo, names, st: SemanticTensor, payload) -> list[str]:
+    """Mid-run skew flip: O(moved-keys) descriptors, zero retraces."""
+    rng = np.random.default_rng(3)
+    traces = [0]
+
+    def step(t, i):
+        traces[0] += 1
+        return t.gather_rows(i)
+
+    fn = jax.jit(step)
+    idx = jnp.arange(min(64, st.logical_rows))
+    before = np.asarray(fn(st.it, idx))
+
+    # flip the skew: a fresh permutation, fed until the EWMA crosses
+    flipped = _zipf_scores(p["n_keys"], p["alpha"], rng) * 1e6
+    for _ in range(p["flip_epochs"]):
+        st.ledger.record(flipped)
+        st.ledger.tick()
+    drift = st.drift()
+    mover = BulkMover(topo)
+    try:
+        d0 = mover.descriptors_submitted
+        st = st.retier(_budget_weights(topo), mover=mover)
+        descs = mover.descriptors_submitted - d0
+    finally:
+        mover.close()
+    after = np.asarray(fn(st.it, idx))
+
+    r = st.last_retier
+    assert r["moved_pages"] > 0, "flip moved nothing"
+    assert descs <= r["moved_keys"], (descs, r)
+    assert descs < r["moved_pages"], (descs, r)
+    assert np.array_equal(before, after), "flip corrupted the table"
+    assert traces[0] == 1, f"{traces[0]} traces across the flip"
+    payload["flip"] = {"drift": drift, "descriptors": int(descs),
+                       "traces": traces[0], **r}
+    return [
+        f"hotness/flip/odelta,0,drift={drift:.2f};descs={descs}"
+        f"<=keys={r['moved_keys']}<pages={r['moved_pages']};traces=1",
+    ]
+
+
+def _section_caption(p, topo, names, payload) -> list[str]:
+    """The hot-set size as a walked coordinate with drift re-opening."""
+    rng = np.random.default_rng(4)
+    arr = jnp.asarray(
+        rng.normal(size=(p["n_keys"] * p["rows_per_key"], p["dim"])),
+        jnp.float32)
+    led = HotnessLedger(p["n_keys"], decay=0.5)
+    skew = _zipf_scores(p["n_keys"], p["alpha"], rng) * 1e6
+    led.record(skew)
+    cfg = CaptionConfig(epoch_steps=1, probe_epochs=1, step=0.1,
+                        min_step=0.02, hysteresis=0.005, drift_threshold=0.0,
+                        write_damp=False)
+    # the fast tier can hold FAST_BUDGET of the pages: the walk may not
+    # shrink the slow share below the capacity floor
+    ctl = CaptionController(topo, cfg, initial_fraction=0.9,
+                            min_fraction=1.0 - FAST_BUDGET)
+    st = SemanticTensor.from_array(
+        arr, rows_per_key=p["rows_per_key"],
+        weights=ctl.weights, device_names=names, page_rows=p["page_rows"],
+        ledger=led, headroom=p["n_keys"] * p["rows_per_key"]
+        // p["page_rows"], placement="semantic")
+    coord = HotSetCoordinator(st, ctl, drift_threshold=0.5)
+    trail, flip_at = [], None
+    for e in range(p["walk_epochs"]):
+        if ctl.converged and flip_at is None:
+            # workload shift mid-run: a brand-new hot set
+            skew = _zipf_scores(p["n_keys"], p["alpha"], rng) * 1e6
+            flip_at = e
+        coord.st.ledger.record(skew)
+        t = _modeled(coord.st, topo)
+        coord.epoch(EpochMetrics(throughput=t))
+        trail.append((round(ctl.fraction, 3), round(t)))
+    assert flip_at is not None, "walk never converged before the flip"
+    assert coord.reopens >= 1, "hot-set drift did not re-open the walk"
+    assert ctl.converged, "walk did not re-converge after the flip"
+    final_share = coord.st.hot_traffic_share()
+    assert final_share > FAST_BUDGET, final_share
+    payload["caption"] = {
+        "flip_epoch": flip_at, "reopens": coord.reopens,
+        "final_fraction": ctl.fraction, "final_hot_traffic": final_share,
+        "trail": trail,
+    }
+    return [
+        f"hotness/caption/walk,0,flip@{flip_at};reopens={coord.reopens}"
+        f";frac={ctl.fraction:.2f};hot_traffic={final_share:.2f}",
+    ]
+
+
+def run(smoke: bool = False) -> tuple[list[str], dict]:
+    p = SMOKE if smoke else FULL
+    topo = paper_three_device_topology()
+    names = (topo.fast.name,) + tuple(t.name for t in topo.slows)
+    payload = {"config": {"smoke": smoke, **p, "threads": THREADS,
+                          "devices": list(names)}}
+    rows, st = _section_placement(p, topo, names, payload)
+    rows += _section_dlrm(p, topo, names, payload)
+    rows += _section_moe(p, topo, names, payload)
+    rows += _section_flip(p, topo, names, st, payload)
+    rows += _section_caption(p, topo, names, payload)
+    return rows, payload
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized lane")
+    ap.add_argument("--out", default="BENCH_hotness.json")
+    args = ap.parse_args()
+    rows, payload = run(smoke=args.smoke)
+    payload["timestamp"] = time.time()
+    for r in rows:
+        print(r)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"hotness/json,0,wrote={args.out}")
+
+
+if __name__ == "__main__":
+    main()

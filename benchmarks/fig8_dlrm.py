@@ -8,12 +8,21 @@ bandwidth-bound past ~24 threads; putting ~20% of pages on CXL then
 RAISES throughput ~11% — the paper's key positive interleaving result,
 which the placement planner must reproduce from first principles.
 
+The ``fig8/semantic`` section extends the figure with ISSUE 10's
+Zipf-skewed lane: the SAME page budget, but the embedding rows a
+Zipf-80/20 lookup stream actually hammers are pinned to the fast tier
+by a hotness ledger, and the real Pallas ``embedding_reduce`` kernel
+runs through the semantic layout bit-exactly in both placements.
+
 Also times the real Pallas embedding_reduce kernel over an
-InterleavedTensor (exactness asserted in tests).
+InterleavedTensor (exactness asserted in tests).  ``--smoke`` is the
+CI lane; the nightly run writes ``BENCH_dlrm.json``.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -67,7 +76,69 @@ def throughput_nd(fast, devs, weights, threads: int) -> float:
     return x
 
 
-def run() -> list[str]:
+def _semantic_section(smoke: bool, payload: dict) -> list[str]:
+    """Zipf-skewed hotness lane over the three-CXL-device preset."""
+    from repro.core.hotness import SemanticTensor
+    from repro.core.tiers import paper_three_device_topology
+    from repro.kernels.embedding_reduce import ops
+
+    topo = paper_three_device_topology()
+    names = (topo.fast.name,) + tuple(t.name for t in topo.slows)
+    n_keys, rpk = (64, 8) if smoke else (512, 8)
+    rows_total = n_keys * rpk
+    rng = np.random.default_rng(0)
+    # integer-valued fp32 rows: bag sums are order-independent, so the
+    # cross-placement equality below is bitwise
+    table = jnp.asarray(rng.integers(-8, 9, size=(rows_total, 64)),
+                        jnp.float32)
+    # Zipf popularity over a random row->rank permutation (hot rows
+    # scattered in address space, the case blind interleave cannot win)
+    zipf = np.zeros(n_keys)
+    zipf[rng.permutation(n_keys)] = 1.0 / (1.0 + np.arange(n_keys)) ** 1.1
+    row_p = np.repeat(zipf, rpk)
+    idx = jnp.asarray(rng.choice(rows_total, p=row_p / row_p.sum(),
+                                 size=(64, 80)))
+    w = jnp.ones((64, 80), jnp.float32)
+
+    budget = 0.25  # fast tier holds a quarter of the table
+    bw = topo.bandwidth_weights()
+    weights = tuple((1.0 - budget) * b for b in bw)
+    st = SemanticTensor.from_array(
+        table, rows_per_key=rpk, weights=weights, device_names=names,
+        page_rows=2, headroom=rows_total // 2, placement="blind")
+    out_blind = st.bag_reduce(idx, w, reduce_fn=ops.embedding_reduce)
+
+    def modeled(s):
+        dev, sc = s.key_device(), s.ledger.scores()
+        total = max(float(sc.sum()), 1e-12)
+        shares = tuple(float(sc[dev == i + 1].sum()) / total
+                       for i in range(len(topo.slows)))
+        return throughput_nd(topo.fast, topo.slows, shares, 32)
+
+    st.ledger.tick()  # bag_reduce recorded the touched rows
+    t_blind, share_blind = modeled(st), st.hot_traffic_share()
+    st = st.retier(weights)
+    t_sem, share_sem = modeled(st), st.hot_traffic_share()
+    out_sem = st.bag_reduce(idx, w, reduce_fn=ops.embedding_reduce)
+    assert np.array_equal(np.asarray(out_blind), np.asarray(out_sem)), \
+        "semantic re-tier changed the bag reduction"
+    assert t_sem > t_blind, (t_sem, t_blind)
+    payload["semantic"] = {
+        "fast_budget": budget,
+        "blind": {"hot_traffic": share_blind, "modeled_inf_s": t_blind},
+        "hotness": {"hot_traffic": share_sem, "modeled_inf_s": t_sem},
+        "speedup": t_sem / t_blind,
+        "retier": st.last_retier,
+    }
+    return [
+        f"fig8/semantic/zipf,0,blind={t_blind:.0f};hot={t_sem:.0f}"
+        f";x{t_sem / t_blind:.2f};hot_traffic={share_blind:.2f}"
+        f"->{share_sem:.2f}",
+    ]
+
+
+def run(smoke: bool = False, payload: dict | None = None) -> list[str]:
+    payload = payload if payload is not None else {}
     rows = []
     topo = paper_topology()
     l8, cxl = topo.fast, topo.slow
@@ -130,8 +201,24 @@ def run() -> list[str]:
     dt = time.perf_counter() - t0
     rows.append(f"fig8/measured/kernel_bag64x80,{dt*1e6:.1f},"
                 f"rows_per_s={64*80/dt:.0f}")
+    rows += _semantic_section(smoke, payload)
+    payload["rows"] = list(rows)
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized lane")
+    ap.add_argument("--out", default="BENCH_dlrm.json")
+    args = ap.parse_args()
+    payload: dict = {"smoke": args.smoke}
+    rows = run(smoke=args.smoke, payload=payload)
+    payload["timestamp"] = time.time()
+    print("\n".join(rows))
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"fig8/json,0,wrote={args.out}")
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -617,6 +617,19 @@ class CaptionController:
             "shift, re-probing",
             phase=Phase.MEASURE)
 
+    def reopen(self, reason: str) -> Decision:
+        """Re-open the walk on an EXTERNAL drift signal.
+
+        The route-bandwidth drift detector above is the controller's own
+        re-open trigger; semantic layers have their own notion of the
+        workload shifting under a converged walk — hot-set membership
+        churn in ``core/hotness.py`` is the canonical caller — and this
+        is their public entry: reset the walk exactly like a bandwidth
+        drift re-probe and emit the (unchanged-weights) MEASURE decision
+        so the history records why."""
+        self._reopen()
+        return self._emit(False, f"re-opened: {reason}", phase=Phase.MEASURE)
+
     def _reopen(self) -> None:
         """Reset the walk state for a fresh convergence run."""
         self.phase = Phase.WARMUP

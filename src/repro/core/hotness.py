@@ -1,0 +1,513 @@
+"""Hotness-driven semantic tiering (ISSUE 10).
+
+The paper's DLRM result (Figs. 8/9) shows bandwidth-bound embedding
+reduction is exactly the workload that *gains* from CXL interleaving —
+but only if the hot working set stays on the fast tier.  The page
+machinery below this module is address-anonymous: a Zipf-hot embedding
+row or a heavily-routed MoE expert is as likely to land on the slowest
+CXL device as a cold one.  This module makes placement *semantic*:
+
+* :class:`HotnessLedger` — EWMA-decayed per-key access counters, fed
+  for free from MoE router dispatch counts (``aux["expert_counts"]``
+  in :mod:`repro.models.moe`) and embedding gather indices.  Its
+  :meth:`~HotnessLedger.topk_split` ranks keys hottest-first; the
+  placement planner maps the hot split to fast-pinned pages and the
+  cold split to a bandwidth-weighted interleave across the CXL
+  devices (the Fig. 10 best-static-ratio prior).
+* :class:`SemanticTensor` — a view over
+  :class:`~repro.core.interleave.InterleavedTensor` that groups rows
+  (or flattened experts) into placement *keys* of ``rows_per_key``
+  rows.  A key's pages are page-aligned and contiguous, so promotion/
+  demotion rides the existing O(Δ) run-coalesced actuation path:
+  billed routes, optional donation, shape-stable shards — a hotness
+  shift never retraces jitted consumers.
+* :class:`HotSetCoordinator` — Caption integration: the hot-set size
+  is a *walked coordinate*.  The controller's slow-share weight vector
+  is reinterpreted semantically (fast share = hottest keys by rank,
+  slow shares = cold keys dealt bandwidth-proportionally), so the
+  walk trades fast-tier pages between the hot set and everything else
+  under the arbiter's budget, and hot-set membership *drift* re-opens
+  a converged walk exactly like route-bandwidth drift does.
+
+Gated end-to-end by ``benchmarks/bench_hotness.py``: hotness-aware
+placement strictly beats hotness-blind uniform interleave on modeled
+throughput under Zipf skew, outputs stay bit-exact, and a mid-run skew
+flip re-tiers in O(moved-keys) descriptors with zero retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.interleave import InterleavedTensor, _ExplicitAssignment
+from repro.core.policy import largest_remainder_split
+from repro.core.telemetry import GLOBAL_TELEMETRY, Telemetry
+
+
+class HotnessLedger:
+    """EWMA-decayed per-key access-frequency counters.
+
+    Keys are whatever the semantic layer places: MoE experts, embedding
+    row blocks, table shards.  Traffic is recorded *into the current
+    epoch* (:meth:`record` for ready-made count vectors like the MoE
+    router's dispatch histogram, :meth:`record_keys` /
+    :meth:`record_rows` for index streams); :meth:`tick` folds the
+    epoch into the EWMA (``ewma = decay * ewma + epoch``) so a key
+    that stops being accessed decays toward cold at ``decay`` per
+    epoch instead of staying hot forever.  :meth:`scores` includes the
+    partially-accumulated current epoch, so placement decisions made
+    mid-epoch see the freshest traffic.
+    """
+
+    def __init__(self, n_keys: int, *, decay: float = 0.8):
+        if n_keys <= 0:
+            raise ValueError("n_keys must be positive")
+        if not 0.0 <= decay < 1.0:
+            raise ValueError("decay must be in [0, 1)")
+        self.n_keys = int(n_keys)
+        self.decay = float(decay)
+        self._ewma = np.zeros(self.n_keys, np.float64)
+        self._epoch = np.zeros(self.n_keys, np.float64)
+        self.epochs = 0
+        self.total_observed = 0.0
+        #: hot-set reference for drift detection (see :meth:`mark`).
+        self._marked: Optional[frozenset] = None
+
+    # -- feeding -------------------------------------------------------------
+    def record(self, counts) -> None:
+        """Add a per-key count vector (e.g. MoE ``aux["expert_counts"]``)."""
+        c = np.asarray(counts, np.float64).reshape(-1)
+        if c.shape != (self.n_keys,):
+            raise ValueError(
+                f"count vector has {c.shape[0]} entries, ledger has "
+                f"{self.n_keys} keys")
+        self._epoch += c
+
+    def record_keys(self, keys, weights=None) -> None:
+        """Add an access-stream of key ids (embedding gather granularity)."""
+        k = np.asarray(keys).reshape(-1)
+        if k.size == 0:
+            return
+        if k.min() < 0 or k.max() >= self.n_keys:
+            raise ValueError("key id out of range")
+        w = (np.ones(k.size, np.float64) if weights is None
+             else np.asarray(weights, np.float64).reshape(-1))
+        np.add.at(self._epoch, k, w)
+
+    def record_rows(self, rows, rows_per_key: int) -> None:
+        """Add a row-index stream, mapping rows onto their owning key."""
+        r = np.asarray(rows).reshape(-1)
+        if r.size == 0:
+            return
+        self.record_keys(r // int(rows_per_key))
+
+    def tick(self) -> float:
+        """Close the epoch: decay the EWMA and fold the epoch counts in.
+
+        Returns the raw traffic observed this epoch (for telemetry)."""
+        observed = float(self._epoch.sum())
+        self._ewma = self.decay * self._ewma + self._epoch
+        self._epoch = np.zeros(self.n_keys, np.float64)
+        self.epochs += 1
+        self.total_observed += observed
+        return observed
+
+    # -- ranking -------------------------------------------------------------
+    def scores(self) -> np.ndarray:
+        """Current per-key hotness (EWMA + the in-flight epoch)."""
+        return self._ewma + self._epoch
+
+    def rank(self) -> np.ndarray:
+        """Key ids sorted hottest-first (stable: ties keep id order)."""
+        return np.argsort(-self.scores(), kind="stable")
+
+    def topk_split(self, n_hot: int) -> tuple[np.ndarray, np.ndarray]:
+        """(hot keys, cold keys): the ``n_hot`` hottest keys by rank and
+        the remainder, both hottest-first.  The placement contract: hot
+        keys map to fast-pinned pages, cold keys to the bandwidth-
+        weighted CXL interleave (:func:`semantic_assignment`)."""
+        n_hot = int(np.clip(n_hot, 0, self.n_keys))
+        r = self.rank()
+        return r[:n_hot], r[n_hot:]
+
+    def traffic_share(self, keys) -> float:
+        """Fraction of total observed traffic attributed to ``keys``."""
+        s = self.scores()
+        total = float(s.sum())
+        if total <= 0:
+            return 0.0
+        return float(s[np.asarray(keys, np.int64)].sum()) / total
+
+    # -- hot-set drift -------------------------------------------------------
+    def mark(self, n_hot: int) -> None:
+        """Remember the current top-``n_hot`` set as the drift reference
+        (called by the semantic layer at every actuated placement)."""
+        hot, _ = self.topk_split(n_hot)
+        self._marked = frozenset(int(k) for k in hot)
+
+    def drift(self) -> float:
+        """Fraction of the marked hot set that is no longer hot.
+
+        0.0 = membership unchanged (or nothing marked yet); 1.0 = the
+        entire marked set fell out of the top-k.  The
+        :class:`HotSetCoordinator` compares this against its threshold
+        to re-open a converged Caption walk — the semantic analogue of
+        the controller's route-bandwidth drift detector."""
+        if not self._marked:
+            return 0.0
+        hot, _ = self.topk_split(len(self._marked))
+        still = len(self._marked.intersection(int(k) for k in hot))
+        return 1.0 - still / len(self._marked)
+
+
+def semantic_assignment(
+    n_keys: int,
+    pages_per_key: int,
+    hot_keys: np.ndarray,
+    cold_keys: np.ndarray,
+    weights: Sequence[float],
+) -> np.ndarray:
+    """Page -> device-ordinal map from a hot/cold key split.
+
+    Hot keys pin to the fast tier (device 0).  Cold keys are dealt
+    across the slow devices in hotness-rank order with largest-remainder
+    quotas proportional to ``weights`` (the caller passes bandwidth
+    weights or the Caption walk's per-device shares), interleaved so
+    consecutive-rank cold keys alternate devices — the semantic
+    counterpart of the N:M page interleave.  Every key's pages are
+    contiguous (key ``k`` owns pages ``[k*ppk, (k+1)*ppk)``), so a
+    later promotion/demotion of one key ships as one contiguous run."""
+    key_dev = np.zeros(n_keys, np.int8)
+    n_cold = len(cold_keys)
+    if n_cold:
+        w = np.maximum(np.asarray(list(weights), np.float64), 0.0)
+        if w.sum() <= 0:
+            w = np.ones(len(w) or 1)
+        quotas, _ = largest_remainder_split(
+            (w / w.sum() * n_cold).tolist(), n_cold)
+        # Interleave the dealt devices: device d contributes quotas[d]
+        # evenly spaced picks over the cold rank order.
+        order_pos = np.concatenate([
+            (np.arange(q) + 0.5) / q for q in quotas if q > 0
+        ]) if any(q > 0 for q in quotas) else np.zeros(0)
+        order_dev = np.concatenate([
+            np.full(q, d + 1, np.int8) for d, q in enumerate(quotas) if q > 0
+        ]) if any(q > 0 for q in quotas) else np.zeros(0, np.int8)
+        dealt = order_dev[np.argsort(order_pos, kind="stable")]
+        key_dev[np.asarray(cold_keys, np.int64)] = dealt
+    key_dev[np.asarray(hot_keys, np.int64)] = 0
+    return np.repeat(key_dev, int(pages_per_key))
+
+
+@dataclasses.dataclass
+class SemanticTensor:
+    """Hotness-aware placement view over an :class:`InterleavedTensor`.
+
+    Rows are grouped into placement keys of ``rows_per_key`` rows; each
+    key owns ``rows_per_key / page_rows`` whole pages, contiguous in
+    page-id space.  All data-plane access (gather / scatter /
+    bag_reduce) delegates to the underlying tensor — and records the
+    touched keys into the :class:`HotnessLedger` when the indices are
+    concrete, so serving traffic feeds the placement loop for free.
+
+    :meth:`retier` re-plans placement from the ledger's current ranking
+    under a Caption weight vector and actuates the delta through the
+    tensor's run-coalesced O(Δ) path.  With ``headroom`` sized by
+    :meth:`CaptionController.headroom_pages` the whole walk is
+    shape-stable: zero retraces across any sequence of hotness shifts.
+    """
+
+    it: InterleavedTensor
+    rows_per_key: int
+    ledger: HotnessLedger
+    #: logical (un-padded) row count of the source array.
+    logical_rows: int
+    #: actuation summary of the last :meth:`retier` call.
+    last_retier: dict = dataclasses.field(default_factory=dict)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_array(
+        cls,
+        array: jax.Array,
+        *,
+        rows_per_key: int,
+        weights: Sequence[float],
+        device_names: Sequence[str] = ("fast", "slow"),
+        page_rows: Optional[int] = None,
+        placement: str = "blind",
+        ledger: Optional[HotnessLedger] = None,
+        decay: float = 0.8,
+        headroom: int = 0,
+        backend: str = "modeled",
+    ) -> "SemanticTensor":
+        """Build over ``array`` with slow-share ``weights`` (one entry
+        per slow device in ``device_names[1:]``; the fast tier keeps the
+        remainder).
+
+        ``placement="blind"`` starts hotness-anonymous — an N:M
+        interleave in address order, the exact baseline the bench
+        compares against; ``"semantic"`` places by the (possibly
+        pre-seeded) ledger ranking immediately."""
+        rows_per_key = int(rows_per_key)
+        page_rows = int(page_rows or rows_per_key)
+        if rows_per_key % page_rows:
+            raise ValueError("rows_per_key must be a multiple of page_rows")
+        rows = array.shape[0]
+        n_keys = max(1, math.ceil(rows / rows_per_key))
+        pad = n_keys * rows_per_key - rows
+        if pad:
+            import jax.numpy as jnp
+            array = jnp.concatenate(
+                [array, jnp.zeros((pad,) + array.shape[1:], array.dtype)])
+        led = ledger or HotnessLedger(n_keys, decay=decay)
+        if led.n_keys != n_keys:
+            raise ValueError(
+                f"ledger has {led.n_keys} keys, tensor has {n_keys}")
+        ppk = rows_per_key // page_rows
+        names = tuple(device_names)
+        n_pages = n_keys * ppk
+        if placement == "semantic":
+            assign = cls._plan(led, n_keys, ppk, tuple(weights))
+        elif placement == "blind":
+            # hotness-anonymous baseline: the N:M uniform interleave in
+            # address order (key id, not rank) — exactly what the page
+            # machinery did before this layer existed.
+            from repro.core.interleave import _policy_device_map
+            from repro.core.policy import MemPolicy
+            # smallest-cycle discipline: a full denominator-length blocky
+            # cycle would leave a small tensor entirely on the fast tier
+            pol = MemPolicy.from_tier_fractions(
+                names[0], list(names[1:]), list(weights))
+            key_assign, _ = _policy_device_map(pol, n_keys)
+            assign = np.repeat(np.asarray(key_assign, np.int8), ppk)
+        else:
+            raise ValueError(f"unknown placement {placement!r}")
+        it = InterleavedTensor.from_array(
+            array, _ExplicitAssignment(assign[:n_pages], names), page_rows,
+            headroom=headroom, backend=backend)
+        st = cls(it=it, rows_per_key=rows_per_key, ledger=led,
+                 logical_rows=rows)
+        led.mark(st.hot_keys())
+        return st
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def n_keys(self) -> int:
+        return self.ledger.n_keys
+
+    @property
+    def pages_per_key(self) -> int:
+        return self.rows_per_key // self.it.page_rows
+
+    def key_device(self) -> np.ndarray:
+        """(n_keys,) owning device of each key's FIRST page (keys placed
+        semantically sit wholly on one device; a blind start may split)."""
+        dev, _ = self.it._host_map()
+        return dev[:: self.pages_per_key].copy()
+
+    def hot_keys(self) -> int:
+        """Number of keys currently resident on the fast tier."""
+        return int((self.key_device() == 0).sum())
+
+    def hot_traffic_share(self) -> float:
+        """Observed traffic share of the keys on the fast tier."""
+        dev = self.key_device()
+        return self.ledger.traffic_share(np.nonzero(dev == 0)[0])
+
+    # -- data plane ----------------------------------------------------------
+    def _record_idx(self, idx) -> None:
+        if not isinstance(idx, jax.core.Tracer):
+            self.ledger.record_rows(np.asarray(idx), self.rows_per_key)
+
+    def gather_rows(self, idx) -> jax.Array:
+        self._record_idx(idx)
+        return self.it.gather_rows(idx)
+
+    def update_rows(self, idx, values, *, donate: bool = False
+                    ) -> "SemanticTensor":
+        self._record_idx(idx)
+        return dataclasses.replace(
+            self, it=self.it.update_rows(idx, values, donate=donate))
+
+    def bag_reduce(self, indices, weights=None, reduce_fn=None) -> jax.Array:
+        """Embedding-bag reduction (DLRM §5.2) through the semantic
+        layout; touched rows feed the hotness ledger when concrete."""
+        self._record_idx(indices)
+        return self.it.bag_reduce(indices, weights, reduce_fn=reduce_fn)
+
+    def to_array(self) -> jax.Array:
+        return self.it.to_array()[: self.logical_rows]
+
+    # -- placement -----------------------------------------------------------
+    @staticmethod
+    def _plan(ledger: HotnessLedger, n_keys: int, ppk: int,
+              weights: tuple[float, ...]) -> np.ndarray:
+        slow_share = min(max(sum(weights), 0.0), 1.0)
+        n_hot = n_keys - int(round(slow_share * n_keys))
+        hot, cold = ledger.topk_split(n_hot)
+        return semantic_assignment(n_keys, ppk, hot, cold,
+                                   _cold_weights(weights))
+
+    def plan_assignment(self, weights: Sequence[float]) -> np.ndarray:
+        """The page -> device map :meth:`retier` would actuate for
+        ``weights`` (per-slow-device page shares, Caption semantics)."""
+        return self._plan(self.ledger, self.n_keys, self.pages_per_key,
+                          tuple(weights))
+
+    def retier(self, weights: Sequence[float], *, mover=None,
+               telemetry: Telemetry = GLOBAL_TELEMETRY,
+               source: Optional[str] = "hotness", lane: Optional[int] = None,
+               donate: bool = False) -> "SemanticTensor":
+        """Re-place by the CURRENT hotness ranking under ``weights``.
+
+        Hot keys (by EWMA rank, filling the fast share ``1 -
+        sum(weights)``) pin fast; cold keys interleave across the slow
+        devices by the weight vector.  Only changed pages move — whole
+        keys, as contiguous page runs — through
+        :meth:`InterleavedTensor.reassign_pages`, so the descriptor
+        count is O(moved keys), moves are billed to their real routes,
+        and a shape-stable tensor never retraces its consumers.  A plan
+        equal to the current map returns ``self`` untouched."""
+        new_dev = self.plan_assignment(weights)
+        old_dev, _ = self.it._host_map()
+        moved = np.nonzero(new_dev != old_dev)[0]
+        if moved.size == 0:
+            self.ledger.mark(self.hot_keys())
+            return self
+        promoted = int((new_dev[moved] == 0).sum())
+        demoted = int((old_dev[moved] == 0).sum())
+        it2 = self.it.reassign_pages(new_dev, mover=mover,
+                                     telemetry=telemetry, source=source,
+                                     lane=lane, donate=donate)
+        telemetry.record_semantic(promoted, demoted, source=source)
+        moved_keys = int(np.unique(moved // self.pages_per_key).size)
+        out = dataclasses.replace(
+            self, it=it2,
+            last_retier={
+                "moved_pages": int(moved.size),
+                "moved_keys": moved_keys,
+                "promoted_pages": promoted,
+                "demoted_pages": demoted,
+            })
+        out.ledger.mark(out.hot_keys())
+        return out
+
+    def drift(self) -> float:
+        """Hot-set membership drift since the last actuated placement."""
+        return self.ledger.drift()
+
+    def placement_report(self) -> str:
+        """Human-readable placement summary (examples / debugging)."""
+        dev = self.key_device()
+        s = self.ledger.scores()
+        total = max(float(s.sum()), 1e-12)
+        lines = [f"{'device':<12s} {'keys':>6s} {'pages':>7s} "
+                 f"{'traffic%':>9s}"]
+        fr = self.it.device_fractions()
+        for i, name in enumerate(self.it.device_names):
+            keys = np.nonzero(dev == i)[0]
+            lines.append(
+                f"{name:<12s} {keys.size:>6d} "
+                f"{int(round(fr.get(name, 0.0) * self.it.n_pages)):>7d} "
+                f"{100 * float(s[keys].sum()) / total:>8.1f}%")
+        return "\n".join(lines)
+
+
+def _cold_weights(weights: tuple[float, ...]) -> tuple[float, ...]:
+    """Normalize a Caption slow-share vector into relative cold-deal
+    quotas (all-zero falls back to an even split)."""
+    total = sum(weights)
+    if total <= 0:
+        return tuple(1.0 for _ in weights) or (1.0,)
+    return tuple(w / total for w in weights)
+
+
+class HotSetCoordinator:
+    """Caption glue: the hot-set size as a walked coordinate.
+
+    Owns a :class:`SemanticTensor` and a
+    :class:`~repro.core.caption.CaptionController` whose weight vector
+    is reinterpreted semantically: ``1 - sum(weights)`` of the pages
+    hold the hottest keys on the fast tier, the rest interleave across
+    the CXL devices.  Each :meth:`epoch`:
+
+    1. closes the ledger epoch (EWMA tick);
+    2. while CONVERGED, compares the current hot-set ranking against a
+       membership snapshot frozen WHEN the walk converged and re-opens
+       beyond ``drift_threshold`` — the semantic analogue of the
+       controller's route-bandwidth drift detector.  (The snapshot is
+       deliberately not the ledger's own per-retier mark: step 4 keeps
+       re-tiering every epoch, so per-retier drift resets each epoch
+       and a gradual workload shift would track silently forever.
+       Tracking handles WHO is hot; the re-open re-probes HOW MANY
+       keys deserve fast pages under the shifted skew.)
+    3. feeds the metrics to the controller (its growth stays gated by
+       whatever :class:`~repro.core.arbiter.CaptionArbiter` budget the
+       caller registered it under);
+    4. actuates the decided weights through :meth:`SemanticTensor.retier`
+       (O(moved-keys) descriptors; a pure hotness reshuffle at constant
+       weights also actuates here) and feeds back the achieved shares.
+    """
+
+    def __init__(self, st: SemanticTensor, controller, *, mover=None,
+                 telemetry: Telemetry = GLOBAL_TELEMETRY,
+                 drift_threshold: float = 0.5,
+                 source: str = "hotness", donate: bool = False):
+        self.st = st
+        self.controller = controller
+        self.mover = mover
+        self.telemetry = telemetry
+        self.drift_threshold = float(drift_threshold)
+        self.source = source
+        self.donate = donate
+        self.reopens = 0
+        #: hot-set membership at the moment the walk converged.
+        self._converged_hot: Optional[frozenset] = None
+
+    def _snapshot(self) -> None:
+        hot, _ = self.st.ledger.topk_split(self.st.hot_keys())
+        self._converged_hot = frozenset(int(k) for k in hot)
+
+    def drift(self) -> float:
+        """Hot-set churn since the walk converged (0.0 while walking)."""
+        ref = self._converged_hot
+        if not ref:
+            return 0.0
+        hot, _ = self.st.ledger.topk_split(len(ref))
+        return 1.0 - len(ref.intersection(int(k) for k in hot)) / len(ref)
+
+    def epoch(self, metrics):
+        """Feed one epoch's :class:`~repro.core.caption.EpochMetrics`;
+        returns the controller's Decision after actuation."""
+        self.st.ledger.tick()
+        ctl = self.controller
+        if ctl.converged:
+            # lazy init covers controllers handed over already-converged
+            if self._converged_hot is None:
+                self._snapshot()
+            churn = self.drift()
+            if churn > self.drift_threshold:
+                decision = ctl.reopen(
+                    f"hot-set drift: {churn * 100:.0f}% of the converged "
+                    "hot set fell out of the top-k")
+                self.reopens += 1
+                self._converged_hot = None
+            else:
+                decision = ctl.observe(metrics)
+        else:
+            self._converged_hot = None
+            decision = ctl.observe(metrics)
+            if ctl.converged:
+                # snapshot AT the transition, before any post-convergence
+                # traffic can contaminate the drift reference
+                self._snapshot()
+        self.st = self.st.retier(
+            decision.weights, mover=self.mover, telemetry=self.telemetry,
+            source=self.source, donate=self.donate)
+        ctl.actuated_weights(self.st.it.weights())
+        return decision

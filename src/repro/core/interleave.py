@@ -765,6 +765,34 @@ class InterleavedTensor:
                               telemetry=telemetry, source=source, lane=lane,
                               donate=donate)
 
+    def reassign_pages(self, new_dev: np.ndarray, *,
+                       device_names: Optional[Sequence[str]] = None,
+                       mover=None, telemetry: Telemetry = GLOBAL_TELEMETRY,
+                       source: Optional[str] = None,
+                       lane: Optional[int] = None,
+                       donate: bool = False) -> "InterleavedTensor":
+        """Re-tier to an EXPLICIT page -> device-ordinal map.
+
+        The semantic-placement entry point (``core/hotness.py``): a
+        caller that knows *what* each page holds hands the exact map
+        instead of a share vector, and the move still rides the normal
+        O(Δ) path — run-coalesced route-pure descriptors, shape-stable
+        shards under ``headroom``, optional donation.  A map equal to
+        the current assignment returns ``self`` unchanged."""
+        new_dev = np.asarray(new_dev, np.int8)
+        if new_dev.shape != (self.n_pages,):
+            raise ValueError(
+                f"assignment has {new_dev.shape} pages, tensor has "
+                f"{self.n_pages}")
+        if new_dev.size and int(new_dev.min()) < 0:
+            raise ValueError("negative device ordinal")
+        n_devices = max(len(self.parts), int(new_dev.max(initial=0)) + 1)
+        names = resolve_device_names(self.device_names, n_devices,
+                                     device_names)
+        return self._reassign(new_dev, names, mover=mover,
+                              telemetry=telemetry, source=source, lane=lane,
+                              donate=donate)
+
     # -- the vectorized O(Δ) actuation core ----------------------------------
     def _move_runs(self, delta: np.ndarray, old_dev: np.ndarray,
                    old_local: np.ndarray, new_dev: np.ndarray

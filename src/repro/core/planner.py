@@ -37,6 +37,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core.classifier import AccessProfile, Boundedness, classify
 from repro.core.ledger import TierLedger
 from repro.core.policy import (BufferClass, MemPolicy,
@@ -311,6 +313,39 @@ def plan(
     return _finalize(buffers, dev_frac, bound, reason, floor, ledger,
                      topology, fast_name, compute_seconds, notes,
                      slow_name=slow_name)
+
+
+def hot_set_seed(scores, topology: TierTopology, *,
+                 fast_budget_fraction: float = 0.5,
+                 target_hot_traffic: float = 0.8) -> tuple[float, ...]:
+    """Caption weight-vector seed for a SEMANTIC buffer (core/hotness.py).
+
+    Given per-key hotness ``scores`` (a :class:`HotnessLedger`'s view),
+    find the smallest hot-set fraction whose keys carry
+    ``target_hot_traffic`` of the observed traffic — the knee of the
+    skew CDF — capped by the fast tier's page budget, and split the
+    cold remainder across the slow devices proportional to their
+    effective bandwidth (the Fig. 10 best-static-ratio prior).  The
+    returned tuple is the per-slow-device share vector a
+    :class:`~repro.core.caption.CaptionController` walks from; with no
+    observed traffic (cold start) the whole budget seeds hot."""
+    s = np.sort(np.asarray(scores, np.float64))[::-1]
+    n = max(s.size, 1)
+    total = float(s.sum())
+    budget = min(max(float(fast_budget_fraction), 0.0), 1.0)
+    if total <= 0:
+        hot_frac = budget
+    else:
+        cum = np.cumsum(s) / total
+        knee = int(np.searchsorted(cum, min(max(target_hot_traffic, 0.0),
+                                            1.0))) + 1
+        hot_frac = min(knee / n, budget)
+    cold = 1.0 - hot_frac
+    slows = topology.slows
+    if not slows:
+        return ()
+    bw = topology.bandwidth_weights(OpClass.LOAD)
+    return tuple(cold * w for w in bw)
 
 
 def _finalize(buffers, dev_frac, bound, reason, floor, ledger, topology,

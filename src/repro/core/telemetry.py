@@ -72,6 +72,22 @@ class Telemetry:
                 self.counters[f"migration_hidden_s|{source}"] += float(hidden_s)
                 self.counters[f"migration_exposed_s|{source}"] += float(exposed_s)
 
+    def record_semantic(self, promoted_pages: int, demoted_pages: int,
+                        source: Optional[str] = None) -> None:
+        """Bill one semantic re-tier (core/hotness.py): pages promoted
+        INTO the fast tier and demoted OUT of it.  Lateral slow<->slow
+        shuffles appear on the mover routes, not here — these counters
+        answer "how much hot-set churn is the placement loop doing",
+        which benchmarks and the example read back per source."""
+        with self._lock:
+            self.counters["semantic_promoted_pages"] += int(promoted_pages)
+            self.counters["semantic_demoted_pages"] += int(demoted_pages)
+            if source is not None:
+                self.counters[f"semantic_promoted_pages|{source}"] += int(
+                    promoted_pages)
+                self.counters[f"semantic_demoted_pages|{source}"] += int(
+                    demoted_pages)
+
     def route(self, src: str, dst: str) -> RouteStats:
         return self.routes[(src, dst)]
 

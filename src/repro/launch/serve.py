@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core.arbiter import CaptionArbiter, budgeted_config
 from repro.core.caption import CaptionConfig, CaptionController
+from repro.core.ledger import TierLedger
 from repro.core.mover import BulkMover
 from repro.core.policy import MemPolicy
 from repro.core.tiers import topology_from_spec
@@ -65,6 +66,10 @@ def main(argv=None):
     ap.add_argument("--duels", type=int, default=0,
                     help="paired probe duels per Caption candidate point "
                          "(noise-robust probing); 0 = single-sample")
+    ap.add_argument("--ledger-report", action="store_true",
+                    help="register the serving pools (KV + shared-prefix "
+                         "pages) in a TierLedger and print the per-tier "
+                         "capacity report after the run")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -108,12 +113,13 @@ def main(argv=None):
                                  budgeted_config(topology, args.slow_budget))
     mover = (BulkMover(topology, asynchronous=True)
              if args.async_mover else None)
+    ledger = TierLedger(topology) if args.ledger_report else None
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         policy=policy, topology=topology, page_t=args.page_t,
         caption=caption, arbiter=arbiter, mover=mover,
         prefix_pages=args.prefix_pages, admission=args.admission,
-        overlap=args.async_mover)
+        overlap=args.async_mover, ledger=ledger)
     rng = np.random.default_rng(0)
     shared = (rng.integers(0, cfg.vocab_padded,
                            size=args.shared_prefix).tolist()
@@ -163,6 +169,10 @@ def main(argv=None):
         print(f"overlap: stall={engine.migration_stall_s*1e3:.1f}ms "
               f"hidden={engine.migration_hidden_s*1e3:.3f}ms "
               f"exposed={engine.migration_exposed_s*1e3:.3f}ms")
+    if ledger is not None:
+        engine.register_pools()
+        print("ledger (framework-managed serving pools):")
+        print(ledger.report())
     return done
 
 

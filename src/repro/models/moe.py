@@ -103,6 +103,11 @@ def moe_mlp(x2d: jax.Array, p: dict, spec: MoESpec, act: str):
         "lb_loss": E * jnp.sum(f_e * p_e),
         "z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
         "dropped": jnp.mean(1.0 - keep.astype(jnp.float32)),
+        # per-expert dispatch histogram (kept slots only): the access-
+        # frequency signal the hotness ledger places expert weights by
+        # (core/hotness.py) — routing already computed it for free.
+        "expert_counts": jnp.zeros((E,), jnp.float32)
+        .at[sorted_ids].add(keep.astype(jnp.float32), mode="drop"),
     }
     return y, aux
 
@@ -165,12 +170,15 @@ def moe_mlp_ep(x2d: jax.Array, p: dict, spec: MoESpec, act: str,
         zl = jax.lax.pmean(
             jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))), dp)
         dropped = jax.lax.pmean(jnp.mean(1.0 - keep.astype(jnp.float32)), dp)
-        return y, lb, zl, dropped
+        counts = jax.lax.psum(
+            jnp.zeros((E,), jnp.float32)
+            .at[sorted_ids].add(keep.astype(jnp.float32), mode="drop"), dp)
+        return y, lb, zl, dropped, counts
 
     in_specs = (P(dp, None), P(None, None), {
         k: P(dp, None, None) for k in p["experts"]
     })
-    out_specs = (P(dp, None), P(), P(), P())
+    out_specs = (P(dp, None), P(), P(), P(), P())
     if hasattr(jax, "shard_map"):
         smap = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, axis_names=set(dp))
@@ -180,10 +188,11 @@ def moe_mlp_ep(x2d: jax.Array, p: dict, spec: MoESpec, act: str,
         from jax.experimental.shard_map import shard_map as _shard_map
         smap = _shard_map(local, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
-    y, lb, zl, dropped = smap(x2d, p["router"], p["experts"])
+    y, lb, zl, dropped, counts = smap(x2d, p["router"], p["experts"])
     if spec.n_shared:
         y = y + mlp_apply(x2d, p["shared"], act)
-    return y, {"lb_loss": lb, "z_loss": zl, "dropped": dropped}
+    return y, {"lb_loss": lb, "z_loss": zl, "dropped": dropped,
+               "expert_counts": counts}
 
 
 def _ep_context():
@@ -324,9 +333,10 @@ def forward_with_aux(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
         if has_dense:
             x = dense_body(x, up["dense"], positions)
         x, aux = moe_body(x, up["moe"], positions)
-        return (x, lb + aux["lb_loss"], zl + aux["z_loss"]), aux["dropped"]
+        return (x, lb + aux["lb_loss"], zl + aux["z_loss"]), \
+            (aux["dropped"], aux["expert_counts"])
 
-    (x, lb, zl), dropped = jax.lax.scan(
+    (x, lb, zl), (dropped, counts) = jax.lax.scan(
         unit_fn, (x, jnp.float32(0), jnp.float32(0)), params["units"]
     )
     if last_only:
@@ -339,6 +349,9 @@ def forward_with_aux(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
         "lb_loss": lb / n_units,
         "z_loss": zl / n_units,
         "dropped": jnp.mean(dropped),
+        # summed over the scanned units: (E,) dispatch histogram for the
+        # hotness ledger (HotnessLedger.record).
+        "expert_counts": counts.sum(axis=0),
     }
     return logits, aux
 

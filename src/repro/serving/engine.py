@@ -103,6 +103,7 @@ class ServingEngine:
         admission_max_defer: int = 64,
         admission_capacity_bytes: Optional[int] = None,
         overlap: bool = False,
+        ledger=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -222,6 +223,28 @@ class ServingEngine:
             self._device_names = (self._fast_name, self._slow_name)
         self._epoch_window = (EpochWindow(telemetry)
                               if caption is not None else None)
+        # Capacity accounting (ISSUE 10 satellite): the serving plane's
+        # framework-managed pools show up in the TierLedger report next
+        # to the planner's buffers.  Registration refreshes whenever an
+        # actuation can change pool shapes (Caption epochs, drains).
+        self.ledger = ledger
+        self.register_pools()
+
+    def register_pools(self) -> dict[str, int]:
+        """(Re-)register the KV + prefix pools in ``self.ledger``.
+
+        No-op without a ledger.  Uses the engine's device-ordinal route
+        labels, so generic ``fast/slow`` caches bill against the real
+        topology tier names.  Safe to call after every re-tile: the
+        previous registration is released first."""
+        if self.ledger is None:
+            return {}
+        names = self._device_names[: len(self.cache.device_names)]
+        if len(names) < len(self.cache.device_names):
+            names = self.cache.device_names
+        return self.cache.register_in_ledger(
+            self.ledger, self.buffer_name, device_names=names,
+            strict=False)
 
     # -- elastic topology (hot-remove / hot-add) -------------------------------
     def _active_slow_names(self) -> tuple[str, ...]:
@@ -313,6 +336,7 @@ class ServingEngine:
                 self.cache.weights(self.pinned_slots)))
         if monitor is not None:
             monitor.remove(name)
+        self.register_pools()
 
     def add_device(self, spec) -> None:
         """Elastic hot-add: the device (TierSpec or name) joins the
@@ -753,6 +777,7 @@ class ServingEngine:
             moved = ((self.mover.bytes_submitted - b0)
                      if self.mover is not None else 0)
             self._account_actuation(moved, time.perf_counter() - t0)
+            self.register_pools()
             # Page rounding may achieve less (or none) of the request: the
             # controller must continue from the real operating point.  With
             # zero tunable slots (everything SLO-pinned) there IS no

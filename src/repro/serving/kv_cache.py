@@ -49,7 +49,7 @@ from repro.core.policy import MemPolicy
 from repro.core.telemetry import GLOBAL_TELEMETRY
 from repro.models import attention as attn
 from repro.models.common import apply_norm, dtype_of, mlp_apply
-from repro.serving.prefix_cache import NO_PAGE, PrefixBlock
+from repro.serving.prefix_cache import NO_PAGE, UNALLOCATED, PrefixBlock
 
 _INT32_MAX = np.iinfo(np.int32).max
 
@@ -374,6 +374,64 @@ class TieredKVCache:
                 out[name] += (int((pfx_dev == i).sum())
                               * self._page_kv_bytes())
         return out
+
+    def pool_bytes_per_device(self) -> dict[str, int]:
+        """ALLOCATED pool capacity per device, keyed by device name —
+        what the :class:`~repro.core.ledger.TierLedger` should bill.
+
+        Unlike :meth:`storage_bytes_per_device` (occupied page slots),
+        this is the framework-RESERVED backing: the full K/V/pos pool
+        arrays per device, plus the shared-prefix pool's pages billed to
+        the device their label names.  Unallocated prefix pool slack is
+        billed to the fast tier (the pool is materialized as one buffer
+        and free slots have not been pushed over a CXL link yet)."""
+        out = {}
+        for i, name in enumerate(self.device_names):
+            out[name] = int(
+                (self.k_parts[i].size + self.v_parts[i].size)
+                * self.k_parts[i].dtype.itemsize
+                + self.pos_parts[i].size * self.pos_parts[i].dtype.itemsize)
+        if self.prefix is not None:
+            pdev = np.asarray(self.prefix.page_device)
+            pb = self.prefix.page_bytes()
+            for i, name in enumerate(self.device_names):
+                out[name] += int((pdev == i).sum()) * pb
+            out[self.device_names[0]] += (
+                int((pdev == UNALLOCATED).sum()) * pb)
+        return out
+
+    def register_in_ledger(self, ledger, buffer: str = "kv_cache", *,
+                           device_names=None, note: str = "serving KV pool",
+                           strict: bool = False) -> dict[str, int]:
+        """Register (or refresh) this cache's pools in a
+        :class:`~repro.core.ledger.TierLedger` so ``report()`` covers
+        the serving plane's framework-managed bytes.
+
+        ``device_names`` maps this cache's device ordinals onto the
+        ledger topology's tier names when the cache was built with the
+        generic ``("fast", "slow")`` labels.  Re-registering under the
+        same ``buffer`` releases the previous entries first, so epoch
+        refreshes after a re-tile never double-bill."""
+        names = tuple(device_names) if device_names else self.device_names
+        if len(names) != len(self.device_names):
+            raise ValueError(
+                f"{len(names)} names for {len(self.device_names)} devices")
+        pool = self.pool_bytes_per_device()
+        ledger.release(buffer)
+        billed = {}
+        for cache_name, ledger_name in zip(self.device_names, names):
+            nbytes = pool[cache_name]
+            if not nbytes:
+                continue
+            try:
+                ledger.register(buffer, ledger_name, nbytes, note,
+                                strict=strict)
+            except KeyError:
+                # device outside the ledger topology (e.g. elastically
+                # removed): its residual backing has no tier to bill
+                continue
+            billed[ledger_name] = nbytes
+        return billed
 
     def _prefix_ref_pages(self) -> dict[int, int]:
         """Per-device ordinal count of prefix-page REFERENCES held by

@@ -1,0 +1,83 @@
+"""§6.1 classifier edges: pool-worst-case classification and skewed
+AccessProfile corners (zero parallelism, µs deadlines, compute-bound
+crossover)."""
+import dataclasses
+
+from repro.core import AccessProfile, Boundedness, classify
+from repro.core.classifier import classify_pool, tolerates_slow_tier
+from repro.core.tiers import (TierTopology, paper_three_device_topology,
+                              paper_topology)
+
+TOPO3 = paper_three_device_topology()
+SLOW = paper_topology().slows[0]
+FAST = paper_topology().fast
+
+STREAMING = AccessProfile(
+    bytes_read_per_step=1 << 30, bytes_written_per_step=0,
+    dependent_chain=1, parallelism=64, granularity=4096)
+CHASE = AccessProfile(
+    bytes_read_per_step=64 * 1000, bytes_written_per_step=0,
+    dependent_chain=1000, parallelism=1, granularity=64)
+
+
+def test_zero_parallelism_treated_as_serial():
+    """parallelism=0 must not divide by zero; it means one stream."""
+    p0 = dataclasses.replace(CHASE, parallelism=0)
+    p1 = dataclasses.replace(CHASE, parallelism=1)
+    assert classify(p0, SLOW) == classify(p1, SLOW) \
+        == Boundedness.LATENCY_BOUND
+
+
+def test_us_deadline_flags_any_far_chase():
+    """Redis case: µs SLO + even a short dependent chain on a far tier."""
+    short = AccessProfile(
+        bytes_read_per_step=4096, bytes_written_per_step=0,
+        dependent_chain=16, parallelism=1, granularity=64,
+        compute_seconds=1.0,  # plenty of compute to hide it on average
+        deadline_seconds=50e-6)
+    assert classify(short, SLOW) == Boundedness.LATENCY_BOUND
+    # the same access shape with an ms-level deadline amortizes fine
+    ms = dataclasses.replace(short, deadline_seconds=5e-3)
+    assert classify(ms, SLOW) == Boundedness.COMPUTE_BOUND
+    # µs deadline alone is not a verdict: trivial latency exposure passes
+    tiny = dataclasses.replace(short, dependent_chain=1, parallelism=256)
+    assert classify(tiny, SLOW) != Boundedness.LATENCY_BOUND
+
+
+def test_compute_bound_crossover():
+    """Sweep compute per step: bandwidth-bound until compute dominates."""
+    stream_time = STREAMING.bytes_per_step / SLOW.load_bw
+    below = dataclasses.replace(STREAMING, compute_seconds=stream_time / 2)
+    above = dataclasses.replace(STREAMING, compute_seconds=stream_time * 2)
+    assert classify(below, SLOW) == Boundedness.BANDWIDTH_BOUND
+    assert classify(above, SLOW) == Boundedness.COMPUTE_BOUND
+
+
+def test_tolerates_slow_tier():
+    assert tolerates_slow_tier(STREAMING, SLOW)
+    assert not tolerates_slow_tier(CHASE, SLOW)
+
+
+def test_classify_pool_worst_case_over_slows():
+    """One latency-bound device in the pool taints the whole verdict."""
+    assert classify_pool(STREAMING, TOPO3) == Boundedness.BANDWIDTH_BOUND
+    assert classify_pool(CHASE, TOPO3) == Boundedness.LATENCY_BOUND
+    # a pool mixing a benign and a high-latency device: worst case wins
+    borderline = AccessProfile(
+        bytes_read_per_step=1 << 20, bytes_written_per_step=0,
+        dependent_chain=32, parallelism=8, granularity=64)
+    laggard = dataclasses.replace(
+        TOPO3.slows[-1], chase_latency_ns=200_000.0)
+    mixed = TierTopology(fast=TOPO3.fast, slows=(TOPO3.slows[0], laggard))
+    per_dev = [classify(borderline, t) for t in mixed.slows]
+    assert Boundedness.LATENCY_BOUND in per_dev
+    assert per_dev[0] != Boundedness.LATENCY_BOUND
+    assert classify_pool(borderline, mixed) == Boundedness.LATENCY_BOUND
+
+
+def test_classify_pool_empty_slow_pool_falls_back_to_fast():
+    solo = TierTopology(fast=FAST, slows=())
+    assert classify_pool(STREAMING, solo) == classify(STREAMING, FAST)
+    # even a pointer chase is fine against local DRAM's chase latency
+    local_chase = dataclasses.replace(CHASE, compute_seconds=1e-3)
+    assert classify_pool(local_chase, solo) != Boundedness.LATENCY_BOUND

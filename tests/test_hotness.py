@@ -1,0 +1,332 @@
+"""Hotness-driven semantic tiering (ISSUE 10): ledger, semantic
+assignment, SemanticTensor re-tier invariants, MoE dispatch counts,
+Caption hot-set coordination, and serving-pool ledger registration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.caption import CaptionConfig, CaptionController, EpochMetrics
+from repro.core.hotness import (HotnessLedger, HotSetCoordinator,
+                                SemanticTensor, semantic_assignment)
+from repro.core.mover import BulkMover
+from repro.core.telemetry import Telemetry
+from repro.core.tiers import paper_three_device_topology
+
+TOPO = paper_three_device_topology()
+NAMES = (TOPO.fast.name,) + tuple(t.name for t in TOPO.slows)
+
+
+def _zipf(n, rng, alpha=1.1, scale=1e4):
+    s = np.zeros(n)
+    s[rng.permutation(n)] = 1.0 / (1.0 + np.arange(n)) ** alpha
+    return s * scale
+
+
+# -- HotnessLedger -----------------------------------------------------------
+def test_ledger_ewma_decay():
+    led = HotnessLedger(4, decay=0.5)
+    led.record([8, 0, 0, 0])
+    led.tick()
+    led.record([0, 8, 0, 0])
+    led.tick()
+    # key 0 decayed one epoch (8 * 0.5), key 1 fresh
+    assert led.scores()[0] == pytest.approx(4.0)
+    assert led.scores()[1] == pytest.approx(8.0)
+    assert list(led.rank()[:2]) == [1, 0]
+    # a key that stops being touched decays toward cold
+    for _ in range(20):
+        led.tick()
+    assert led.scores()[0] < 1e-4
+
+
+def test_ledger_record_rows_and_keys():
+    led = HotnessLedger(4, decay=0.5)
+    led.record_rows([0, 1, 7, 8, 9], rows_per_key=4)  # keys 0,0,1,2,2
+    s = led.scores()
+    assert list(s) == [2, 1, 2, 0]
+    led.record_keys([3, 3], weights=[5, 5])
+    assert led.scores()[3] == 10
+    with pytest.raises(ValueError):
+        led.record_keys([4])
+    with pytest.raises(ValueError):
+        led.record([1, 2])
+
+
+def test_ledger_topk_split_and_traffic():
+    led = HotnessLedger(6, decay=0.5)
+    led.record([0, 10, 5, 0, 20, 1])
+    hot, cold = led.topk_split(2)
+    assert list(hot) == [4, 1]
+    assert set(cold) == {0, 2, 3, 5}
+    assert led.traffic_share(hot) == pytest.approx(30 / 36)
+    # clipping
+    h_all, c_none = led.topk_split(99)
+    assert len(h_all) == 6 and len(c_none) == 0
+
+
+def test_ledger_mark_drift():
+    led = HotnessLedger(8, decay=0.5)
+    led.record([10, 9, 8, 7, 0, 0, 0, 0])
+    led.mark(4)
+    assert led.drift() == 0.0
+    led.record([0, 0, 0, 0, 100, 100, 0, 0])
+    # two of the four marked keys fell out of the top-4
+    assert led.drift() == pytest.approx(0.5)
+
+
+# -- semantic_assignment -----------------------------------------------------
+def test_semantic_assignment_contiguous_keys_and_quotas():
+    hot = np.array([5, 2])
+    cold = np.array([0, 1, 3, 4, 6, 7])
+    assign = semantic_assignment(8, 4, hot, cold, (0.5, 0.5))
+    assert assign.shape == (32,)
+    # every key's pages are contiguous on one device
+    for k in range(8):
+        assert len(set(assign[k * 4:(k + 1) * 4])) == 1
+    assert (assign[5 * 4] == 0) and (assign[2 * 4] == 0)
+    dev_of_key = assign[::4]
+    counts = np.bincount(dev_of_key, minlength=3)
+    assert counts[0] == 2 and counts[1] == 3 and counts[2] == 3
+    # consecutive-rank cold keys alternate devices (interleave, not blocks)
+    cold_devs = [dev_of_key[k] for k in cold]
+    assert cold_devs != sorted(cold_devs) or len(set(cold_devs)) == 1
+
+
+# -- SemanticTensor ----------------------------------------------------------
+def _mk(n_keys=64, rpk=8, page_rows=2, dim=4, seed=0, placement="blind",
+        weights=(0.25, 0.25, 0.25)):
+    rng = np.random.default_rng(seed)
+    arr = jnp.asarray(rng.normal(size=(n_keys * rpk, dim)), jnp.float32)
+    led = HotnessLedger(n_keys, decay=0.5)
+    led.record(_zipf(n_keys, rng))
+    st = SemanticTensor.from_array(
+        arr, rows_per_key=rpk, weights=weights, device_names=NAMES,
+        page_rows=page_rows, ledger=led, headroom=n_keys * rpk // page_rows,
+        placement=placement)
+    return st, np.asarray(arr)
+
+
+def test_semantic_tensor_roundtrip_bitexact_across_retier():
+    st, ref = _mk()
+    assert np.array_equal(np.asarray(st.to_array()), ref)
+    st2 = st.retier((0.25, 0.25, 0.25), telemetry=Telemetry())
+    assert np.array_equal(np.asarray(st2.to_array()), ref)
+    assert st2.last_retier["moved_pages"] > 0
+    assert st2.hot_traffic_share() > st.hot_traffic_share()
+
+
+def test_semantic_tensor_noop_retier_returns_self():
+    st, _ = _mk(placement="semantic")
+    st2 = st.retier((0.25, 0.25, 0.25), telemetry=Telemetry())
+    assert st2 is st
+
+
+def test_semantic_retier_o_moved_keys_descriptors():
+    st, ref = _mk(placement="semantic")
+    rng = np.random.default_rng(9)
+    for _ in range(8):
+        st.ledger.record(_zipf(st.n_keys, rng))
+        st.ledger.tick()
+    mover = BulkMover(TOPO)
+    try:
+        d0 = mover.descriptors_submitted
+        st2 = st.retier((0.25, 0.25, 0.25), mover=mover,
+                        telemetry=Telemetry())
+        descs = mover.descriptors_submitted - d0
+    finally:
+        mover.close()
+    r = st2.last_retier
+    assert r["moved_pages"] > 0
+    # run coalescing: each moved key's 4 contiguous pages ship as <= 1
+    # descriptor per key, never one per page
+    assert descs <= r["moved_keys"] < r["moved_pages"]
+    assert np.array_equal(np.asarray(st2.to_array()), ref)
+
+
+def test_semantic_tensor_records_access_and_telemetry():
+    st, ref = _mk()
+    idx = jnp.asarray([0, 1, 2, 3] * 5)  # rows of keys 0..? rpk=8 -> key 0
+    st.gather_rows(idx)
+    assert st.ledger.scores()[0] > 0
+    telem = Telemetry()
+    st2 = st.retier((0.25, 0.25, 0.25), telemetry=telem, source="t")
+    c = telem.snapshot()["counters"]
+    assert c["semantic_promoted_pages"] == c["semantic_promoted_pages|t"] > 0
+    assert c["semantic_demoted_pages"] > 0
+    assert np.array_equal(np.asarray(st2.to_array()), ref)
+
+
+def test_semantic_tensor_padding_and_validation():
+    arr = jnp.arange(30, dtype=jnp.float32).reshape(10, 3)
+    st = SemanticTensor.from_array(arr, rows_per_key=4, weights=(0.5,),
+                                   device_names=("fast", "slow"))
+    assert st.n_keys == 3  # 10 rows pad to 12
+    assert np.array_equal(np.asarray(st.to_array()), np.asarray(arr))
+    with pytest.raises(ValueError):
+        SemanticTensor.from_array(arr, rows_per_key=4, page_rows=3,
+                                  weights=(0.5,))
+    with pytest.raises(ValueError):
+        SemanticTensor.from_array(arr, rows_per_key=4, weights=(0.5,),
+                                  placement="nope")
+
+
+def test_zero_retrace_across_hotness_flip():
+    st, _ = _mk(placement="semantic")
+    traces = [0]
+
+    def step(t, i):
+        traces[0] += 1
+        return t.gather_rows(i)
+
+    fn = jax.jit(step)
+    idx = jnp.arange(16)
+    fn(st.it, idx)
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        st.ledger.record(_zipf(st.n_keys, rng))
+        st.ledger.tick()
+    st = st.retier((0.25, 0.25, 0.25), telemetry=Telemetry())
+    assert st.last_retier["moved_pages"] > 0
+    fn(st.it, idx)
+    assert traces[0] == 1
+
+
+# -- MoE dispatch counts -----------------------------------------------------
+def test_moe_expert_counts_feed_ledger():
+    from repro.models import moe, registry
+    arch = registry.get("deepseek-moe-16b").tiny()
+    cfg = arch.cfg
+    params = moe.init(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_padded, size=(2, 8)))
+    _, aux = moe.forward_with_aux(cfg, params, tokens)
+    counts = np.asarray(aux["expert_counts"])
+    E = cfg.moe.n_experts
+    assert counts.shape == (E,)
+    # kept dispatch slots: <= B*S*top_k per MoE unit, > 0 overall
+    n_units = params["units"]["moe"]["router"].shape[0]
+    assert 0 < counts.sum() <= 2 * 8 * cfg.moe.top_k * n_units
+    led = HotnessLedger(E)
+    led.record(counts)
+    assert led.scores().sum() == counts.sum()
+
+
+# -- Caption integration -----------------------------------------------------
+def _walk(coord, skew, epochs, topo=TOPO):
+    for _ in range(epochs):
+        coord.st.ledger.record(skew)
+        dev, sc = coord.st.key_device(), coord.st.ledger.scores()
+        total = max(float(sc.sum()), 1e-12)
+        shares = tuple(float(sc[dev == i + 1].sum()) / total
+                       for i in range(len(topo.slows)))
+        from benchmarks.fig8_dlrm import throughput_nd
+        coord.epoch(EpochMetrics(
+            throughput=throughput_nd(topo.fast, topo.slows, shares, 32)))
+
+
+def test_hot_set_coordinator_reopens_on_drift():
+    rng = np.random.default_rng(5)
+    n_keys, rpk = 64, 8
+    arr = jnp.asarray(rng.normal(size=(n_keys * rpk, 4)), jnp.float32)
+    led = HotnessLedger(n_keys, decay=0.5)
+    skew = _zipf(n_keys, rng, scale=1e6)
+    led.record(skew)
+    cfg = CaptionConfig(epoch_steps=1, probe_epochs=1, step=0.1,
+                        min_step=0.02, hysteresis=0.005,
+                        drift_threshold=0.0, write_damp=False)
+    ctl = CaptionController(TOPO, cfg, initial_fraction=0.9,
+                            min_fraction=0.75)
+    st = SemanticTensor.from_array(
+        arr, rows_per_key=rpk, weights=ctl.weights, device_names=NAMES,
+        page_rows=2, ledger=led, headroom=n_keys * rpk // 2,
+        placement="semantic")
+    coord = HotSetCoordinator(st, ctl, drift_threshold=0.5)
+    _walk(coord, skew, 20)
+    assert ctl.converged and coord.reopens == 0
+    assert coord.drift() == 0.0
+    # workload shift: a brand-new hot set re-opens the converged walk
+    flipped = _zipf(n_keys, rng, scale=1e6)
+    _walk(coord, flipped, 20)
+    assert coord.reopens >= 1
+    assert ctl.converged  # and re-converges
+    assert coord.st.hot_traffic_share() > 0.5
+    # the re-converged hot set is the NEW skew's, pinned fast
+    assert np.array_equal(np.asarray(coord.st.to_array()),
+                          np.asarray(arr))
+
+
+def test_caption_reopen_resets_phase():
+    from repro.core.caption import Phase
+    ctl = CaptionController(TOPO, CaptionConfig(
+        epoch_steps=1, probe_epochs=1, hysteresis=0.0, write_damp=False),
+        initial_fraction=0.5)
+    for _ in range(60):
+        ctl.observe(EpochMetrics(throughput=100.0))
+        if ctl.converged:
+            break
+    assert ctl.converged
+    d = ctl.reopen("test shift")
+    assert ctl.phase == Phase.MEASURE
+    assert "re-opened" in d.reason
+
+
+def test_planner_hot_set_seed():
+    from repro.core.planner import hot_set_seed
+    scores = np.concatenate([np.full(10, 100.0), np.full(90, 0.1)])
+    w = hot_set_seed(scores, TOPO, fast_budget_fraction=0.5,
+                     target_hot_traffic=0.8)
+    assert len(w) == len(TOPO.slows)
+    # 10 hot keys cover >80% of traffic: hot fraction ~0.1, the rest slow
+    assert sum(w) == pytest.approx(0.9, abs=0.02)
+    # cold start: no signal -> fall back to the full budget
+    w0 = hot_set_seed(np.zeros(100), TOPO, fast_budget_fraction=0.3)
+    assert sum(w0) == pytest.approx(0.7, abs=0.02)
+
+
+# -- serving pools in the TierLedger ----------------------------------------
+def test_kv_pools_register_in_ledger():
+    from repro.core.ledger import TierLedger
+    from repro.core.policy import MemPolicy
+    from repro.models.registry import get
+    from repro.serving.engine import ServingEngine
+    arch = get("qwen2.5-32b").tiny()
+    params = arch.module.init(arch.cfg, jax.random.PRNGKey(0))
+    bw = TOPO.bandwidth_weights()
+    pol = MemPolicy.from_tier_fractions(
+        TOPO.fast.name, TOPO.slow_names, [0.5 * w for w in bw])
+    led = TierLedger(TOPO)
+    eng = ServingEngine(arch.cfg, params, max_batch=2, max_len=32,
+                        policy=pol, topology=TOPO, page_t=8,
+                        prefix_pages=8, ledger=led)
+    per = led.per_buffer()["kv"]
+    pool = eng.cache.pool_bytes_per_device()
+    # every pool byte is billed to a real topology tier, prefix included
+    assert per[TOPO.fast.name] == pool[TOPO.fast.name] > 0
+    assert sum(per.values()) == sum(pool.values())
+    pb = eng.cache.prefix.page_bytes()
+    assert pool[TOPO.fast.name] >= eng.cache.prefix.pool_pages * pb
+    # re-registering refreshes, never double-bills
+    eng.register_pools()
+    assert led.per_buffer()["kv"] == per
+
+
+def test_kv_pool_bytes_tracks_repartition():
+    from repro.core.ledger import TierLedger
+    from repro.core.policy import MemPolicy
+    from repro.models.registry import get
+    from repro.serving.kv_cache import TieredKVCache
+    arch = get("qwen2.5-32b").tiny()
+    pol = MemPolicy.from_slow_fraction("fast", "slow", 0.0)
+    cache = TieredKVCache.create(arch.cfg, 2, 32, pol, page_t=8,
+                                 slow_headroom=4)
+    led = TierLedger(TOPO)
+    billed = cache.register_in_ledger(
+        led, "kv", device_names=(TOPO.fast.name, TOPO.slows[0].name))
+    assert billed[TOPO.fast.name] > 0
+    cache2 = cache.repartition_fraction(0.5)
+    billed2 = cache2.register_in_ledger(
+        led, "kv", device_names=(TOPO.fast.name, TOPO.slows[0].name))
+    # half the pages moved out: the slow pool is now billed too
+    assert billed2.get(TOPO.slows[0].name, 0) > 0
+    assert led.used(TOPO.slows[0].name) == billed2[TOPO.slows[0].name]
